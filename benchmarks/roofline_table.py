@@ -1,0 +1,70 @@
+"""Aggregate the dry-run JSON results into the §Roofline table."""
+from __future__ import annotations
+
+import json
+import pathlib
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def load_results(multi_pod: bool | None = None) -> list[dict]:
+    rows = []
+    for f in sorted(RESULTS_DIR.glob("*.json")):
+        r = json.loads(f.read_text())
+        if multi_pod is not None and r.get("multi_pod") != multi_pod:
+            continue
+        rows.append(r)
+    return rows
+
+
+def roofline_rows(multi_pod: bool | None = False) -> list[dict]:
+    out = []
+    for r in load_results(multi_pod):
+        tag = r.get("tag", "") or "baseline"
+        if r["status"] != "ok":
+            out.append({
+                "arch": r["arch"], "shape": r["shape"],
+                "mesh": "2pod" if r.get("multi_pod") else "1pod",
+                "variant": tag, "status": r["status"],
+                "t_compute_s": "", "t_memory_s": "", "t_collective_s": "",
+                "bottleneck": r.get("reason", r.get("error", ""))[:60],
+                "useful_flops_pct": "", "hbm_gib_per_dev": "",
+            })
+            continue
+        rf = r["roofline"]
+        m = r["memory"]
+        out.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "mesh": "2pod" if r.get("multi_pod") else "1pod",
+            "variant": tag, "status": "ok",
+            "t_compute_s": f"{rf['t_compute_s']:.3e}",
+            "t_memory_s": f"{rf['t_memory_s']:.3e}",
+            "t_collective_s": f"{rf['t_collective_s']:.3e}",
+            "bottleneck": rf["bottleneck"],
+            "useful_flops_pct": f"{rf['useful_flops_ratio']*100:.0f}",
+            "hbm_gib_per_dev": f"{((m['argument_bytes'] or 0)+(m['temp_bytes'] or 0))/2**30:.1f}",
+        })
+    return out
+
+
+def markdown_table(rows: list[dict]) -> str:
+    if not rows:
+        return "(no dry-run results yet)"
+    cols = ["arch", "shape", "mesh", "variant", "t_compute_s", "t_memory_s",
+            "t_collective_s", "bottleneck", "useful_flops_pct", "hbm_gib_per_dev"]
+    lines = ["| " + " | ".join(cols) + " |",
+             "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        lines.append("| " + " | ".join(str(r.get(c, "")) for c in cols) + " |")
+    return "\n".join(lines)
+
+
+def roofline_table(quick=True):
+    rows = roofline_rows(multi_pod=False)
+    ok = [r for r in rows if r["status"] == "ok"]
+    headline = f"{len(ok)}/{len(rows)}_combos_ok" if rows else "no_results"
+    return rows, headline
+
+
+if __name__ == "__main__":
+    print(markdown_table(roofline_rows(None)))

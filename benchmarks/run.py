@@ -1,0 +1,58 @@
+"""Benchmark harness: one entry per paper figure/table + kernel micro +
+roofline aggregation. Prints ``name,us_per_call,derived`` CSV rows per the
+repo convention, then detailed per-figure tables.
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="shorter sim windows")
+    ap.add_argument("--only", default="", help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from . import figs, kernels_micro, roofline_table
+
+    benches = {
+        "fig4_regression_duration": figs.fig4_regression_duration,
+        "fig5_successful_requests": figs.fig5_successful_requests,
+        "fig6_cost_per_day": figs.fig6_cost_per_day,
+        "fig7_cost_over_time": figs.fig7_cost_over_time,
+        "ablation_pass_fraction": figs.ablation_pass_fraction,
+        "ablation_stale_threshold": figs.ablation_stale_threshold,
+        "ablation_online_controller": figs.ablation_online_controller,
+        "kernel_micro": kernels_micro.kernel_micro,
+        "roofline_table": roofline_table.roofline_table,
+    }
+    selected = [s for s in args.only.split(",") if s] or list(benches)
+
+    print("name,us_per_call,derived")
+    details = []
+    failures = 0
+    for name in selected:
+        fn = benches[name]
+        t0 = time.perf_counter()
+        try:
+            rows, headline = fn(quick=args.quick)
+            us = (time.perf_counter() - t0) * 1e6
+            print(f"{name},{us:.0f},{headline}")
+            details.append((name, rows))
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}")
+    for name, rows in details:
+        print(f"\n== {name} ==")
+        if rows:
+            cols = list(rows[0].keys())
+            print(",".join(cols))
+            for r in rows:
+                print(",".join(str(r[c]) for c in cols))
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

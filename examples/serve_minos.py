@@ -1,0 +1,63 @@
+"""Serving driver: batch of requests against a real (reduced) model behind
+the Minos replica gate vs. an ungated baseline — the FaaS->TPU-serving
+adaptation of the paper (DESIGN.md §2).
+
+Run: PYTHONPATH=src python examples/serve_minos.py [--arch qwen3-0.6b]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.core.cost import Pricing
+from repro.core.elysium import pretest_threshold
+from repro.core.policy import MinosPolicy
+from repro.serving.engine import MinosServingEngine, ServeRequest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--requests", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    pricing = Pricing.tpu_chip_seconds(chips=4)
+    rs = np.random.RandomState(0)
+    reqs = [
+        ServeRequest(prompt=rs.randint(0, cfg.vocab, size=16).astype(np.int32),
+                     max_new_tokens=8, request_id=i)
+        for i in range(args.requests)
+    ]
+
+    # pre-test: sample replica speeds to set the elysium threshold
+    probe_work = 200.0
+    speeds = np.exp(rs.normal(0.0, 0.15, size=64))
+    thr = pretest_threshold(probe_work / speeds, pass_fraction=0.4)
+    print(f"elysium threshold: {thr:.0f}ms (probe {probe_work:.0f}ms at unit speed)")
+
+    results = {}
+    for name, policy in (
+        ("baseline", MinosPolicy(elysium_threshold=0.0, enabled=False)),
+        ("minos", MinosPolicy(elysium_threshold=thr, max_retries=5)),
+    ):
+        eng = MinosServingEngine(cfg, policy, pricing, seed=1, max_pool=4)
+        res = eng.serve(list(reqs))
+        tput = [r.sim_duration_ms for r in res]
+        results[name] = res
+        print(
+            f"{name:9s}: {len(res)} served | replicas started {eng.replicas_started} "
+            f"terminated {eng.replicas_terminated} | pool speed "
+            f"{eng.pool_mean_speed:.3f} | mean req {np.mean(tput):.0f}ms | "
+            f"cost ${eng.cost.total:.4f}"
+        )
+
+    # identical outputs regardless of gating (selection changes WHERE, not WHAT)
+    for a, b in zip(results["baseline"], results["minos"]):
+        assert np.array_equal(a.tokens, b.tokens), "serving must be deterministic"
+    print("outputs identical across arms ✓ (instance selection is "
+          "performance-transparent)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end training driver: train a reduced llama3-family model on the
+synthetic bigram-structured token stream for a few hundred steps and watch
+the loss fall well below the unigram entropy floor.
+
+Run: PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.checkpoint.ckpt import save
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import TokenStream
+from repro.train.loop import TrainConfig, train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--ckpt", default="/tmp/repro_lm.npz")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, vocab=512)
+    print(f"training {cfg.arch_id} (reduced: {cfg.n_layers}L d={cfg.d_model} "
+          f"V={cfg.vocab}; {cfg.param_count()/1e6:.1f}M params) "
+          f"for {args.steps} steps")
+
+    data = iter(TokenStream(vocab=cfg.vocab, batch=8, seq_len=128, seed=0))
+    tc = TrainConfig(peak_lr=1e-3, warmup_steps=20, total_steps=args.steps)
+
+    def log(step, m):
+        print(f"  step {step:4d}  loss {m['loss']:.3f}  nll {m['nll']:.3f}  "
+              f"gnorm {m['grad_norm']:.2f}  lr {m['lr']:.2e}  "
+              f"({m['wall_s']:.0f}s)")
+
+    params, hist = train(cfg, data, tc, steps=args.steps, log_every=25, log_fn=log)
+    first, last = hist[0]["nll"], hist[-1]["nll"]
+    uniform = np.log(cfg.vocab)
+    print(f"\nnll: {first:.2f} -> {last:.2f} (uniform floor {uniform:.2f})")
+    assert last < first * 0.7, "training should reduce loss"
+    save(args.ckpt, params)
+    print(f"checkpoint saved to {args.ckpt}")
+
+
+if __name__ == "__main__":
+    main()

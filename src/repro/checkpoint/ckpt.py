@@ -1,0 +1,74 @@
+"""Checkpointing: pytree <-> .npz with structure manifest; works for params
+and optimizer state (any pytree of arrays + scalars). Multi-host sharded
+save would add per-shard files keyed by process index — single-process here,
+the manifest already records the intended PartitionSpec per leaf so restore
+can re-shard.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save(path: str | pathlib.Path, tree, *, shardings: dict[str, str] | None = None) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    leaves = _flatten_with_paths(tree)
+    arrays = {}
+    dtypes = []
+    for i, (_, leaf) in enumerate(leaves):
+        dt = str(getattr(leaf, "dtype", np.asarray(leaf).dtype))
+        dtypes.append(dt)
+        if dt == "bfloat16":  # numpy has no bf16: store as f32, cast on restore
+            import jax.numpy as jnp
+
+            arrays[f"arr_{i}"] = np.asarray(jnp.asarray(leaf, jnp.float32))
+        else:
+            arrays[f"arr_{i}"] = np.asarray(leaf)
+    manifest = {
+        "keys": [k for k, _ in leaves],
+        "dtypes": dtypes,
+        "shardings": shardings or {},
+    }
+    np.savez(path, __manifest__=json.dumps(manifest), **arrays)
+
+
+def restore(path: str | pathlib.Path, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    path = pathlib.Path(path)
+    with np.load(path, allow_pickle=False) as data:
+        manifest = json.loads(str(data["__manifest__"]))
+        keys = manifest["keys"]
+        dtypes = manifest.get("dtypes", [None] * len(keys))
+        arrays = []
+        for i in range(len(keys)):
+            a = data[f"arr_{i}"]
+            if dtypes[i] == "bfloat16":
+                import jax.numpy as jnp
+
+                a = jnp.asarray(a, jnp.bfloat16)
+            arrays.append(a)
+    template = _flatten_with_paths(like)
+    by_key = dict(zip(keys, arrays))
+    missing = [k for k, _ in template if k not in by_key]
+    if missing:
+        raise KeyError(f"checkpoint missing keys: {missing[:5]}...")
+    leaves = [by_key[k] for k, _ in template]
+    treedef = jax.tree_util.tree_structure(like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,311 @@
+"""Online statistical estimators used for elysium-threshold maintenance.
+
+The paper (§IV, "Online calculation of the elysium threshold") proposes
+updating the threshold live from streaming benchmark results without storing
+observations: the mean can be maintained exactly online, the standard
+deviation via Welford's algorithm [13, Welford 1962], and percentiles via
+the P² algorithm [12, Jain & Chlamtac 1985].
+
+Every estimator is provided in two forms:
+
+* a plain-Python class (used by the controller / simulator hot path), and
+* a pure-JAX (pytree-state + ``update`` function) form usable inside
+  ``jax.lax.scan`` / jitted loops, so that a fleet of thousands of
+  simulated instances can be folded in a single XLA program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Welford mean / variance
+# ---------------------------------------------------------------------------
+
+
+class Welford:
+    """Exact online mean and variance (Welford 1962).
+
+    Stores O(1) state: count, running mean, and M2 (sum of squared
+    deviations). ``variance`` is the unbiased sample variance.
+    """
+
+    __slots__ = ("count", "mean", "m2")
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+
+    def update(self, x: float) -> None:
+        self.count += 1
+        delta = x - self.mean
+        self.mean += delta / self.count
+        self.m2 += delta * (x - self.mean)
+
+    def update_many(self, xs) -> None:
+        for x in xs:
+            self.update(float(x))
+
+    @property
+    def variance(self) -> float:
+        if self.count < 2:
+            return 0.0
+        return self.m2 / (self.count - 1)
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self.variance)
+
+    def merge(self, other: "Welford") -> "Welford":
+        """Chan et al. parallel merge — lets distributed collectors combine."""
+        out = Welford()
+        n = self.count + other.count
+        if n == 0:
+            return out
+        delta = other.mean - self.mean
+        out.count = n
+        out.mean = self.mean + delta * other.count / n
+        out.m2 = self.m2 + other.m2 + delta * delta * self.count * other.count / n
+        return out
+
+
+class WelfordState(NamedTuple):
+    """JAX pytree state for Welford. All leaves are scalars (f32/f64)."""
+
+    count: jax.Array
+    mean: jax.Array
+    m2: jax.Array
+
+
+def welford_init(dtype=jnp.float32) -> WelfordState:
+    z = jnp.zeros((), dtype)
+    return WelfordState(count=z, mean=z, m2=z)
+
+
+def welford_update(state: WelfordState, x: jax.Array) -> WelfordState:
+    count = state.count + 1.0
+    delta = x - state.mean
+    mean = state.mean + delta / count
+    m2 = state.m2 + delta * (x - mean)
+    return WelfordState(count=count, mean=mean, m2=m2)
+
+
+def welford_variance(state: WelfordState) -> jax.Array:
+    return jnp.where(state.count < 2.0, 0.0, state.m2 / jnp.maximum(state.count - 1.0, 1.0))
+
+
+def welford_std(state: WelfordState) -> jax.Array:
+    return jnp.sqrt(welford_variance(state))
+
+
+def welford_merge(a: WelfordState, b: WelfordState) -> WelfordState:
+    n = a.count + b.count
+    safe_n = jnp.maximum(n, 1.0)
+    delta = b.mean - a.mean
+    mean = a.mean + delta * b.count / safe_n
+    m2 = a.m2 + b.m2 + delta * delta * a.count * b.count / safe_n
+    return WelfordState(count=n, mean=jnp.where(n == 0, 0.0, mean), m2=jnp.where(n == 0, 0.0, m2))
+
+
+# ---------------------------------------------------------------------------
+# P² quantile estimator (Jain & Chlamtac 1985)
+# ---------------------------------------------------------------------------
+
+
+class P2Quantile:
+    """P² dynamic quantile estimation without storing observations.
+
+    Maintains 5 markers whose heights converge to the (0, p/2, p, (1+p)/2, 1)
+    quantiles. After the first five observations the estimate is available in
+    O(1) memory. This is the paper's cited mechanism for online percentile
+    estimation of benchmark results.
+    """
+
+    __slots__ = ("p", "n_obs", "heights", "positions", "desired", "increments")
+
+    def __init__(self, p: float) -> None:
+        if not 0.0 < p < 1.0:
+            raise ValueError(f"quantile p must be in (0,1), got {p}")
+        self.p = p
+        self.n_obs = 0
+        self.heights: list[float] = []
+        self.positions = [1.0, 2.0, 3.0, 4.0, 5.0]
+        self.desired = [1.0, 1.0 + 2.0 * p, 1.0 + 4.0 * p, 3.0 + 2.0 * p, 5.0]
+        self.increments = [0.0, p / 2.0, p, (1.0 + p) / 2.0, 1.0]
+
+    def update(self, x: float) -> None:
+        x = float(x)
+        if self.n_obs < 5:
+            self.heights.append(x)
+            self.n_obs += 1
+            if self.n_obs == 5:
+                self.heights.sort()
+            return
+        self.n_obs += 1
+        q = self.heights
+        # locate cell k such that q[k] <= x < q[k+1]
+        if x < q[0]:
+            q[0] = x
+            k = 0
+        elif x >= q[4]:
+            q[4] = x
+            k = 3
+        else:
+            k = 0
+            for i in range(1, 4):
+                if x >= q[i]:
+                    k = i
+        for i in range(k + 1, 5):
+            self.positions[i] += 1.0
+        for i in range(5):
+            self.desired[i] += self.increments[i]
+        # adjust interior markers 1..3
+        for i in range(1, 4):
+            d = self.desired[i] - self.positions[i]
+            n_i, n_im, n_ip = self.positions[i], self.positions[i - 1], self.positions[i + 1]
+            if (d >= 1.0 and n_ip - n_i > 1.0) or (d <= -1.0 and n_im - n_i < -1.0):
+                d_sign = 1.0 if d >= 0 else -1.0
+                # parabolic (P²) prediction
+                q_new = q[i] + d_sign / (n_ip - n_im) * (
+                    (n_i - n_im + d_sign) * (q[i + 1] - q[i]) / (n_ip - n_i)
+                    + (n_ip - n_i - d_sign) * (q[i] - q[i - 1]) / (n_i - n_im)
+                )
+                if q[i - 1] < q_new < q[i + 1]:
+                    q[i] = q_new
+                else:  # linear fallback
+                    j = i + int(d_sign)
+                    q[i] = q[i] + d_sign * (q[j] - q[i]) / (self.positions[j] - n_i)
+                self.positions[i] += d_sign
+
+    def update_many(self, xs) -> None:
+        for x in xs:
+            self.update(float(x))
+
+    @property
+    def value(self) -> float:
+        if self.n_obs == 0:
+            raise ValueError("no observations")
+        if self.n_obs < 5:
+            # exact small-sample quantile
+            return float(np.quantile(np.asarray(self.heights[: self.n_obs]), self.p))
+        return self.heights[2]
+
+
+class P2State(NamedTuple):
+    """JAX pytree state for the P² estimator (vectorizable via vmap)."""
+
+    n_obs: jax.Array          # scalar int32
+    heights: jax.Array        # (5,) f32 — first 5 obs stored raw until full
+    positions: jax.Array      # (5,) f32
+    desired: jax.Array        # (5,) f32
+    p: jax.Array              # scalar f32
+
+
+def p2_init(p: float | jax.Array) -> P2State:
+    p = jnp.asarray(p, jnp.float32)
+    return P2State(
+        n_obs=jnp.zeros((), jnp.int32),
+        heights=jnp.zeros((5,), jnp.float32),
+        positions=jnp.arange(1.0, 6.0, dtype=jnp.float32),
+        desired=jnp.array([1.0, 0.0, 0.0, 0.0, 5.0], jnp.float32)
+        + jnp.array([0.0, 2.0, 4.0, 2.0, 0.0], jnp.float32) * p
+        + jnp.array([0.0, 1.0, 1.0, 3.0, 0.0], jnp.float32),
+        p=p,
+    )
+
+
+def _p2_increments(p: jax.Array) -> jax.Array:
+    return jnp.stack([jnp.zeros_like(p), p / 2.0, p, (1.0 + p) / 2.0, jnp.ones_like(p)])
+
+
+def p2_update(state: P2State, x: jax.Array) -> P2State:
+    """One P² update step, branch-free (jit/vmap-safe)."""
+    x = jnp.asarray(x, jnp.float32)
+
+    def warmup(s: P2State) -> P2State:
+        h = s.heights.at[s.n_obs].set(x)
+        n = s.n_obs + 1
+        h = jnp.where(n >= 5, jnp.sort(h), h)
+        return s._replace(n_obs=n, heights=h)
+
+    def steady(s: P2State) -> P2State:
+        q = s.heights
+        below = x < q[0]
+        above = x >= q[4]
+        q = q.at[0].set(jnp.where(below, x, q[0]))
+        q = q.at[4].set(jnp.where(above, x, q[4]))
+        # cell index k in [0,3]
+        k_mid = jnp.sum(jnp.asarray(x >= q[1:4], jnp.int32))
+        k = jnp.where(below, 0, jnp.where(above, 3, k_mid))
+        idx = jnp.arange(5)
+        pos = s.positions + jnp.asarray(idx > k, jnp.float32)
+        des = s.desired + _p2_increments(s.p)
+
+        def adjust(i, carry):
+            q, pos = carry
+            d = des[i] - pos[i]
+            n_i, n_im, n_ip = pos[i], pos[i - 1], pos[i + 1]
+            move_up = (d >= 1.0) & (n_ip - n_i > 1.0)
+            move_dn = (d <= -1.0) & (n_im - n_i < -1.0)
+            do = move_up | move_dn
+            s_ = jnp.where(move_up, 1.0, -1.0)
+            denom_hi = jnp.where(n_ip - n_i == 0, 1.0, n_ip - n_i)
+            denom_lo = jnp.where(n_i - n_im == 0, 1.0, n_i - n_im)
+            q_par = q[i] + s_ / (n_ip - n_im) * (
+                (n_i - n_im + s_) * (q[i + 1] - q[i]) / denom_hi
+                + (n_ip - n_i - s_) * (q[i] - q[i - 1]) / denom_lo
+            )
+            ok = (q[i - 1] < q_par) & (q_par < q[i + 1])
+            j = i + jnp.asarray(s_, jnp.int32)
+            denom_lin = jnp.where(pos[j] - n_i == 0, 1.0, pos[j] - n_i)
+            q_lin = q[i] + s_ * (q[j] - q[i]) / denom_lin
+            q_new = jnp.where(ok, q_par, q_lin)
+            q = q.at[i].set(jnp.where(do, q_new, q[i]))
+            pos = pos.at[i].set(jnp.where(do, n_i + s_, n_i))
+            return (q, pos)
+
+        q, pos = jax.lax.fori_loop(1, 4, adjust, (q, pos))
+        return s._replace(n_obs=s.n_obs + 1, heights=q, positions=pos, desired=des)
+
+    return jax.lax.cond(state.n_obs < 5, warmup, steady, state)
+
+
+def p2_value(state: P2State) -> jax.Array:
+    """Current quantile estimate. In warmup (<5 obs) returns the p-quantile
+    of the raw stored observations."""
+    n = state.n_obs
+
+    def warm(s):
+        h = jnp.sort(
+            jnp.where(jnp.arange(5) < jnp.maximum(n, 1), s.heights, jnp.inf)
+        )
+        # linear-interp quantile over the first n entries
+        pos = s.p * (jnp.asarray(n, jnp.float32) - 1.0)
+        lo = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, 4)
+        hi = jnp.clip(lo + 1, 0, jnp.maximum(n - 1, 0))
+        frac = pos - jnp.floor(pos)
+        return h[lo] * (1 - frac) + h[hi] * frac
+
+    return jax.lax.cond(n < 5, warm, lambda s: s.heights[2], state)
+
+
+# ---------------------------------------------------------------------------
+# Exponential moving average (used for drift-tracking thresholds)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class EMA:
+    alpha: float
+    value: float | None = None
+
+    def update(self, x: float) -> float:
+        x = float(x)
+        self.value = x if self.value is None else self.alpha * x + (1 - self.alpha) * self.value
+        return self.value

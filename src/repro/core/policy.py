@@ -1,0 +1,105 @@
+"""MinosPolicy — the local pass/terminate decision (paper §II-A, §II-B).
+
+A newly started instance runs a benchmark and compares the result against a
+single scalar, the *elysium threshold*, stored in the function
+configuration. No outside communication is needed during the call.
+
+Conventions: benchmark results are *durations* (lower is better) by default;
+``higher_is_better=True`` flips the comparison for throughput-style metrics.
+
+The *emergency exit* (§II-A) prevents infinite requeue loops: if an
+invocation has already been requeued ``max_retries`` times, the instance
+accepts it without benchmarking. The paper sizes this from the expected
+termination rate: at 40 % pass rate, P(5 consecutive terminations) =
+0.6^5 ≈ 8 % ... the paper's own example: at an expected termination rate of
+40 %, P(5 in a row) = 0.4^5 ≈ 1 %.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from enum import Enum
+
+
+class Verdict(Enum):
+    PASS = "pass"            # instance joins the known-good pool
+    TERMINATE = "terminate"  # requeue invocation, crash instance
+    FORCED_PASS = "forced_pass"  # emergency exit — accepted without/despite benchmark
+
+
+@dataclasses.dataclass(frozen=True)
+class MinosPolicy:
+    """The instance-local decision rule.
+
+    elysium_threshold: benchmark result an instance must beat to live.
+    max_retries: emergency-exit bound on requeues per invocation.
+    higher_is_better: metric direction (False for durations).
+    enabled: with False, every instance passes (the paper's baseline arm).
+    """
+
+    elysium_threshold: float
+    max_retries: int = 5
+    higher_is_better: bool = False
+    enabled: bool = True
+
+    def passes(self, benchmark_result: float) -> bool:
+        if self.higher_is_better:
+            return benchmark_result >= self.elysium_threshold
+        return benchmark_result <= self.elysium_threshold
+
+    def judge(self, benchmark_result: float, retry_count: int) -> Verdict:
+        """Decide the fate of a cold-started instance.
+
+        retry_count is the number of times THIS invocation has already been
+        requeued by terminated instances.
+        """
+        if not self.enabled:
+            return Verdict.PASS
+        if retry_count >= self.max_retries:
+            return Verdict.FORCED_PASS
+        return Verdict.PASS if self.passes(benchmark_result) else Verdict.TERMINATE
+
+    def should_benchmark(self, retry_count: int, is_cold_start: bool) -> bool:
+        """Warm instances are never re-benchmarked (paper §II-B: short-lived
+        instances make re-running benchmarks unnecessary); emergency-exit
+        invocations skip the benchmark entirely."""
+        if not self.enabled or not is_cold_start:
+            return False
+        return retry_count < self.max_retries
+
+
+def runaway_probability(termination_rate: float, retries: int) -> float:
+    """P(an invocation is terminated ``retries`` times in a row).
+
+    Paper example: termination_rate=0.4 (60th-pct threshold ⇒ 40 % of fresh
+    instances fail... note the paper words it as 'expected termination rate
+    is 40%' ⇒ 0.4^5 ≈ 1 %).
+    """
+    if not 0.0 <= termination_rate <= 1.0:
+        raise ValueError("termination_rate must be in [0,1]")
+    return termination_rate**retries
+
+
+def retries_for_runaway_budget(termination_rate: float, budget: float) -> int:
+    """Smallest max_retries such that P(runaway) <= budget."""
+    if termination_rate <= 0.0:
+        return 1
+    if termination_rate >= 1.0:
+        raise ValueError("termination_rate 1.0 never converges")
+    if not 0.0 < budget < 1.0:
+        raise ValueError("budget must be in (0,1)")
+    return max(1, math.ceil(math.log(budget) / math.log(termination_rate)))
+
+
+def expected_cold_start_attempts(termination_rate: float, max_retries: int) -> float:
+    """Expected number of instance starts per invocation under the policy
+    (geometric, truncated by the emergency exit).
+
+    E[starts] = sum_{k=0}^{r-1} t^k  (+ the forced-pass attempt when all
+    r retries terminated is already counted by the k=r-1 term's requeue).
+    """
+    t = termination_rate
+    if t == 1.0:
+        return float(max_retries + 1)
+    # attempts: 1 + t + t^2 + ... + t^max_retries (forced pass at the end)
+    return (1.0 - t ** (max_retries + 1)) / (1.0 - t)

@@ -1,0 +1,62 @@
+"""Invocation queue with requeue + retry accounting (paper §II, §IV).
+
+Minos requires an *asynchronous* workload: invocations enter a queue; a
+terminating instance re-queues its invocation before crashing so no request
+is lost (at-least-once). The retry counter travels with the invocation —
+it is what the emergency exit reads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any, Optional
+
+_seq = itertools.count()
+
+
+@dataclasses.dataclass
+class Invocation:
+    payload: Any
+    enqueued_at_ms: float = 0.0
+    retry_count: int = 0
+    first_enqueued_at_ms: Optional[float] = None
+    invocation_id: int = dataclasses.field(default_factory=lambda: next(_seq))
+    # bookkeeping for metrics
+    terminations_experienced: int = 0
+
+    def __post_init__(self) -> None:
+        if self.first_enqueued_at_ms is None:
+            self.first_enqueued_at_ms = self.enqueued_at_ms
+
+
+class InvocationQueue:
+    """FIFO (by enqueue time, then sequence) queue with requeue semantics."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Invocation]] = []
+        self.total_enqueued = 0
+        self.total_requeued = 0
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, inv: Invocation, now_ms: float) -> None:
+        inv.enqueued_at_ms = now_ms
+        heapq.heappush(self._heap, (now_ms, next(_seq), inv))
+        self.total_enqueued += 1
+
+    def requeue(self, inv: Invocation, now_ms: float) -> None:
+        """Called by a terminating instance right before it crashes."""
+        inv.retry_count += 1
+        inv.terminations_experienced += 1
+        self.push(inv, now_ms)
+        self.total_requeued += 1
+
+    def pop(self) -> Invocation:
+        if not self._heap:
+            raise IndexError("pop from empty InvocationQueue")
+        return heapq.heappop(self._heap)[2]
+
+    def peek_time(self) -> Optional[float]:
+        return self._heap[0][0] if self._heap else None

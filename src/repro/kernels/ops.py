@@ -1,0 +1,108 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Handles padding to block multiples, dtype management, and the
+interpret-mode switch: on CPU (this container) kernels execute via
+``interpret=True`` — the kernel body runs in Python on CPU, proving
+correctness; on TPU the same code lowers to Mosaic. ``use_pallas=False``
+falls back to the pure-jnp oracle (used inside pjit'd model code where a
+CPU-interpreted pallas_call cannot be SPMD-partitioned).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .decode_attention import decode_attention as _decode_attention
+from .flash_attention import flash_attention as _flash_attention
+from .matmul_probe import matmul as _matmul
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices()) if jax.process_count() >= 0 else False
+INTERPRET = not _ON_TPU
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int) -> tuple[jax.Array, int]:
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 512,
+    use_pallas: bool = True,
+) -> jax.Array:
+    """Tiled matmul; pads M/N/K up to block multiples then slices back."""
+    if not use_pallas:
+        return _ref.matmul_ref(a, b)
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    # pallas wants divisibility; round blocks down to powers that fit, pad rest
+    a, _ = _pad_to(a, 0, bm)
+    a, _ = _pad_to(a, 1, bk)
+    b, _ = _pad_to(b, 0, bk)
+    b, _ = _pad_to(b, 1, bn)
+    out = _matmul(a, b, block_m=bm, block_n=bn, block_k=bk, interpret=INTERPRET)
+    return out[:m, :n]
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    sm_scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    use_pallas: bool = True,
+) -> jax.Array:
+    if not use_pallas:
+        return _ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+    q_seq, kv_seq = q.shape[2], k.shape[2]
+    bq, bk = min(block_q, q_seq), min(block_k, kv_seq)
+    if q_seq % bq or kv_seq % bk:
+        # padding attention needs mask plumbing; oracle handles ragged shapes
+        return _ref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale)
+    return _flash_attention(
+        q, k, v, causal=causal, sm_scale=sm_scale, block_q=bq, block_k=bk,
+        interpret=INTERPRET,
+    )
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    lengths: jax.Array,
+    *,
+    sm_scale: float | None = None,
+    block_k: int = 256,
+    use_pallas: bool = True,
+) -> jax.Array:
+    if not use_pallas:
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths, sm_scale=sm_scale)
+    s_len = k_cache.shape[2]
+    bk = min(block_k, s_len)
+    if s_len % bk:
+        return _ref.decode_attention_ref(q, k_cache, v_cache, lengths, sm_scale=sm_scale)
+    return _decode_attention(
+        q, k_cache, v_cache, lengths, sm_scale=sm_scale, block_k=bk, interpret=INTERPRET
+    )
+
+
+@functools.cache
+def kernel_names() -> tuple[str, ...]:
+    return ("matmul", "flash_attention", "decode_attention")

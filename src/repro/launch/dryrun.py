@@ -1,0 +1,266 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+combination on the production meshes, print memory/cost analyses, and dump
+roofline terms to JSON for benchmarks/roofline_table.py.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all                 # 10 x 4, single pod
+  python -m repro.launch.dryrun --all --multi-pod     # + the 2-pod mesh
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.distributed.sharding import use_mesh
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shardings import make_rules, shard_inputs, shard_params_like
+from repro.launch.specs import INPUT_SHAPES, applicable, config_for_shape, input_specs
+from repro.models.model import build_model
+from repro.optim.adamw import AdamW
+from repro.roofline.hlo import Roofline, analyze_hlo
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+
+def build_lowerable(cfg: ArchConfig, shape_name: str, mesh, *,
+                    dp_only: bool = False, fsdp: bool = False,
+                    accum_steps: int = 1):
+    """dp_only / fsdp / accum_steps are the §Perf hillclimb knobs; all
+    default off = the paper-faithful baseline configuration."""
+    model = build_model(cfg)
+    specs = input_specs(cfg, shape_name)
+    batch_sds, cache_sds = shard_inputs(cfg, mesh, specs)
+    params_shape = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    params_sds = shard_params_like(params_shape, cfg, mesh,
+                                   fsdp=fsdp, replicate=dp_only)
+    kind = specs["kind"]
+
+    if kind == "train":
+        opt = AdamW(learning_rate=3e-4)
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        # ZeRO-1+: optimizer state is data-sharded under fsdp — including
+        # combined with dp_only (replicated params, sharded opt state)
+        opt_sds = shard_params_like(opt_shape, cfg, mesh,
+                                    fsdp=fsdp, replicate=dp_only and not fsdp)
+
+        if accum_steps > 1:
+
+            def train_step(params, opt_state, batch):
+                def micro(b):
+                    return jax.tree.map(
+                        lambda t: t.reshape((accum_steps, -1) + t.shape[1:]), b
+                    )
+
+                mb = micro(batch)
+
+                def body(acc, b):
+                    (loss, _), grads = jax.value_and_grad(
+                        lambda p: model.loss(p, b, remat=True), has_aux=True
+                    )(params)
+                    acc = jax.tree.map(
+                        lambda a, g: a + g.astype(jnp.float32), acc, grads
+                    )
+                    return acc, loss
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                )
+                grads, losses = jax.lax.scan(body, zeros, mb)
+                grads = jax.tree.map(lambda g: g / accum_steps, grads)
+                params, opt_state, _ = opt.update(grads, opt_state, params)
+                return params, opt_state, jnp.mean(losses)
+
+        else:
+
+            def train_step(params, opt_state, batch):
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: model.loss(p, batch, remat=True), has_aux=True
+                )(params)
+                params, opt_state, om = opt.update(grads, opt_state, params)
+                return params, opt_state, loss
+
+        return train_step, (params_sds, opt_sds, batch_sds)
+
+    if kind == "prefill":
+
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch, cache)
+
+        return prefill_step, (params_sds, batch_sds, cache_sds)
+
+    def decode_step(params, cache, tokens):
+        return model.decode_step(params, cache, tokens)
+
+    return decode_step, (params_sds, cache_sds, batch_sds["tokens"])
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            save: bool = True, verbose: bool = True,
+            dp_only: bool = False, fsdp: bool = False, accum_steps: int = 1,
+            cache_update: str = "onehot", decode_attn: str = "local",
+            seq_parallel: bool = False, slstm_shard_map: bool = False,
+            tag: str = "") -> dict:
+    from repro.launch import shardings as _sh
+    from repro.models import attention as _attn
+    from repro.models import xlstm as _xl
+    _xl.SLSTM_SHARD_MAP = slstm_shard_map
+    _attn.CACHE_UPDATE_MODE = cache_update
+    _attn.DECODE_ATTN_MODE = decode_attn
+    _sh.FORCE_SEQ_SHARD_CACHE = decode_attn == "shard_map"
+    cfg = config_for_shape(get_config(arch), shape_name)
+    ok, reason = applicable(cfg, shape_name)
+    label = f"{arch} x {shape_name} x {'2pod' if multi_pod else '1pod'}"
+    if tag:
+        label += f" [{tag}]"
+    if not ok:
+        if verbose:
+            print(f"SKIP {label}: {reason}")
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(cfg, mesh)
+    # batch too small to shard over the data axes -> replicate activations
+    data_size = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            data_size *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+    if INPUT_SHAPES[shape_name].global_batch % data_size != 0:
+        rules["batch"] = None
+    if seq_parallel:
+        # §Perf pick-1 iter-4: sequence parallelism — the residual stream's
+        # seq dim shards over "model" between blocks (Korthikanti et al.),
+        # turning Megatron activation ARs into RS+AG and dividing the
+        # backward activation stash by the model-axis size.
+        rules["seq"] = "model"
+    t0 = time.perf_counter()
+    if dp_only:
+        from repro.launch.shardings import dp_only_rules
+        rules = dp_only_rules(mesh, INPUT_SHAPES[shape_name].global_batch)
+    try:
+        with use_mesh(mesh, rules):
+            fn, args = build_lowerable(cfg, shape_name, mesh, dp_only=dp_only,
+                                       fsdp=fsdp, accum_steps=accum_steps)
+            lowered = jax.jit(fn).lower(*args)
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+    except Exception as e:
+        if verbose:
+            print(f"FAIL {label}: {type(e).__name__}: {e}")
+            traceback.print_exc(limit=3)
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "status": "failed", "error": f"{type(e).__name__}: {e}"}
+
+    chips = mesh.devices.size
+    stats = analyze_hlo(hlo, default_group=16)
+    shp = INPUT_SHAPES[shape_name]
+    tokens = shp.global_batch * (shp.seq_len if shp.kind == "train" else
+                                 (shp.seq_len if shp.kind == "prefill" else 1))
+    n_active = cfg.active_param_count()
+    mult = 3.0 if shp.kind == "train" else 1.0  # fwd+bwd = 3x fwd FLOPs
+    model_flops = 2.0 * n_active * tokens * mult
+    roof = Roofline(
+        flops=stats.flops, hbm_bytes=stats.hbm_bytes,
+        collective_bytes=stats.collective_bytes, chips=chips,
+        model_flops=model_flops, stats=stats,
+    )
+    result = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "status": "ok", "tag": tag,
+        "opts": {"dp_only": dp_only, "fsdp": fsdp, "accum_steps": accum_steps,
+                 "cache_update": cache_update, "decode_attn": decode_attn,
+                 "seq_parallel": seq_parallel, "slstm_shard_map": slstm_shard_map},
+        "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+            + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "roofline": roof.to_dict(),
+    }
+    if verbose:
+        m = result["memory"]
+        r = result["roofline"]
+        print(
+            f"OK   {label}: compile {t_compile:.0f}s | "
+            f"args {(m['argument_bytes'] or 0)/2**30:.2f} GiB/dev, "
+            f"temp {(m['temp_bytes'] or 0)/2**30:.2f} GiB/dev | "
+            f"T(comp/mem/coll) = {r['t_compute_s']:.3e}/{r['t_memory_s']:.3e}/"
+            f"{r['t_collective_s']:.3e} s -> {r['bottleneck']} | "
+            f"useful-FLOPs {r['useful_flops_ratio']*100:.0f}%",
+            flush=True,
+        )
+    if save:
+        RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+        suffix = f"_{tag}" if tag else ""
+        fname = f"{arch}_{shape_name}_{'2pod' if multi_pod else '1pod'}{suffix}.json"
+        (RESULTS_DIR / fname).write_text(json.dumps(result, indent=2))
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    # §Perf hillclimb knobs (defaults = paper-faithful baseline)
+    ap.add_argument("--dp-only", action="store_true")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--cache-update", choices=("onehot", "scatter"),
+                    default="onehot")
+    ap.add_argument("--decode-attn", choices=("local", "shard_map"),
+                    default="local")
+    ap.add_argument("--seq-parallel", action="store_true")
+    ap.add_argument("--slstm-shard-map", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    combos: list[tuple[str, str, bool]] = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        for mp in meshes:
+            for a in ARCH_IDS:
+                for s in INPUT_SHAPES:
+                    combos.append((a, s, mp))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        for mp in meshes:
+            combos.append((args.arch, args.shape, mp))
+
+    failures = 0
+    for a, s, mp in combos:
+        res = run_one(a, s, multi_pod=mp, dp_only=args.dp_only,
+                      fsdp=args.fsdp, accum_steps=args.accum_steps,
+                      cache_update=args.cache_update,
+                      decode_attn=args.decode_attn,
+                      seq_parallel=args.seq_parallel,
+                      slstm_shard_map=args.slstm_shard_map, tag=args.tag)
+        failures += res["status"] == "failed"
+    print(f"\n{len(combos)} combos, {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

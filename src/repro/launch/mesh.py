@@ -1,0 +1,20 @@
+"""Production meshes. A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state — device count is locked on
+first jax init, and only dryrun.py sets the 512-device XLA flag."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (data, model) single pod of TPU v5e; 2x16x16 (pod, data, model)
+    for the two-pod deployment. Requires 256 / 512 visible devices."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1D 'data' mesh (CPU tests)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

@@ -1,0 +1,315 @@
+"""Mamba2 block and the Zamba2 hybrid model (arXiv:2411.15242).
+
+Zamba2: a backbone of Mamba2 blocks with ONE shared transformer block
+(attention + SwiGLU) whose parameters are re-applied every
+``cfg.hybrid_attn_every`` Mamba layers (the paper's parameter-sharing
+design; we omit the per-application LoRA deltas — noted in DESIGN.md). The
+shared block uses sliding-window attention when ``cfg.sliding_window`` is
+set, which keeps the whole model sub-quadratic for long_500k.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from .attention import decode_attention_step, init_attention, prefill_attention
+from .layers import cross_entropy, init_swiglu, normal_init, rms_norm, swiglu, unembed
+from .ssm import ssd_chunked, ssd_step
+
+
+def _dims(cfg: ArchConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    N = ssm.d_state
+    P = ssm.d_state  # head dim = d_state (mamba2 default P=64=N)
+    H = d_inner // P
+    return d_inner, H, P, N
+
+
+def init_mamba_block(cfg: ArchConfig, key) -> dict[str, Any]:
+    d = cfg.d_model
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    ks = jax.random.split(key, 4)
+    dt = cfg.jax_dtype
+    return {
+        "ln": jnp.ones((d,), dt),
+        # in_proj -> [x (d_inner), z (d_inner), B (N), C (N), dt (H)]
+        "w_in": normal_init(ks[0], (d, 2 * d_inner + 2 * N + H), d**-0.5, dt),
+        "conv_w": normal_init(ks[1], (cfg.ssm.d_conv, conv_dim), 0.5, dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "ynorm": jnp.ones((d_inner,), dt),
+        "w_out": normal_init(ks[2], (d_inner, d), d_inner**-0.5, dt),
+    }
+
+
+def _mamba_proj(cfg, p, x):
+    d_inner, H, P, N = _dims(cfg)
+    xn = rms_norm(x, p["ln"], cfg.norm_eps)
+    u = xn @ p["w_in"]
+    xs, z, Bm, Cm, dt = jnp.split(
+        u, [d_inner, 2 * d_inner, 2 * d_inner + N, 2 * d_inner + 2 * N], axis=-1
+    )
+    return xs, z, Bm, Cm, dt
+
+
+def _causal_conv(seq: jax.Array, w: jax.Array, b: jax.Array, ctx: jax.Array | None = None):
+    """Depthwise causal conv. seq: (B, S, C); w: (K, C). ctx: (B, K-1, C)
+    previous inputs (decode) or None (prefill pads with zeros).
+    Returns (out (B,S,C), new_ctx (B, K-1, C))."""
+    K = w.shape[0]
+    if ctx is None:
+        ctx = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
+    full = jnp.concatenate([ctx, seq], axis=1)
+    out = sum(full[:, i : i + seq.shape[1]] * w[i][None, None, :] for i in range(K))
+    out = out + b[None, None, :]
+    new_ctx = full[:, -(K - 1) :, :]
+    return jax.nn.silu(out), new_ctx
+
+
+def mamba_block(cfg: ArchConfig, p, x, *, state=None):
+    """x: (B,S,d). state: None or (h (B,H,N,P), conv_ctx). Returns (y, state)."""
+    d_inner, H, P, N = _dims(cfg)
+    B, S, _ = x.shape
+    xs, z, Bm, Cm, dt = _mamba_proj(cfg, p, x)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    h0, ctx = (None, None) if state is None else state
+    conv_out, new_ctx = _causal_conv(conv_in, p["conv_w"], p["conv_b"], ctx)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_chunked(
+        xs.reshape(B, S, H, P), dt, A, Bm, Cm, p["D"], chunk=cfg.ssm.chunk, h0=h0
+    )
+    y = y.reshape(B, S, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["ynorm"], cfg.norm_eps)
+    return x + y @ p["w_out"], (h, new_ctx)
+
+
+def mamba_block_step(cfg: ArchConfig, p, x, state):
+    """x: (B,1,d); state: (h, conv_ctx)."""
+    d_inner, H, P, N = _dims(cfg)
+    B = x.shape[0]
+    xs, z, Bm, Cm, dt = _mamba_proj(cfg, p, x)
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    h, ctx = state
+    conv_out, new_ctx = _causal_conv(conv_in, p["conv_w"], p["conv_b"], ctx)
+    xs, Bm, Cm = jnp.split(conv_out, [d_inner, d_inner + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, h = ssd_step(
+        xs[:, 0].reshape(B, H, P), dt[:, 0], A, Bm[:, 0], Cm[:, 0], p["D"], h
+    )
+    y = y.reshape(B, 1, d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["ynorm"], cfg.norm_eps)
+    return x + y @ p["w_out"], (h, new_ctx)
+
+
+# ---------------------------------------------------------------------------
+# Zamba2
+# ---------------------------------------------------------------------------
+
+
+def _n_attn(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.hybrid_attn_every if cfg.hybrid_attn_every else 0
+
+
+def init_params(cfg: ArchConfig, key) -> dict[str, Any]:
+    k_emb, k_m, k_a, k_out = jax.random.split(key, 4)
+    mkeys = jax.random.split(k_m, cfg.n_layers)
+    params: dict[str, Any] = {
+        "embed": normal_init(k_emb, (cfg.vocab, cfg.d_model), 1.0, cfg.jax_dtype),
+        "mamba": jax.vmap(functools.partial(init_mamba_block, cfg))(mkeys),
+        "final_norm": jnp.ones((cfg.d_model,), cfg.jax_dtype),
+        "unembed": normal_init(
+            k_out, (cfg.d_model, cfg.vocab), cfg.d_model**-0.5, cfg.jax_dtype
+        ),
+    }
+    if cfg.hybrid_attn_every:
+        ka1, ka2 = jax.random.split(k_a)
+        params["shared_attn"] = {
+            "ln1": jnp.ones((cfg.d_model,), cfg.jax_dtype),
+            "attn": init_attention(
+                ka1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                cfg.qk_norm, cfg.jax_dtype,
+            ),
+            "ln2": jnp.ones((cfg.d_model,), cfg.jax_dtype),
+            "mlp": init_swiglu(ka2, cfg.d_model, cfg.d_ff, cfg.jax_dtype),
+        }
+    return params
+
+
+def _shared_attn_prefill(cfg, p, x, positions):
+    h, (k, v) = prefill_attention(
+        p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps), positions,
+        rope_theta=cfg.rope_theta, eps=cfg.norm_eps, causal=True,
+        window=cfg.sliding_window,
+    )
+    x = x + h
+    m = swiglu(rms_norm(x, p["ln2"], cfg.norm_eps), **p["mlp"])
+    return x + m, (k, v)
+
+
+def _group_sizes(cfg: ArchConfig) -> list[int]:
+    """Mamba-run lengths between shared-attention applications."""
+    if not cfg.hybrid_attn_every:
+        return [cfg.n_layers]
+    e = cfg.hybrid_attn_every
+    sizes = [e] * (cfg.n_layers // e)
+    if cfg.n_layers % e:
+        sizes.append(cfg.n_layers % e)
+    return sizes
+
+
+def _split_stacked(params, sizes):
+    """Split the stacked mamba params into per-group stacks."""
+    out, start = [], 0
+    for s in sizes:
+        out.append(jax.tree.map(lambda t: t[start : start + s], params))
+        start += s
+    return out
+
+
+def forward(cfg: ArchConfig, params, tokens, *, remat: bool = True):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    sizes = _group_sizes(cfg)
+    groups = _split_stacked(params["mamba"], sizes)
+    for gi, gp in enumerate(groups):
+
+        def body(x, pl):
+            y, _ = mamba_block(cfg, pl, x)
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, gp)
+        if cfg.hybrid_attn_every and gi < _n_attn(cfg):
+            x, _ = _shared_attn_prefill(cfg, params["shared_attn"], x, positions)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed(x, params["unembed"]), 0.0
+
+
+def loss_fn(cfg: ArchConfig, params, batch, *, remat: bool = True):
+    logits, aux = forward(cfg, params, batch["tokens"], remat=remat)
+    ce, nll = cross_entropy(logits, batch["labels"])
+    return ce + aux, {"ce": ce, "nll": nll, "aux": aux}
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, **_):
+    d_inner, H, P, N = _dims(cfg)
+    conv_dim = d_inner + 2 * N
+    K = cfg.ssm.d_conv
+    n_attn = _n_attn(cfg)
+    cache: dict[str, Any] = {
+        "h": jnp.zeros((cfg.n_layers, batch, H, N, P), jnp.float32),
+        "conv": jnp.zeros((cfg.n_layers, batch, K - 1, conv_dim), cfg.jax_dtype),
+        "lengths": jnp.zeros((batch,), jnp.int32),
+    }
+    if n_attn:
+        S = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        cache["attn_k"] = jnp.zeros(
+            (n_attn, batch, cfg.n_kv_heads, S, cfg.head_dim), cfg.jax_dtype
+        )
+        cache["attn_v"] = jnp.zeros_like(cache["attn_k"])
+    return cache
+
+
+def prefill(cfg: ArchConfig, params, tokens, cache):
+    """Run the prompt, collecting SSM states, conv contexts, and shared-attn
+    KV caches. Returns (last-token logits, cache)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "batch", "seq", None)
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    sizes = _group_sizes(cfg)
+    groups = _split_stacked(params["mamba"], sizes)
+    hs, convs = [], []
+    attn_ks, attn_vs = [], []
+    S_c = cache["attn_k"].shape[3] if "attn_k" in cache else 0
+    for gi, gp in enumerate(groups):
+
+        def body(x, pl):
+            y, st = mamba_block(cfg, pl, x)
+            return y, st
+
+        x, (h_new, c_new) = jax.lax.scan(body, x, gp)
+        hs.append(h_new)
+        convs.append(c_new)
+        if cfg.hybrid_attn_every and gi < _n_attn(cfg):
+            x, (k, v) = _shared_attn_prefill(cfg, params["shared_attn"], x, positions)
+            if cfg.sliding_window is not None and S > S_c:
+                k, v = k[:, :, -S_c:], v[:, :, -S_c:]
+                shift = (S - S_c) % S_c
+                k = jnp.roll(k, shift=shift, axis=2)
+                v = jnp.roll(v, shift=shift, axis=2)
+            elif k.shape[2] < S_c:
+                pad = S_c - k.shape[2]
+                k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+                v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+            attn_ks.append(k)
+            attn_vs.append(v)
+    x = rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["unembed"])
+    new_cache = dict(cache)
+    new_cache["h"] = jnp.concatenate(hs, axis=0)
+    new_cache["conv"] = jnp.concatenate(convs, axis=0)
+    new_cache["lengths"] = jnp.full((B,), S, jnp.int32)
+    if attn_ks:
+        new_cache["attn_k"] = jnp.stack(attn_ks, axis=0)
+        new_cache["attn_v"] = jnp.stack(attn_vs, axis=0)
+    return logits, new_cache
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens):
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shard(x, "batch", "seq", None)
+    lengths = cache["lengths"]
+    sizes = _group_sizes(cfg)
+    groups = _split_stacked(params["mamba"], sizes)
+    hs, convs = [], []
+    start = 0
+    for gi, gp in enumerate(groups):
+        s = sizes[gi]
+        st = (cache["h"][start : start + s], cache["conv"][start : start + s])
+
+        def body(x, inp):
+            pl, h, c = inp
+            y, (h2, c2) = mamba_block_step(cfg, pl, x, (h, c))
+            return y, (h2, c2)
+
+        x, (h_new, c_new) = jax.lax.scan(body, x, (gp, st[0], st[1]))
+        hs.append(h_new)
+        convs.append(c_new)
+        start += s
+        if cfg.hybrid_attn_every and gi < _n_attn(cfg):
+            p = params["shared_attn"]
+            h_att, kc, vc = decode_attention_step(
+                p["attn"], rms_norm(x, p["ln1"], cfg.norm_eps),
+                cache["attn_k"][gi], cache["attn_v"][gi], lengths,
+                rope_theta=cfg.rope_theta, eps=cfg.norm_eps,
+                window=cfg.sliding_window,
+            )
+            x = x + h_att
+            m = swiglu(rms_norm(x, p["ln2"], cfg.norm_eps), **p["mlp"])
+            x = x + m
+            cache["attn_k"] = cache["attn_k"].at[gi].set(kc)
+            cache["attn_v"] = cache["attn_v"].at[gi].set(vc)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = unembed(x, params["unembed"])
+    new_cache = dict(cache)
+    new_cache["h"] = jnp.concatenate(hs, axis=0)
+    new_cache["conv"] = jnp.concatenate(convs, axis=0)
+    new_cache["lengths"] = lengths + 1
+    return logits, new_cache

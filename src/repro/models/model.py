@@ -1,0 +1,76 @@
+"""Unified model API: every assigned architecture exposes the same surface.
+
+    model = build_model(cfg)
+    params = model.init(key)
+    loss, metrics = model.loss(params, batch)          # training
+    cache = model.init_cache(batch_size, max_len)
+    logits, cache = model.prefill(params, batch, cache)  # inference prefill
+    logits, cache = model.decode_step(params, cache, tokens)  # serve_step
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import encdec, hybrid, transformer, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[[jax.Array], Any]
+    loss: Callable[..., tuple[jax.Array, dict]]
+    forward: Callable[..., tuple[jax.Array, jax.Array]]
+    init_cache: Callable[..., Any]
+    prefill: Callable[..., tuple[Optional[jax.Array], Any]]
+    decode_step: Callable[..., tuple[jax.Array, Any]]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        mod = transformer
+    elif fam == "xlstm":
+        mod = xlstm
+    elif fam == "hybrid":
+        mod = hybrid
+    elif fam == "encdec":
+        mod = encdec
+    else:
+        raise ValueError(f"unknown family {fam!r}")
+
+    def init(key):
+        return mod.init_params(cfg, key)
+
+    def loss(params, batch, *, remat: bool = True):
+        return mod.loss_fn(cfg, params, batch, remat=remat)
+
+    def forward(params, batch, *, remat: bool = False):
+        if fam == "encdec":
+            return mod.forward(cfg, params, batch, remat=remat)
+        return mod.forward(cfg, params, batch["tokens"], remat=remat)
+
+    def init_cache(batch_size: int, max_len: int):
+        return mod.init_cache(cfg, batch_size, max_len)
+
+    def prefill(params, batch, cache):
+        if fam == "encdec":
+            return mod.prefill(cfg, params, batch, cache)
+        return mod.prefill(cfg, params, batch["tokens"], cache)
+
+    def decode_step(params, cache, tokens):
+        return mod.decode_step(cfg, params, cache, tokens)
+
+    return Model(
+        cfg=cfg, init=init, loss=loss, forward=forward,
+        init_cache=init_cache, prefill=prefill, decode_step=decode_step,
+    )
+
+
+def greedy_token(logits: jax.Array) -> jax.Array:
+    """(B, 1, V) -> (B, 1) argmax token."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

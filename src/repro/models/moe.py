@@ -1,0 +1,111 @@
+"""Mixture-of-Experts FFN: token-choice top-k routing with capacity-based
+dispatch (GShard/Switch style), optional always-on shared experts
+(DeepSeekMoE's fine-grained + shared design, arXiv:2401.06066), router
+z-loss and load-balance auxiliary loss.
+
+Expert parallelism: the expert dim of all expert weights and of the
+dispatch/combine einsums is sharded on the logical "expert" axis (mesh
+"model"). Under pjit the dispatch einsum lowers to an all-to-all across the
+model axis — the collective this family is bound by (see EXPERIMENTS.md
+§Roofline for deepseek-moe).
+
+Capacity: each expert processes at most C = ceil(S·top_k/E · cf) tokens per
+sequence-row group; overflow tokens fall through (residual passes them
+unchanged) — standard token-dropping semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import shard
+from .layers import normal_init
+
+
+def init_moe(key, cfg: ArchConfig):
+    m = cfg.moe
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    d, de = cfg.d_model, m.d_expert
+    s_in, s_out = d**-0.5, de**-0.5
+    p = {
+        "router": normal_init(k_r, (d, m.n_experts), s_in, jnp.float32),
+        "w_gate": normal_init(k_e, (m.n_experts, d, de), s_in, cfg.jax_dtype),
+        "w_up": normal_init(
+            jax.random.fold_in(k_e, 1), (m.n_experts, d, de), s_in, cfg.jax_dtype
+        ),
+        "w_down": normal_init(
+            jax.random.fold_in(k_e, 2), (m.n_experts, de, d), s_out, cfg.jax_dtype
+        ),
+    }
+    if m.n_shared:
+        p["shared"] = {
+            "w_gate": normal_init(k_s, (d, m.n_shared * de), s_in, cfg.jax_dtype),
+            "w_up": normal_init(
+                jax.random.fold_in(k_s, 1), (d, m.n_shared * de), s_in, cfg.jax_dtype
+            ),
+            "w_down": normal_init(
+                jax.random.fold_in(k_s, 2), (m.n_shared * de, d), s_out, cfg.jax_dtype
+            ),
+        }
+    return p
+
+
+def _capacity(tokens: int, top_k: int, n_experts: int, cf: float) -> int:
+    return max(4, int(tokens * top_k * cf / n_experts))
+
+
+def apply_moe(cfg: ArchConfig, p, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, K = m.n_experts, m.top_k
+    C = _capacity(S, K, E, m.capacity_factor)
+
+    logits = (x.astype(jnp.float32) @ p["router"])  # (B, S, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- aux losses (computed on the full distribution) ---
+    # load balance (Switch): E * sum_e f_e * p_e
+    top1 = jnp.argmax(probs, axis=-1)
+    f = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+    pbar = jnp.mean(probs, axis=(0, 1))
+    lb = E * jnp.sum(f * pbar)
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    aux = m.load_balance_weight * lb + m.router_z_weight * z
+
+    # --- top-k dispatch with capacity ---
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (B, S, K, E)
+    # position of each (token, k) within its expert queue
+    pos_in_e = jnp.cumsum(onehot.reshape(B, S * K, E), axis=1).reshape(B, S, K, E)
+    pos_in_e = (pos_in_e - 1.0) * onehot                     # 0-based, only where routed
+    keep = (pos_in_e < C) & (onehot > 0)
+    pos = jnp.sum(pos_in_e * onehot, axis=-1).astype(jnp.int32)  # (B, S, K)
+    cap_oh = jax.nn.one_hot(pos, C, dtype=jnp.float32) * keep.max(-1, keepdims=False)[
+        ..., None
+    ].astype(jnp.float32)  # (B, S, K, C)
+
+    # dispatch mask (B, S, E, C)
+    dispatch = jnp.einsum("bske,bskc->bsec", onehot * keep.astype(jnp.float32), cap_oh)
+    combine = jnp.einsum("bsk,bske,bskc->bsec", gate_vals, onehot * keep.astype(jnp.float32), cap_oh)
+    dispatch = shard(dispatch, "batch", None, "expert", None)
+    combine = shard(combine, "batch", None, "expert", None)
+
+    xe = jnp.einsum("bsec,bsd->becd", dispatch.astype(x.dtype), x)  # (B, E, C, d)
+    xe = shard(xe, "batch", "expert", None, None)
+    h = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+    h = jax.nn.silu(h) * u
+    ye = jnp.einsum("becf,efd->becd", h, p["w_down"])               # (B, E, C, d)
+    ye = shard(ye, "batch", "expert", None, None)
+    y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), ye)
+
+    if m.n_shared:
+        sp = p["shared"]
+        hs = jax.nn.silu(x @ sp["w_gate"]) * (x @ sp["w_up"])
+        y = y + hs @ sp["w_down"]
+    return shard(y, "batch", None, None), aux

@@ -1,0 +1,75 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and fp32 master
+weights for low-precision params. Hand-rolled (no optax in this
+environment); state is a plain pytree so it checkpoints/shards like params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any      # first moment (fp32)
+    nu: Any      # second moment (fp32)
+    master: Any  # fp32 master copy of params (None leaves if already fp32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable[[jax.Array], jax.Array] | float
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                          nu=jax.tree.map(jnp.copy, zeros), master=master)
+
+    def _lr(self, step):
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (new_params, new_state, metrics)."""
+        # global-norm clip (fp32)
+        leaves = jax.tree.leaves(grads)
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        step = state.step + 1
+        lr = self._lr(step)
+        b1c = 1.0 - self.b1**step.astype(jnp.float32)
+        b2c = 1.0 - self.b2**step.astype(jnp.float32)
+
+        def upd(g, m, v, p, master):
+            g = g.astype(jnp.float32) * scale
+            m = self.b1 * m + (1.0 - self.b1) * g
+            v = self.b2 * v + (1.0 - self.b2) * g * g
+            mhat = m / b1c
+            vhat = v / b2c
+            decay = self.weight_decay * master if master.ndim > 1 else 0.0
+            new = master - lr * (mhat / (jnp.sqrt(vhat) + self.eps) + decay)
+            return new.astype(p.dtype), m, v, new
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        flat_ma = treedef.flatten_up_to(state.master)
+        out = [upd(g, m, v, p, ma) for g, m, v, p, ma in
+               zip(flat_g, flat_m, flat_v, flat_p, flat_ma)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        new_ma = treedef.unflatten([o[3] for o in out])
+        return new_p, AdamWState(step, new_m, new_v, new_ma), {
+            "grad_norm": gnorm, "lr": lr,
+        }

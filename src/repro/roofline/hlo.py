@@ -1,0 +1,352 @@
+"""Post-SPMD HLO analysis: FLOPs, HBM-byte and collective-traffic extraction
+with while-loop (scan) trip-count accounting, + the three roofline terms.
+
+Why not ``compiled.cost_analysis()``: XLA's summary counts a while-loop body
+ONCE, so a 88-layer scanned transformer reports ~1/88th of its FLOPs. We
+parse the optimized HLO module instead:
+
+* computations are split into blocks and walked from ENTRY through the call
+  graph (while bodies, fusions, calls, conditionals);
+* each while's trip count is recovered from its condition computation (the
+  scan-induced pattern ``compare(induction_var, constant(N)), direction=LT``);
+* FLOPs: 2*result_elems*K for every ``dot`` (K from contracting dims);
+* HBM bytes (estimate, documented in EXPERIMENTS.md): sum of result-buffer
+  bytes x2 (write + one amortized read) for materializing top-level ops;
+* collective wire bytes: result bytes scaled by the algorithm factor
+  (all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+  collective-permute 1) with g parsed from replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*")
+_OPCODE_RE = re.compile(r"(?<![\w%\"/\.])([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r"known_trip_count\D+(\d+)")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_NO_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "partition-id", "replica-id", "iota",
+}
+
+
+def _shape_elems_bytes(shape_str: str) -> tuple[int, int]:
+    elems = 0
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dt]
+    return elems, total
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    result_type: str
+    kind: str
+    rest: str  # operand list + attrs (may span the rest of the line)
+
+
+@dataclasses.dataclass
+class _Computation:
+    name: str
+    ops: list[_Op]
+
+
+def _split_computations(text: str) -> tuple[dict[str, _Computation], Optional[str]]:
+    """Line-based split. A computation header is a top-level (column-0) line
+    ending in '{'; ops are the indented '%name = <type> <opcode>(...' lines.
+    Returns (computations, entry_name)."""
+    comps: dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Computation] = None
+    for line in text.splitlines():
+        if not line.startswith(" ") and line.rstrip().endswith("{"):
+            name_m = re.match(r"^(ENTRY\s+)?%?([\w\.\-]+)", line)
+            if name_m:
+                cur = _Computation(name_m.group(2), [])
+                comps[cur.name] = cur
+                if name_m.group(1):
+                    entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        am = _ASSIGN_RE.match(line)
+        if am is None:
+            continue
+        rest_of_line = line[am.end():]
+        om = _OPCODE_RE.search(rest_of_line)
+        if om is None:
+            continue
+        opcode = om.group(1)
+        result_type = rest_of_line[: om.start()].strip()
+        after = rest_of_line[om.end():]
+        cur.ops.append(_Op(am.group(1), result_type, opcode, after))
+    return comps, entry
+
+
+def _trip_count(op: _Op, comps: dict[str, _Computation]) -> int:
+    """Trip count of a while op: XLA's backend_config known_trip_count when
+    present, else recovered from the condition computation's
+    compare(iv, constant(N)) direction=LT pattern."""
+    m = _TRIP_RE.search(op.rest)
+    if m:
+        return max(1, int(m.group(1)))
+    cm = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+    cond = comps.get(cm.group(1)) if cm else None
+    if cond is None:
+        return 1
+    consts: dict[str, int] = {}
+    for o in cond.ops:
+        if o.kind == "constant":
+            mm = re.match(r"\s*(-?\d+)\s*\)", o.rest)
+            if mm:
+                consts[o.name] = int(mm.group(1))
+    for o in cond.ops:
+        if o.kind == "compare" and "direction=LT" in o.rest:
+            for ref in re.findall(r"%([\w\.\-]+)", o.rest):
+                if ref in consts:
+                    return max(1, consts[ref])
+    if consts:
+        return max(1, max(consts.values()))
+    return 1
+
+
+def _group_size(rest: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(rest)
+    if m:
+        return max(1, len([x for x in m.group(1).split(",") if x.strip()]))
+    return default
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: float = 0.0
+    bytes_by_kind: dict = dataclasses.field(
+        default_factory=lambda: {k: 0.0 for k in _COLLECTIVES})
+    count_by_kind: dict = dataclasses.field(
+        default_factory=lambda: {k: 0 for k in _COLLECTIVES})
+    dot_count: int = 0
+    while_trips: dict = dataclasses.field(default_factory=dict)
+
+
+def _dot_flops(op: _Op, opmap: dict[str, str]) -> float:
+    out_elems, _ = _shape_elems_bytes(op.result_type)
+    mm = re.search(r"lhs_contracting_dims=\{([\d,]+)\}", op.rest)
+    # lhs shape: inline type if present, else resolve the operand name
+    head = op.rest.split("lhs_", 1)[0]
+    inline = _SHAPE_RE.findall(head)
+    lhs_dims: list[int] = []
+    if inline and inline[0][1]:
+        lhs_dims = [int(d) for d in inline[0][1].split(",") if d]
+    else:
+        om = re.match(r"\s*%([\w\.\-]+)", op.rest)
+        if om and om.group(1) in opmap:
+            shapes = _SHAPE_RE.findall(opmap[om.group(1)])
+            if shapes and shapes[0][1]:
+                lhs_dims = [int(d) for d in shapes[0][1].split(",") if d]
+    if mm is None or not lhs_dims:
+        return 2.0 * out_elems  # degenerate
+    k = 1
+    for idx in mm.group(1).split(","):
+        i = int(idx)
+        if i < len(lhs_dims):
+            k *= lhs_dims[i]
+    return 2.0 * out_elems * k
+
+
+def analyze_hlo(text: str, default_group: int = 16) -> HloStats:
+    comps, entry = _split_computations(text)
+    stats = HloStats()
+    fused_names = set()
+    dus_rooted = set()  # fused computations whose ROOT is a dynamic-update-slice
+    for c in comps.values():
+        for op in c.ops:
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if m:
+                    fused_names.add(m.group(1))
+    for name in fused_names:
+        c = comps.get(name)
+        if c and c.ops and any(
+            o.kind == "dynamic-update-slice" for o in c.ops
+        ):
+            dus_rooted.add(name)
+
+    def walk(name: str, mult: float, seen: tuple = ()):
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return
+        opmap = {op.name: op.result_type for op in comp.ops}
+        for op in comp.ops:
+            if op.kind == "while":
+                b = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                trips = _trip_count(op, comps)
+                if b:
+                    stats.while_trips[b.group(1)] = trips
+                    walk(b.group(1), mult * trips, seen + (name,))
+                continue
+            if op.kind == "fusion":
+                m = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                if m:
+                    walk(m.group(1), mult, seen + (name,))
+            elif op.kind in ("call", "custom-call", "reduce", "reduce-window",
+                             "scatter", "sort", "map", "select-and-scatter"):
+                m = re.search(r"to_apply=%?([\w\.\-]+)", op.rest)
+                if m:
+                    walk(m.group(1), mult, seen + (name,))
+            elif op.kind == "conditional":
+                for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.rest):
+                    for br in m.group(1).split(","):
+                        walk(br.strip().lstrip("%"), mult, seen + (name,))
+            if op.kind == "dot":
+                stats.flops += mult * _dot_flops(op, opmap)
+                stats.dot_count += int(mult)
+            elif op.kind == "convolution":
+                # rough: 2 * out_elems * (kernel elems per output)
+                out_elems, _ = _shape_elems_bytes(op.result_type)
+                kshape = _SHAPE_RE.findall(op.rest)
+                kelems = 1
+                if len(kshape) >= 2 and kshape[1][1]:
+                    for d in kshape[1][1].split(","):
+                        kelems *= int(d)
+                stats.flops += mult * 2.0 * out_elems * kelems
+            elif op.kind in _COLLECTIVES or any(
+                op.kind == f"{c}-start" for c in _COLLECTIVES
+            ):
+                base = op.kind.replace("-start", "")
+                _, size = _shape_elems_bytes(op.result_type)
+                g = _group_size(op.rest, default_group)
+                if base == "all-reduce":
+                    wire = 2.0 * size * (g - 1) / max(g, 1)
+                elif base in ("all-gather", "reduce-scatter", "all-to-all"):
+                    wire = size * (g - 1) / max(g, 1)
+                else:
+                    wire = float(size)
+                stats.collective_bytes += mult * wire
+                stats.bytes_by_kind[base] += mult * wire
+                stats.count_by_kind[base] += int(mult)
+            # HBM byte proxy: only in non-fused computations (top level).
+            # In-place dynamic-update-slice (scan stacking, KV-cache row
+            # writes) writes a DISJOINT slice per loop iteration — count the
+            # full buffer once per loop, not once per trip.
+            if name not in fused_names and op.kind not in _NO_BYTES:
+                _, size = _shape_elems_bytes(op.result_type)
+                callee = None
+                if op.kind == "fusion":
+                    cm = re.search(r"calls=%?([\w\.\-]+)", op.rest)
+                    callee = cm.group(1) if cm else None
+                is_dus = (
+                    op.kind == "dynamic-update-slice"
+                    or "dynamic_update_slice" in op.rest
+                    or "dynamic-update-slice" in op.rest
+                    or (callee is not None and callee in dus_rooted)
+                )
+                eff = 1.0 if is_dus else mult
+                stats.hbm_bytes += eff * 2.0 * size
+
+    if entry is None:
+        for cname in comps:
+            if "main" in cname:
+                entry = cname
+                break
+    if entry:
+        walk(entry, 1.0)
+    return stats
+
+
+# ---------------------------------------------------------------------------
+# Roofline (TPU v5e per chip)
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # B/s
+ICI_BW = 50e9                 # B/s per link
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float               # per-device HLO FLOPs (post-SPMD module)
+    hbm_bytes: float           # per-device HBM traffic estimate
+    collective_bytes: float    # per-device wire bytes
+    chips: int
+    model_flops: float         # analytic 6*N*D (train) / 2*N*tokens (infer)
+    stats: Optional[HloStats] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        total = self.flops * self.chips
+        if total == 0:
+            return float("nan")
+        return self.model_flops / total
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_dev": self.flops,
+            "hbm_bytes_per_dev": self.hbm_bytes,
+            "collective_bytes_per_dev": self.collective_bytes,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "collective_counts": self.stats.count_by_kind if self.stats else {},
+            "collective_bytes_by_kind": self.stats.bytes_by_kind if self.stats else {},
+            "dot_count": self.stats.dot_count if self.stats else 0,
+            "while_trips": self.stats.while_trips if self.stats else {},
+        }
+
+
+# Back-compat shim for older callers/tests
+def parse_collectives(text: str, default_group: int = 16):
+    return analyze_hlo(text, default_group)

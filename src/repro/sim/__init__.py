@@ -1,0 +1,24 @@
+"""Discrete-event FaaS platform simulator (the paper's evaluation substrate)."""
+from .experiment import (
+    PAPER_PRICING,
+    PAPER_SPEC,
+    PASS_FRACTION,
+    DayResult,
+    WeekResult,
+    run_day,
+    run_pretest_phase,
+    run_week,
+)
+from .metrics import ArmSummary, cost_timeline, improvement
+from .platform import FaaSPlatform, FunctionSpec, RequestResult
+from .variation import VariationModel, paper_week
+from .workload import WorkflowSpec, make_chain, run_closed_loop, run_workflow
+
+__all__ = [
+    "PAPER_PRICING", "PAPER_SPEC", "PASS_FRACTION",
+    "DayResult", "WeekResult", "run_day", "run_pretest_phase", "run_week",
+    "ArmSummary", "cost_timeline", "improvement",
+    "FaaSPlatform", "FunctionSpec", "RequestResult",
+    "VariationModel", "paper_week",
+    "WorkflowSpec", "make_chain", "run_closed_loop", "run_workflow",
+]

@@ -1,0 +1,99 @@
+"""Metric aggregation for experiment arms (paper Figs 4-7)."""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.cost import WorkflowCost
+from .platform import FaaSPlatform, RequestResult
+
+
+@dataclasses.dataclass
+class ArmSummary:
+    """One experiment arm (baseline or Minos) on one day."""
+
+    name: str
+    n_successful: int
+    n_instance_starts: int
+    n_terminated: int
+    mean_analysis_ms: float
+    median_analysis_ms: float
+    mean_download_ms: float
+    mean_latency_ms: float
+    total_cost: float
+    cost_per_million: float
+    mean_retries: float
+    warm_pool_mean_speed: float
+    cost: WorkflowCost
+
+    @staticmethod
+    def from_platform(name: str, platform: FaaSPlatform, results: list[RequestResult]) -> "ArmSummary":
+        analysis = np.array([r.analysis_ms for r in results]) if results else np.array([np.nan])
+        download = np.array([r.download_ms for r in results]) if results else np.array([np.nan])
+        latency = np.array([r.latency_ms for r in results]) if results else np.array([np.nan])
+        retries = np.array([r.retries for r in results]) if results else np.array([0.0])
+        pool = platform.warm_pool_speeds
+        return ArmSummary(
+            name=name,
+            n_successful=len(results),
+            n_instance_starts=platform.instances_started,
+            n_terminated=platform.instances_terminated,
+            mean_analysis_ms=float(analysis.mean()),
+            median_analysis_ms=float(np.median(analysis)),
+            mean_download_ms=float(download.mean()),
+            mean_latency_ms=float(latency.mean()),
+            total_cost=platform.cost.total,
+            cost_per_million=platform.cost.cost_per_million_successful(),
+            mean_retries=float(retries.mean()),
+            warm_pool_mean_speed=float(np.mean(pool)) if pool else float("nan"),
+            cost=platform.cost,
+        )
+
+
+def improvement(baseline: float, treatment: float) -> float:
+    """Relative improvement (positive = treatment better/lower)."""
+    return (baseline - treatment) / baseline
+
+
+def cost_timeline(
+    results: list[RequestResult],
+    cost: WorkflowCost,
+    window_end_ms: float,
+    n_points: int = 200,
+    termination_events: list[tuple[float, float]] | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Running average cost per successful request over elapsed time (Fig 7).
+
+    Cost accrues time-locally: each successful request is billed at its
+    completion; each terminated instance is billed at crash time. This
+    reproduces the paper's shape — Minos more expensive in the first ~200 s
+    (cold-start termination burst), crossing under the baseline later."""
+    if not results:
+        return np.array([]), np.array([])
+    order = np.argsort([r.t_completed_ms for r in results])
+    times = np.array([results[i].t_completed_ms for i in order])
+    per_req = np.array(
+        [
+            cost.pricing.cost_per_invocation
+            + cost.pricing.cost_per_ms * (results[i].download_ms + results[i].analysis_ms)
+            for i in order
+        ]
+    )
+    grid = np.linspace(times[0], window_end_ms, n_points)
+    idx = np.clip(np.searchsorted(times, grid, side="right"), 1, len(per_req))
+    cum_cost = np.cumsum(per_req)[idx - 1]
+    cum_n = np.arange(1, len(per_req) + 1)[idx - 1]
+    if termination_events:
+        t_term = np.array([t for t, _ in termination_events])
+        c_term = np.array(
+            [
+                cost.pricing.cost_per_invocation + cost.pricing.cost_per_ms * billed
+                for _, billed in termination_events
+            ]
+        )
+        o = np.argsort(t_term)
+        t_term, c_term = t_term[o], np.cumsum(c_term[o])
+        j = np.searchsorted(t_term, grid, side="right")
+        cum_cost = cum_cost + np.where(j > 0, c_term[np.clip(j - 1, 0, None)], 0.0)
+    return grid, cum_cost / cum_n

@@ -1,0 +1,330 @@
+"""Discrete-event FaaS platform simulator.
+
+Models the slice of platform behavior Minos interacts with:
+
+* an elastic supply of worker slots; each new instance draws a hidden
+  ``speed_factor`` from the day's :class:`VariationModel`;
+* cold-start latency before user code runs;
+* a per-function warm pool — idle instances are re-used LIFO (most recently
+  used first, matching observed FaaS behavior) and reclaimed after an idle
+  timeout;
+* one concurrent request per instance (GCF gen1 semantics);
+* the Minos path: on a cold start, the matmul probe runs concurrently with
+  the function's network-bound prepare phase; the instance then judges
+  itself against the elysium threshold and either proceeds, or re-queues
+  the invocation and crashes.
+
+Time unit: milliseconds of simulated time. The simulator is fully
+deterministic given a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.cost import Pricing, WorkflowCost
+from repro.core.lifecycle import FunctionInstance, InstanceState
+from repro.core.policy import MinosPolicy, Verdict
+from repro.core.queue import Invocation, InvocationQueue
+from .variation import VariationModel
+
+
+@dataclasses.dataclass(frozen=True)
+class FunctionSpec:
+    """A deployed function. Durations are at unit speed (speed_factor 1.0).
+
+    prepare is network-bound (does NOT scale with CPU speed); body is
+    CPU-bound (scales 1/speed). benchmark is CPU-bound and runs in parallel
+    with prepare on cold starts (paper Fig 2).
+    """
+
+    name: str
+    prepare_ms: float = 600.0
+    prepare_jitter: float = 0.10          # lognormal-ish network jitter
+    body_ms: float = 2000.0
+    body_jitter: float = 0.02             # residual (non-contention) noise
+    benchmark_ms: float = 300.0
+    benchmark_noise: float = 0.05         # probe observation noise (lognormal sigma)
+    cold_start_ms: float = 250.0
+    cold_start_jitter: float = 0.25
+    # co-tenancy drift: per-serve AR(1) correlation of an instance's
+    # (log-relative) speed. Neighbors on the worker node come and go, so a
+    # fast-at-probe-time instance regresses toward the day mean; 1.0 =
+    # frozen speeds (the idealized model).
+    contention_rho: float = 0.98
+    bill_cold_start: bool = True          # platform bills instance startup
+    requeue_overhead_ms: float = 30.0     # queue round-trip after a crash
+    idle_timeout_ms: float = 15 * 60 * 1000.0
+    # platform-initiated instance recycling: exponential lifetime mean (ms).
+    # FaaS platforms reclaim/rotate instances opportunistically; this churn
+    # is what keeps cold starts (and thus Minos terminations) flowing after
+    # the initial pool forms. None = instances live until idle-timeout.
+    recycle_lifetime_ms: float | None = 7 * 60 * 1000.0
+
+
+@dataclasses.dataclass
+class RequestResult:
+    invocation_id: int
+    t_submitted_ms: float
+    t_completed_ms: float
+    download_ms: float        # observed prepare duration
+    analysis_ms: float        # observed body duration
+    retries: int              # terminated instances this request caused
+    served_by_cold: bool      # final (serving) instance was a cold start
+    instance_speed: float
+    benchmark_ms: Optional[float] = None  # probe duration on serving instance
+
+    @property
+    def latency_ms(self) -> float:
+        return self.t_completed_ms - self.t_submitted_ms
+
+
+class _EventLoop:
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def at(self, t_ms: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t_ms, next(self._seq), fn))
+
+    def after(self, dt_ms: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + dt_ms, fn)
+
+    def run_until(self, t_end_ms: float) -> None:
+        while self._heap and self._heap[0][0] <= t_end_ms:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        self.now = max(self.now, t_end_ms)
+
+    def run_all(self, hard_limit_ms: float = float("inf")) -> None:
+        while self._heap and self._heap[0][0] <= hard_limit_ms:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+
+
+class FaaSPlatform:
+    """One function deployment on a simulated region."""
+
+    def __init__(
+        self,
+        spec: FunctionSpec,
+        variation: VariationModel,
+        policy: MinosPolicy,
+        pricing: Pricing,
+        seed: int = 0,
+        online_controller=None,
+    ) -> None:
+        """online_controller: an OnlineElysiumController (paper §IV future
+        work, implemented here): every cold-start probe result is reported
+        to it and the effective elysium threshold follows its estimate —
+        the platform keeps working (stale threshold) if it dies."""
+        self.spec = spec
+        self.variation = variation
+        self.policy = policy
+        self.online_controller = online_controller
+        self.pricing = pricing
+        self.rng = np.random.RandomState(seed)
+        self.loop = _EventLoop()
+        self.queue = InvocationQueue()
+        self.warm_pool: list[FunctionInstance] = []   # idle WARM instances (LIFO)
+        self.cost = WorkflowCost(pricing)
+        self.results: list[RequestResult] = []
+        self.benchmark_observations: list[float] = []  # all cold-start probe durations
+        self.instances_started = 0
+        self.instances_terminated = 0
+        self._recycle_deadline: dict[int, float] = {}
+        self.termination_events: list[tuple[float, float]] = []  # (t_ms, billed_ms)
+
+    # ------------------------------------------------------------------
+    def submit(self, payload, on_complete: Callable[[RequestResult], None] | None = None) -> None:
+        inv = Invocation(payload={"on_complete": on_complete, "user": payload},
+                         enqueued_at_ms=self.loop.now)
+        inv.first_enqueued_at_ms = self.loop.now
+        self.queue.push(inv, self.loop.now)
+        self.loop.after(0.0, self._dispatch)
+
+    # ------------------------------------------------------------------
+    def _take_warm(self) -> Optional[FunctionInstance]:
+        now = self.loop.now
+        # reclaim idle-expired and platform-recycled instances
+        self.warm_pool = [
+            i for i in self.warm_pool
+            if not i.maybe_expire(now) and not self._recycled(i, now)
+        ]
+        if self.warm_pool:
+            return self.warm_pool.pop()  # LIFO: most recently used first
+        return None
+
+    def _recycled(self, inst: FunctionInstance, now: float) -> bool:
+        deadline = self._recycle_deadline.get(inst.instance_id)
+        if deadline is not None and now >= deadline:
+            inst.state = InstanceState.EXPIRED
+            return True
+        return False
+
+    def _dispatch(self) -> None:
+        if len(self.queue) == 0:
+            return
+        inv = self.queue.pop()
+        warm = self._take_warm()
+        if warm is not None:
+            self._run_on_warm(inv, warm)
+        else:
+            self._cold_start(inv)
+
+    # ------------------------------------------------------------------
+    def _sample_jitter(self, scale: float) -> float:
+        if scale <= 0.0:
+            return 1.0
+        return float(np.exp(self.rng.normal(0.0, scale)))
+
+    def _drift_speed(self, inst: FunctionInstance) -> None:
+        """Co-tenancy drift (AR(1) on log-relative speed): the benchmark
+        certified the instance's speed at cold-start time, but node
+        neighbors change, so the advantage decays toward the day mean."""
+        rho = self.spec.contention_rho
+        if rho >= 1.0:
+            return
+        import math
+        day = self.variation.day_factor * self.variation.diurnal(self.loop.now)
+        log_rel = math.log(inst.speed_factor / day)
+        noise = self.rng.normal(0.0, self.variation.sigma)
+        log_rel = rho * log_rel + math.sqrt(1.0 - rho * rho) * noise
+        inst.speed_factor = day * math.exp(log_rel)
+
+    def _run_on_warm(self, inv: Invocation, inst: FunctionInstance) -> None:
+        spec = self.spec
+        t0 = self.loop.now
+        self._drift_speed(inst)
+        download = spec.prepare_ms * self._sample_jitter(spec.prepare_jitter)
+        analysis = spec.body_ms * self._sample_jitter(spec.body_jitter) / inst.speed_factor
+        duration = download + analysis
+
+        def _complete() -> None:
+            inst.serve(self.loop.now)
+            self.cost.record_reused(duration)
+            self.warm_pool.append(inst)
+            self._finish(inv, t0, download, analysis, served_by_cold=False,
+                         speed=inst.speed_factor, bench=None)
+            self._dispatch()
+
+        self.loop.after(duration, _complete)
+
+    def _cold_start(self, inv: Invocation) -> None:
+        spec = self.spec
+        t0 = self.loop.now
+        self.instances_started += 1
+        speed = self.variation.sample_speed(self.rng, t_ms=self.loop.now)
+        inst = FunctionInstance(
+            speed_factor=speed,
+            created_at_ms=t0,
+            idle_timeout_ms=spec.idle_timeout_ms,
+        )
+        if spec.recycle_lifetime_ms is not None:
+            self._recycle_deadline[inst.instance_id] = t0 + float(
+                self.rng.exponential(spec.recycle_lifetime_ms)
+            )
+        cold = spec.cold_start_ms * self._sample_jitter(spec.cold_start_jitter)
+        download = spec.prepare_ms * self._sample_jitter(spec.prepare_jitter)
+
+        billed_cold = cold if spec.bill_cold_start else 0.0
+
+        do_benchmark = self.policy.should_benchmark(inv.retry_count, is_cold_start=True)
+        if not do_benchmark:
+            # baseline arm, or emergency exit: run the body directly
+            inst.accept_without_benchmark()  # FORCED_PASS / baseline accept
+            analysis = spec.body_ms * self._sample_jitter(spec.body_jitter) / speed
+            duration = download + analysis
+
+            def _complete_direct() -> None:
+                inst.serve(self.loop.now)
+                self.cost.record_passed(billed_cold + duration)
+                self.warm_pool.append(inst)
+                self._finish(inv, t0, download, analysis, served_by_cold=True,
+                             speed=speed, bench=None)
+                self._dispatch()
+
+            self.loop.after(cold + duration, _complete_direct)
+            return
+
+        # Minos path: probe runs in parallel with the download. The probe
+        # observes speed with noise (it is short), so selection is imperfect.
+        bench = inst.run_benchmark(spec.benchmark_ms) * self._sample_jitter(
+            spec.benchmark_noise
+        )
+        inst.benchmark_result = bench
+        self.benchmark_observations.append(bench)
+        policy = self.policy
+        if self.online_controller is not None:
+            # §IV: both passing AND failing probes are reported (otherwise
+            # the estimate is survivor-biased); the instance judges against
+            # the controller's latest published threshold.
+            self.online_controller.report(bench)
+            import dataclasses as _dc
+            policy = _dc.replace(
+                self.policy, elysium_threshold=self.online_controller.threshold
+            )
+        verdict = inst.judge(policy, inv.retry_count)
+        if verdict is Verdict.TERMINATE:
+            # judged as soon as the probe finishes; requeue + crash.
+            # Billed: startup + probe wall time (download is torn down with
+            # the instance; the platform bills active instance time).
+            self.instances_terminated += 1
+            billed = billed_cold + bench
+
+            def _crash() -> None:
+                self.cost.record_terminated(billed)
+                self.termination_events.append((self.loop.now, billed))
+                self.queue.requeue(inv, self.loop.now)
+                self.loop.after(self.spec.requeue_overhead_ms, self._dispatch)
+
+            self.loop.after(cold + bench, _crash)
+            return
+
+        # passed (or forced): body starts once BOTH download and probe done
+        analysis = spec.body_ms * self._sample_jitter(spec.body_jitter) / speed
+        ready = max(download, bench)
+        duration = ready + analysis
+
+        def _complete_pass() -> None:
+            inst.serve(self.loop.now)
+            self.cost.record_passed(billed_cold + duration)
+            self.warm_pool.append(inst)
+            self._finish(inv, t0, download, analysis, served_by_cold=True,
+                         speed=speed, bench=bench)
+            self._dispatch()
+
+        self.loop.after(cold + duration, _complete_pass)
+
+    # ------------------------------------------------------------------
+    def _finish(
+        self, inv: Invocation, t0: float, download: float, analysis: float,
+        *, served_by_cold: bool, speed: float, bench: Optional[float],
+    ) -> None:
+        res = RequestResult(
+            invocation_id=inv.invocation_id,
+            t_submitted_ms=inv.first_enqueued_at_ms or t0,
+            t_completed_ms=self.loop.now,
+            download_ms=download,
+            analysis_ms=analysis,
+            retries=inv.terminations_experienced,
+            served_by_cold=served_by_cold,
+            instance_speed=speed,
+            benchmark_ms=bench,
+        )
+        self.results.append(res)
+        cb = inv.payload.get("on_complete")
+        if cb is not None:
+            cb(res)
+
+    # ------------------------------------------------------------------
+    @property
+    def warm_pool_speeds(self) -> list[float]:
+        return [i.speed_factor for i in self.warm_pool if i.state is InstanceState.WARM]

@@ -1,0 +1,56 @@
+"""Integration: the multi-pod dry-run lowers + compiles in a subprocess
+(device count is locked at first jax init, so the 512-device environment
+must be a fresh interpreter)."""
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def _run(*args: str) -> subprocess.CompletedProcess:
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+           "HOME": "/root"}
+    import os
+    env.update({k: v for k, v in os.environ.items() if k not in env})
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args],
+        capture_output=True, text=True, timeout=900, env=env, cwd=REPO,
+    )
+
+
+@pytest.mark.slow
+def test_dryrun_single_combo_compiles():
+    r = _run("--arch", "qwen3-0.6b", "--shape", "decode_32k")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "OK   qwen3-0.6b x decode_32k" in r.stdout
+    res = json.loads(
+        (REPO / "benchmarks/results/qwen3-0.6b_decode_32k_1pod.json").read_text()
+    )
+    assert res["status"] == "ok"
+    assert res["chips"] == 256
+    rf = res["roofline"]
+    assert rf["flops_per_dev"] > 0
+    assert rf["bottleneck"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_compiles():
+    r = _run("--arch", "granite-moe-1b-a400m", "--shape", "long_500k",
+             "--multi-pod", "--tag", "itest")
+    assert r.returncode == 0, r.stdout + r.stderr
+    res = json.loads(
+        (REPO / "benchmarks/results/granite-moe-1b-a400m_long_500k_2pod_itest.json").read_text()
+    )
+    assert res["chips"] == 512
+
+
+@pytest.mark.slow
+def test_dryrun_whisper_long_skipped():
+    r = _run("--arch", "whisper-small", "--shape", "long_500k")
+    assert r.returncode == 0
+    assert "SKIP" in r.stdout

@@ -1,0 +1,93 @@
+"""Elysium threshold: pre-testing, online controller, optimal pass fraction."""
+import hypothesis
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+
+from repro.core.elysium import (
+    OnlineElysiumController,
+    optimal_pass_fraction,
+    pretest_threshold,
+    run_pretest,
+)
+from repro.sim.variation import VariationModel
+
+
+def test_pretest_is_quantile():
+    xs = np.arange(1, 101, dtype=float)  # 1..100
+    thr = pretest_threshold(xs, pass_fraction=0.4)
+    # 40% of durations at or below the threshold pass
+    assert np.mean(xs <= thr) == pytest.approx(0.4, abs=0.01)
+
+
+@hypothesis.given(
+    st.lists(st.floats(1.0, 1e4, allow_nan=False), min_size=10, max_size=500),
+    st.floats(0.1, 0.9),
+)
+@hypothesis.settings(deadline=None, max_examples=40)
+def test_pretest_pass_rate_property(xs, pf):
+    """Property: the threshold admits ~pf of the pre-test population."""
+    thr = pretest_threshold(xs, pass_fraction=pf)
+    rate = np.mean(np.asarray(xs) <= thr)
+    assert rate >= pf - 1.5 / len(xs) - 1e-9
+
+
+def test_run_pretest_report():
+    rs = np.random.RandomState(0)
+    rep = run_pretest(rs.lognormal(5, 0.3, 400), pass_fraction=0.4)
+    assert rep.n_samples == 400
+    assert rep.p50 < rep.p90
+    assert rep.threshold < rep.p50  # 40th pct below the median
+
+
+def test_online_controller_tracks_quantile():
+    rs = np.random.RandomState(1)
+    ctrl = OnlineElysiumController(pass_fraction=0.4, republish_every=16,
+                                   smoothing_alpha=1.0)
+    xs = rs.lognormal(0, 0.4, 4000) * 100
+    for x in xs:
+        ctrl.report(x)
+    true = np.quantile(xs, 0.4)
+    assert abs(ctrl.threshold - true) / true < 0.05
+    assert abs(ctrl.population_mean - xs.mean()) / xs.mean() < 1e-6
+
+
+def test_online_controller_adapts_to_drift():
+    """Platform slows down 30% mid-stream; the threshold follows (the §IV
+    argument for online recalculation)."""
+    rs = np.random.RandomState(2)
+    ctrl = OnlineElysiumController(pass_fraction=0.4, republish_every=8,
+                                   smoothing_alpha=0.5)
+    for x in rs.lognormal(0, 0.2, 2000) * 100:
+        ctrl.report(x)
+    before = ctrl.threshold
+    for x in rs.lognormal(0, 0.2, 6000) * 130:
+        ctrl.report(x)
+    after = ctrl.threshold
+    assert after > before * 1.1
+
+
+def test_controller_requires_data_or_initial():
+    ctrl = OnlineElysiumController()
+    with pytest.raises(ValueError):
+        _ = ctrl.threshold
+    ctrl2 = OnlineElysiumController(initial_threshold=123.0)
+    assert ctrl2.threshold == 123.0
+
+
+def test_optimal_pass_fraction_tradeoff():
+    """§II-A: with many reuses, selecting harder (small f) wins; with a
+    one-shot workload, the benchmark waste dominates and f -> 1 is optimal."""
+    vm = VariationModel(sigma=0.15)
+
+    def speedup(f):
+        return vm.top_fraction_mean_speed(f) / vm.mean_speed
+
+    harsh = optimal_pass_fraction(
+        benchmark_ms=300, body_ms=2000, expected_reuses=200,
+        speedup_at_fraction=speedup)
+    lax_ = optimal_pass_fraction(
+        benchmark_ms=300, body_ms=500, expected_reuses=0,
+        speedup_at_fraction=speedup)
+    assert harsh < lax_
+    assert lax_ >= 0.9

@@ -1,0 +1,115 @@
+"""Online estimators: exactness (Welford), convergence (P²), and the
+Python/JAX implementations agreeing — including hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.estimators import (
+    P2Quantile,
+    Welford,
+    p2_init,
+    p2_update,
+    p2_value,
+    welford_init,
+    welford_merge,
+    welford_std,
+    welford_update,
+)
+
+finite_floats = st.floats(min_value=-1e6, max_value=1e6, allow_nan=False)
+
+
+@hypothesis.given(st.lists(finite_floats, min_size=2, max_size=200))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_welford_matches_numpy(xs):
+    w = Welford()
+    w.update_many(xs)
+    assert w.count == len(xs)
+    np.testing.assert_allclose(w.mean, np.mean(xs), rtol=1e-9, atol=1e-6)
+    np.testing.assert_allclose(w.std, np.std(xs, ddof=1), rtol=1e-7, atol=1e-5)
+
+
+@hypothesis.given(
+    st.lists(finite_floats, min_size=1, max_size=80),
+    st.lists(finite_floats, min_size=1, max_size=80),
+)
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_welford_merge_equals_concat(a, b):
+    wa, wb, wc = Welford(), Welford(), Welford()
+    wa.update_many(a)
+    wb.update_many(b)
+    wc.update_many(a + b)
+    merged = wa.merge(wb)
+    np.testing.assert_allclose(merged.mean, wc.mean, rtol=1e-8, atol=1e-6)
+    np.testing.assert_allclose(merged.m2, wc.m2, rtol=1e-6, atol=1e-3)
+
+
+def test_welford_jax_matches_python():
+    xs = np.random.RandomState(0).lognormal(0, 0.4, 1000).astype(np.float32)
+    w = Welford()
+    w.update_many(xs)
+    st_ = welford_init()
+    st_ = jax.lax.scan(lambda s, x: (welford_update(s, x), None), st_, jnp.asarray(xs))[0]
+    np.testing.assert_allclose(float(st_.mean), w.mean, rtol=1e-4)
+    np.testing.assert_allclose(float(welford_std(st_)), w.std, rtol=1e-3)
+
+
+def test_welford_merge_jax():
+    xs = np.random.RandomState(1).normal(5, 2, 400).astype(np.float32)
+    sa = welford_init()
+    sb = welford_init()
+    for x in xs[:150]:
+        sa = welford_update(sa, jnp.float32(x))
+    for x in xs[150:]:
+        sb = welford_update(sb, jnp.float32(x))
+    m = welford_merge(sa, sb)
+    np.testing.assert_allclose(float(m.mean), xs.mean(), rtol=1e-4)
+
+
+@pytest.mark.parametrize("p", [0.25, 0.5, 0.6, 0.9])
+def test_p2_converges(p):
+    rs = np.random.RandomState(42)
+    xs = rs.lognormal(0.0, 0.5, 8000)
+    est = P2Quantile(p)
+    est.update_many(xs)
+    true = np.quantile(xs, p)
+    assert abs(est.value - true) / true < 0.03, (est.value, true)
+
+
+def test_p2_small_sample_exact():
+    est = P2Quantile(0.5)
+    for x in [5.0, 1.0, 3.0]:
+        est.update(x)
+    assert est.value == 3.0  # exact median of 3 samples
+
+
+def test_p2_jax_matches_python():
+    rs = np.random.RandomState(7)
+    xs = rs.gamma(2.0, 1.5, 5000).astype(np.float32)
+    py = P2Quantile(0.6)
+    py.update_many(xs)
+    st_ = p2_init(0.6)
+    st_ = jax.lax.scan(lambda s, x: (p2_update(s, x), None), st_, jnp.asarray(xs))[0]
+    true = np.quantile(xs, 0.6)
+    assert abs(float(p2_value(st_)) - true) / true < 0.03
+    assert abs(float(p2_value(st_)) - py.value) / py.value < 0.02
+
+
+@hypothesis.given(st.lists(st.floats(min_value=0.01, max_value=1e4,
+                                     allow_nan=False), min_size=5, max_size=300))
+@hypothesis.settings(deadline=None, max_examples=30)
+def test_p2_value_within_observed_range(xs):
+    """P² estimate must always lie inside [min, max] of the data."""
+    est = P2Quantile(0.6)
+    est.update_many(xs)
+    assert min(xs) - 1e-9 <= est.value <= max(xs) + 1e-9
+
+
+def test_p2_rejects_bad_quantile():
+    with pytest.raises(ValueError):
+        P2Quantile(0.0)
+    with pytest.raises(ValueError):
+        P2Quantile(1.0)

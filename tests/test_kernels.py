@@ -1,0 +1,102 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.matmul_probe import matmul
+
+
+def _rand(shape, dtype, seed):
+    x = np.random.RandomState(seed).randn(*shape)
+    return jnp.asarray(x, dtype)
+
+
+TOL = {jnp.float32: 2e-3, jnp.bfloat16: 5e-2}
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 512, 128), (256, 1024, 256), (128, 128, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes(m, k, n, dtype):
+    a, b = _rand((m, k), dtype, 0), _rand((k, n), dtype, 1)
+    out = matmul(a, b, interpret=True)
+    want = ref.matmul_ref(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        rtol=TOL[dtype], atol=TOL[dtype] * 10,
+    )
+
+
+def test_matmul_padding_path():
+    """ops.matmul pads ragged shapes up to block multiples."""
+    a, b = _rand((100, 300), jnp.float32, 2), _rand((300, 77), jnp.float32, 3)
+    out = ops.matmul(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(a) @ np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("batch,qh,kvh,seq,d", [
+    (1, 4, 4, 128, 64),     # MHA
+    (2, 8, 2, 256, 64),     # GQA 4:1
+    (2, 4, 1, 128, 128),    # MQA
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(batch, qh, kvh, seq, d, causal):
+    q = _rand((batch, qh, seq, d), jnp.float32, 0)
+    k = _rand((batch, kvh, seq, d), jnp.float32, 1)
+    v = _rand((batch, kvh, seq, d), jnp.float32, 2)
+    out = flash_attention(q, k, v, causal=causal, block_q=64, block_k=64, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_flash_attention_bf16():
+    q = _rand((1, 4, 128, 64), jnp.bfloat16, 0)
+    k = _rand((1, 2, 128, 64), jnp.bfloat16, 1)
+    v = _rand((1, 2, 128, 64), jnp.bfloat16, 2)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(want, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+@pytest.mark.parametrize("batch,qh,kvh,S,d,block_k", [
+    (2, 4, 2, 512, 64, 256),
+    (1, 8, 8, 1024, 128, 128),
+    (3, 4, 1, 256, 64, 64),
+])
+def test_decode_attention_sweep(batch, qh, kvh, S, d, block_k):
+    q = _rand((batch, qh, 1, d), jnp.float32, 0)
+    kc = _rand((batch, kvh, S, d), jnp.float32, 1)
+    vc = _rand((batch, kvh, S, d), jnp.float32, 2)
+    lengths = jnp.asarray(
+        np.random.RandomState(3).randint(1, S + 1, size=batch), jnp.int32
+    )
+    out = decode_attention(q, kc, vc, lengths, block_k=block_k, interpret=True)
+    want = ref.decode_attention_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_attention_skips_empty_blocks():
+    """length=1: only the first block contributes; result equals attending
+    to position 0 only."""
+    q = _rand((1, 2, 1, 64), jnp.float32, 0)
+    kc = _rand((1, 2, 512, 64), jnp.float32, 1)
+    vc = _rand((1, 2, 512, 64), jnp.float32, 2)
+    out = decode_attention(q, kc, vc, jnp.array([1], jnp.int32), interpret=True)
+    np.testing.assert_allclose(
+        np.asarray(out)[0, :, 0], np.asarray(vc)[0, :, 0], rtol=1e-4, atol=1e-4
+    )
+
+
+def test_ops_fallback_matches_kernel():
+    """use_pallas=False (the pjit-safe path) agrees with the kernel path."""
+    q = _rand((1, 4, 128, 64), jnp.float32, 0)
+    k = _rand((1, 2, 128, 64), jnp.float32, 1)
+    v = _rand((1, 2, 128, 64), jnp.float32, 2)
+    a = ops.flash_attention(q, k, v, use_pallas=True)
+    b = ops.flash_attention(q, k, v, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-3, atol=2e-3)

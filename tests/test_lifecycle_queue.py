@@ -1,0 +1,70 @@
+"""Instance lifecycle state machine + invocation queue semantics."""
+import pytest
+
+from repro.core.lifecycle import FunctionInstance, InstanceState, LifecycleError
+from repro.core.policy import MinosPolicy, Verdict
+from repro.core.queue import Invocation, InvocationQueue
+
+
+def test_happy_path_cold_to_warm():
+    inst = FunctionInstance(speed_factor=2.0)
+    assert inst.state is InstanceState.COLD
+    obs = inst.run_benchmark(100.0)
+    assert obs == pytest.approx(50.0)
+    assert inst.state is InstanceState.BENCHMARKING
+    v = inst.judge(MinosPolicy(elysium_threshold=60.0), retry_count=0)
+    assert v is Verdict.PASS and inst.is_warm
+    inst.serve(now_ms=1000.0)
+    assert inst.invocations_served == 1
+
+
+def test_slow_instance_terminates():
+    inst = FunctionInstance(speed_factor=0.5)
+    inst.run_benchmark(100.0)
+    v = inst.judge(MinosPolicy(elysium_threshold=150.0), retry_count=0)
+    assert v is Verdict.TERMINATE and inst.is_dead
+    with pytest.raises(LifecycleError):
+        inst.serve(0.0)
+
+
+def test_benchmark_only_from_cold():
+    inst = FunctionInstance(speed_factor=1.0)
+    inst.run_benchmark(10.0)
+    with pytest.raises(LifecycleError):
+        inst.run_benchmark(10.0)
+
+
+def test_idle_expiry():
+    inst = FunctionInstance(speed_factor=1.0, idle_timeout_ms=100.0)
+    inst.accept_without_benchmark()
+    inst.serve(now_ms=0.0)
+    assert not inst.maybe_expire(now_ms=50.0)
+    assert inst.maybe_expire(now_ms=151.0)
+    assert inst.state is InstanceState.EXPIRED
+
+
+def test_queue_fifo_and_requeue_counts():
+    q = InvocationQueue()
+    a, b = Invocation(payload=1), Invocation(payload=2)
+    q.push(a, now_ms=0.0)
+    q.push(b, now_ms=1.0)
+    first = q.pop()
+    assert first.payload == 1
+    q.requeue(first, now_ms=2.0)
+    assert first.retry_count == 1
+    assert first.terminations_experienced == 1
+    assert q.total_requeued == 1
+    assert q.pop().payload == 2
+    assert q.pop().payload == 1
+    with pytest.raises(IndexError):
+        q.pop()
+
+
+def test_first_enqueued_preserved_across_requeues():
+    q = InvocationQueue()
+    inv = Invocation(payload=None)
+    q.push(inv, now_ms=5.0)
+    inv = q.pop()
+    t0 = inv.first_enqueued_at_ms
+    q.requeue(inv, now_ms=100.0)
+    assert q.pop().first_enqueued_at_ms == t0

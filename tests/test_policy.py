@@ -1,0 +1,117 @@
+"""MinosPolicy, emergency exit, cost model (paper §II-A, Fig 3)."""
+import hypothesis
+import hypothesis.strategies as st
+import pytest
+
+from repro.core.cost import Pricing, WorkflowCost, total_cost
+from repro.core.policy import (
+    MinosPolicy,
+    Verdict,
+    expected_cold_start_attempts,
+    retries_for_runaway_budget,
+    runaway_probability,
+)
+
+
+def test_judge_pass_terminate():
+    pol = MinosPolicy(elysium_threshold=100.0)
+    assert pol.judge(99.0, 0) is Verdict.PASS
+    assert pol.judge(100.0, 0) is Verdict.PASS   # inclusive
+    assert pol.judge(101.0, 0) is Verdict.TERMINATE
+
+
+def test_higher_is_better():
+    pol = MinosPolicy(elysium_threshold=10.0, higher_is_better=True)
+    assert pol.judge(11.0, 0) is Verdict.PASS
+    assert pol.judge(9.0, 0) is Verdict.TERMINATE
+
+
+def test_emergency_exit():
+    """Paper §II-A: past max_retries the instance is marked good WITHOUT
+    benchmarking, preventing infinite requeue loops."""
+    pol = MinosPolicy(elysium_threshold=100.0, max_retries=5)
+    assert pol.judge(1e9, 5) is Verdict.FORCED_PASS
+    assert pol.judge(1e9, 6) is Verdict.FORCED_PASS
+    assert not pol.should_benchmark(retry_count=5, is_cold_start=True)
+    assert pol.should_benchmark(retry_count=4, is_cold_start=True)
+
+
+def test_warm_instances_never_rebenchmark():
+    pol = MinosPolicy(elysium_threshold=100.0)
+    assert not pol.should_benchmark(retry_count=0, is_cold_start=False)
+
+
+def test_disabled_policy_passes_everything():
+    pol = MinosPolicy(elysium_threshold=0.0, enabled=False)
+    assert pol.judge(1e12, 0) is Verdict.PASS
+    assert not pol.should_benchmark(0, True)
+
+
+def test_runaway_probability_paper_example():
+    """Paper: at 40% termination rate, ~1% chance of 5 consecutive fails."""
+    assert runaway_probability(0.4, 5) == pytest.approx(0.01024)
+    assert runaway_probability(0.4, 8) < 0.01
+
+
+@hypothesis.given(st.floats(0.05, 0.95), st.floats(0.001, 0.2))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_retries_budget_inverse(rate, budget):
+    r = retries_for_runaway_budget(rate, budget)
+    assert runaway_probability(rate, r) <= budget + 1e-12
+    assert r == 1 or runaway_probability(rate, r - 1) > budget
+
+
+@hypothesis.given(st.floats(0.0, 0.99))
+@hypothesis.settings(deadline=None, max_examples=50)
+def test_expected_attempts_bounds(rate):
+    e = expected_cold_start_attempts(rate, max_retries=5)
+    assert 1.0 <= e <= 6.0 + 1e-9
+    # geometric limit when unbounded retries
+    if rate < 0.9:
+        assert e <= 1.0 / (1.0 - rate) + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+def test_fig3_cost_model():
+    p = Pricing(cost_per_invocation=1.0, cost_per_ms=0.1)
+    c = total_cost(p, d_term=[100, 50], d_pass=[1000], d_reuse=[900, 800])
+    assert c == pytest.approx(0.1 * 2850 + 5.0)
+
+
+def test_workflow_cost_accumulates_like_fig3():
+    p = Pricing.gcf(256)
+    wc = WorkflowCost(p)
+    wc.record_terminated(120)
+    wc.record_passed(2000)
+    wc.record_reused(1800)
+    wc.record_reused(1700)
+    assert wc.n_invocations == 4
+    assert wc.n_successful == 3
+    assert wc.total == pytest.approx(total_cost(p, [120], [2000], [1800, 1700]))
+
+
+def test_gcf_invocation_breakeven_shrinks_with_tier():
+    """Paper §II-A: the invocation fee is worth far fewer ms of execution on
+    bigger tiers (<3 ms at 32 GB)."""
+    small = Pricing.gcf(128)
+    big = Pricing.gcf(32768)
+    assert small.invocation_break_even_ms > big.invocation_break_even_ms
+    assert big.invocation_break_even_ms < 3.0
+
+
+def test_cost_merge():
+    p = Pricing.gcf(256)
+    a, b = WorkflowCost(p), WorkflowCost(p)
+    a.record_passed(100)
+    b.record_terminated(50)
+    m = a.merge(b)
+    assert m.n_invocations == 2 and m.total == pytest.approx(a.total + b.total)
+
+
+def test_unknown_tier_raises():
+    with pytest.raises(ValueError):
+        Pricing.gcf(333)

@@ -1,0 +1,174 @@
+"""Simulator behaviour + reproduction of the paper's measured effects."""
+import numpy as np
+import pytest
+
+from repro.core.cost import Pricing
+from repro.core.policy import MinosPolicy
+from repro.sim import (
+    PAPER_PRICING,
+    PAPER_SPEC,
+    FaaSPlatform,
+    FunctionSpec,
+    VariationModel,
+    make_chain,
+    run_closed_loop,
+    run_day,
+    run_week,
+    run_workflow,
+)
+from repro.sim.variation import paper_week
+
+
+def _quick_spec(**kw):
+    base = dict(
+        name="t", prepare_ms=300.0, body_ms=600.0, benchmark_ms=100.0,
+        cold_start_ms=50.0, recycle_lifetime_ms=None, contention_rho=1.0,
+        benchmark_noise=0.0,
+    )
+    base.update(kw)
+    return FunctionSpec(**base)
+
+
+def test_baseline_never_terminates():
+    plat = FaaSPlatform(
+        _quick_spec(), VariationModel(sigma=0.3),
+        MinosPolicy(elysium_threshold=0.0, enabled=False), PAPER_PRICING, seed=1,
+    )
+    run_closed_loop(plat, n_vus=4, duration_ms=60_000)
+    assert plat.instances_terminated == 0
+    assert plat.cost.n_term == 0
+
+
+def test_minos_pool_is_faster_than_threshold():
+    """Invariant: every WARM instance passed the gate, so (noise-free) every
+    pool member's probe duration beat the threshold."""
+    thr = 100.0  # only speed >= 1.0 instances pass (probe work = 100ms)
+    plat = FaaSPlatform(
+        _quick_spec(), VariationModel(sigma=0.25),
+        MinosPolicy(elysium_threshold=thr, max_retries=10), PAPER_PRICING, seed=2,
+    )
+    run_closed_loop(plat, n_vus=4, duration_ms=120_000)
+    assert plat.instances_terminated > 0
+    for s in plat.warm_pool_speeds:
+        assert 100.0 / s <= thr + 1e-9
+
+
+def test_requests_never_lost():
+    """At-least-once: every submitted request completes despite terminations."""
+    plat = FaaSPlatform(
+        _quick_spec(), VariationModel(sigma=0.4),
+        MinosPolicy(elysium_threshold=80.0, max_retries=3), PAPER_PRICING, seed=3,
+    )
+    done = []
+    for i in range(25):
+        plat.submit({"i": i}, done.append)
+    plat.loop.run_all(hard_limit_ms=1e9)
+    assert len(done) == 25
+
+
+def test_emergency_exit_bounds_retries():
+    plat = FaaSPlatform(
+        _quick_spec(), VariationModel(sigma=0.2),
+        # impossible threshold: everything fails the benchmark
+        MinosPolicy(elysium_threshold=1e-6, max_retries=4), PAPER_PRICING, seed=4,
+    )
+    done = []
+    for i in range(10):
+        plat.submit({"i": i}, done.append)
+    plat.loop.run_all(hard_limit_ms=1e9)
+    assert len(done) == 10
+    assert all(r.retries <= 4 for r in done)
+
+
+def test_selected_pool_speed_converges_to_analytic():
+    """The Minos pool's mean speed approaches E[speed | top 40%]."""
+    vm = VariationModel(sigma=0.15)
+    thr = 100.0 / vm.speed_quantile(0.6)  # 60th-pct probe duration
+    plat = FaaSPlatform(
+        _quick_spec(body_ms=200.0), vm,
+        MinosPolicy(elysium_threshold=thr, max_retries=8), PAPER_PRICING, seed=5,
+    )
+    run_closed_loop(plat, n_vus=8, duration_ms=600_000)
+    analytic = vm.top_fraction_mean_speed(0.4)
+    speeds = [r.instance_speed for r in plat.results if not r.served_by_cold]
+    assert abs(np.mean(speeds) - analytic) / analytic < 0.05
+
+
+def test_day_reproduces_paper_bands_seed0():
+    """Day-level run lands inside the paper's observed ranges."""
+    vm = paper_week(seed=0)[0]
+    day = run_day(0, vm, seed=0, duration_ms=10 * 60 * 1000.0)
+    assert 0.0 < day.analysis_improvement < 0.20
+    assert day.minos.n_successful > 0.9 * day.baseline.n_successful
+
+
+@pytest.mark.slow
+def test_week_reproduces_paper_headline_numbers():
+    """Paper: analysis step 7.8% faster on average (range 4.3-13%); cost
+    ~0.9% cheaper overall (max day 3.3%); +2.3% successful requests with at
+    least one day not improving. Generous bands around those."""
+    wk = run_week(seed=0)
+    assert 0.04 < wk.overall_analysis_improvement < 0.14
+    for d in wk.days:
+        assert d.analysis_improvement > 0.0  # faster every day (Fig 4)
+    assert -0.01 < wk.overall_cost_saving < 0.04
+    assert max(d.cost_saving for d in wk.days) > 0.015
+    assert -0.02 < wk.overall_successful_delta < 0.06
+    assert min(d.successful_requests_delta for d in wk.days) < 0.02  # a weak day
+
+
+def test_workflow_chain_compounds():
+    """Longer workflows re-use the known-good pools more often — per-stage
+    analysis time of Minos beats baseline on the chained workload."""
+    vm = VariationModel(sigma=0.2)
+    pol = MinosPolicy(elysium_threshold=100.0 / vm.speed_quantile(0.6), max_retries=6)
+    base_pol = MinosPolicy(elysium_threshold=0, enabled=False)
+    specs = [_quick_spec(name=f"s{i}") for i in range(3)]
+    minos_wf = make_chain(specs, vm, pol, PAPER_PRICING, seed=7)
+    base_wf = make_chain(specs, vm, base_pol, PAPER_PRICING, seed=7)
+    m = run_workflow(minos_wf, n_items=120)
+    b = run_workflow(base_wf, n_items=120)
+    m_mean = np.mean([r.analysis_ms for stage in m for r in stage[30:]])
+    b_mean = np.mean([r.analysis_ms for stage in b for r in stage[30:]])
+    assert m_mean < b_mean
+
+
+def test_cost_timeline_monotone_time():
+    vm = paper_week(seed=0)[0]
+    day = run_day(0, vm, seed=0, duration_ms=5 * 60 * 1000.0)
+    t, c = day.timeline_minos
+    assert (np.diff(t) > 0).all()
+    assert np.isfinite(c).all()
+
+
+def test_online_controller_beats_stale_threshold_under_drift():
+    """§IV implemented: when the platform slows mid-experiment, the online
+    P²-threshold wastes fewer terminations than a stale pre-test."""
+    from repro.core import OnlineElysiumController
+    from repro.sim import PAPER_PRICING, PAPER_SPEC
+
+    vm0 = VariationModel(sigma=0.15)
+    thr = PAPER_SPEC.benchmark_ms / vm0.speed_quantile(0.6)
+
+    def run(online):
+        ctrl = (OnlineElysiumController(pass_fraction=0.4, republish_every=8,
+                                        smoothing_alpha=0.5,
+                                        initial_threshold=thr)
+                if online else None)
+        term, succ, cost = 0, 0, 0.0
+        for phase, df in enumerate((1.0, 0.75)):
+            vm = VariationModel(sigma=0.15, day_factor=df)
+            pol = MinosPolicy(elysium_threshold=(ctrl.threshold if ctrl else thr),
+                              max_retries=5)
+            plat = FaaSPlatform(PAPER_SPEC, vm, pol, PAPER_PRICING,
+                                seed=17 + phase, online_controller=ctrl)
+            res = run_closed_loop(plat, n_vus=10, duration_ms=6 * 60 * 1000.0)
+            term += plat.instances_terminated
+            succ += len(res)
+            cost += plat.cost.total
+        return term, succ, cost / succ
+
+    t_stale, s_stale, c_stale = run(False)
+    t_online, s_online, c_online = run(True)
+    assert t_online < t_stale          # fewer wasted terminations
+    assert c_online < c_stale * 1.02   # not more expensive

@@ -1,0 +1,136 @@
+"""Chunked recurrent cells vs naive per-step recurrences (the oracles)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.ssm import (
+    mlstm_chunked,
+    mlstm_step,
+    slstm_scan,
+    ssd_chunked,
+    ssd_step,
+)
+
+
+def _ssd_naive(x, dt, A, Bm, Cm, D):
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    y = np.zeros((B, S, H, P), np.float32)
+    h = np.zeros((B, H, N, P), np.float32)
+    for t in range(S):
+        a = np.exp(dt[:, t] * A[None, :])
+        h = h * a[..., None, None] + np.einsum(
+            "bn,bhp->bhnp", Bm[:, t], x[:, t] * dt[:, t][..., None])
+        y[:, t] = np.einsum("bn,bhnp->bhp", Cm[:, t], h) + x[:, t] * D[None, :, None]
+    return y, h
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (48, 16), (33, 8), (16, 64)])
+def test_ssd_chunked_matches_naive(S, chunk):
+    rs = np.random.RandomState(0)
+    B, H, P, N = 2, 3, 8, 5
+    x = rs.randn(B, S, H, P).astype(np.float32)
+    dt = np.abs(rs.randn(B, S, H)).astype(np.float32) * 0.5
+    A = -np.abs(rs.randn(H)).astype(np.float32)
+    Bm = rs.randn(B, S, N).astype(np.float32)
+    Cm = rs.randn(B, S, N).astype(np.float32)
+    D = rs.randn(H).astype(np.float32)
+    want_y, want_h = _ssd_naive(x, dt, A, Bm, Cm, D)
+    y, h = ssd_chunked(*map(jnp.asarray, (x, dt, A, Bm, Cm, D)), chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), want_y, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(h), want_h, rtol=3e-4, atol=3e-4)
+
+
+def test_ssd_step_chain_matches_chunked():
+    rs = np.random.RandomState(1)
+    B, S, H, P, N = 1, 12, 2, 4, 3
+    x = rs.randn(B, S, H, P).astype(np.float32)
+    dt = np.abs(rs.randn(B, S, H)).astype(np.float32)
+    A = -np.abs(rs.randn(H)).astype(np.float32)
+    Bm = rs.randn(B, S, N).astype(np.float32)
+    Cm = rs.randn(B, S, N).astype(np.float32)
+    D = np.zeros(H, np.float32)
+    y_c, h_c = ssd_chunked(*map(jnp.asarray, (x, dt, A, Bm, Cm, D)), chunk=4)
+    h = jnp.zeros((B, H, N, P))
+    ys = []
+    for t in range(S):
+        y, h = ssd_step(jnp.asarray(x[:, t]), jnp.asarray(dt[:, t]), jnp.asarray(A),
+                        jnp.asarray(Bm[:, t]), jnp.asarray(Cm[:, t]), jnp.asarray(D), h)
+        ys.append(np.asarray(y))
+    np.testing.assert_allclose(np.stack(ys, 1), np.asarray(y_c), rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_c), rtol=2e-4, atol=2e-4)
+
+
+def _mlstm_naive(q, k, v, ig, fg):
+    B, S, H, P = q.shape
+    scale = P**-0.5
+    C = np.zeros((B, H, P, P)); n = np.zeros((B, H, P)); m = np.full((B, H), -1e30)
+    out = np.zeros((B, S, H, P), np.float32)
+    for t in range(S):
+        logf = -np.logaddexp(0, -fg[:, t])
+        m_new = np.maximum(logf + m, ig[:, t])
+        f_s = np.exp(logf + m - m_new); i_s = np.exp(ig[:, t] - m_new)
+        C = C * f_s[..., None, None] + i_s[..., None, None] * k[:, t][..., :, None] * v[:, t][..., None, :]
+        n = n * f_s[..., None] + i_s[..., None] * k[:, t]
+        qf = q[:, t] * scale
+        num = np.einsum("bhp,bhpr->bhr", qf, C)
+        den = np.einsum("bhp,bhp->bh", qf, n)
+        out[:, t] = num / np.maximum(np.abs(den), np.exp(-m_new))[..., None]
+        m = m_new
+    return out, (C, n, m)
+
+
+@pytest.mark.parametrize("S,chunk", [(64, 16), (40, 16), (30, 8)])
+def test_mlstm_chunked_matches_naive(S, chunk):
+    rs = np.random.RandomState(2)
+    B, H, P = 2, 2, 8
+    q = rs.randn(B, S, H, P).astype(np.float32)
+    k = rs.randn(B, S, H, P).astype(np.float32)
+    v = rs.randn(B, S, H, P).astype(np.float32)
+    ig = rs.randn(B, S, H).astype(np.float32)
+    fg = rs.randn(B, S, H).astype(np.float32) + 2.0
+    want, (C, n, m) = _mlstm_naive(q, k, v, ig, fg)
+    got, (Cg, ng, mg) = mlstm_chunked(*map(jnp.asarray, (q, k, v, ig, fg)), chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=5e-4, atol=5e-4)
+    # states stored scaled by exp(-m): compare in true units
+    np.testing.assert_allclose(
+        np.asarray(Cg) * np.exp(np.asarray(mg))[..., None, None],
+        C * np.exp(m)[..., None, None], rtol=5e-3, atol=1e-5)
+
+
+@hypothesis.given(st.integers(1, 40), st.integers(2, 16))
+@hypothesis.settings(deadline=None, max_examples=10)
+def test_mlstm_step_equals_chunked_prefix(S, chunk):
+    """Property: running the per-token recurrence S times == chunked form
+    (any S, any chunk — exercises the ragged-padding path)."""
+    rs = np.random.RandomState(S * 100 + chunk)
+    B, H, P = 1, 2, 4
+    q = rs.randn(B, S, H, P).astype(np.float32)
+    k = rs.randn(B, S, H, P).astype(np.float32)
+    v = rs.randn(B, S, H, P).astype(np.float32)
+    ig = rs.randn(B, S, H).astype(np.float32)
+    fg = rs.randn(B, S, H).astype(np.float32) + 1.0
+    got, _ = mlstm_chunked(*map(jnp.asarray, (q, k, v, ig, fg)), chunk=chunk)
+    state = (jnp.zeros((B, H, P, P)), jnp.zeros((B, H, P)), jnp.full((B, H), -1e30))
+    outs = []
+    for t in range(S):
+        h, state = mlstm_step(*[jnp.asarray(a[:, t]) for a in (q, k, v, ig, fg)], state)
+        outs.append(np.asarray(h))
+    np.testing.assert_allclose(np.stack(outs, 1), np.asarray(got), rtol=2e-3, atol=2e-3)
+
+
+def test_slstm_state_carry():
+    """Scanning in two halves with carried state == one scan."""
+    rs = np.random.RandomState(3)
+    B, S, H, P = 2, 20, 2, 4
+    xg = (rs.randn(B, S, 4, H, P) * 0.5).astype(np.float32)
+    R = (rs.randn(4, H, P, P) * 0.1).astype(np.float32)
+    full, _ = slstm_scan(jnp.asarray(xg), jnp.asarray(R))
+    h1, st1 = slstm_scan(jnp.asarray(xg[:, :10]), jnp.asarray(R))
+    h2, _ = slstm_scan(jnp.asarray(xg[:, 10:]), jnp.asarray(R), state=st1)
+    np.testing.assert_allclose(
+        np.concatenate([np.asarray(h1), np.asarray(h2)], 1), np.asarray(full),
+        rtol=1e-5, atol=1e-5)

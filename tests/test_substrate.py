@@ -1,0 +1,114 @@
+"""Data pipeline, optimizer, schedules, checkpointing, serving engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.ckpt import restore, save
+from repro.configs.registry import get_smoke_config
+from repro.core.cost import Pricing
+from repro.core.policy import MinosPolicy
+from repro.data.pipeline import (
+    TokenStream,
+    linear_regression,
+    make_weather_csv,
+    parse_weather_csv,
+)
+from repro.optim.adamw import AdamW
+from repro.optim.schedule import warmup_cosine, warmup_linear
+
+
+def test_token_stream_deterministic_and_structured():
+    a = list(x for _, x in zip(range(2), TokenStream(128, 4, 32, seed=1)))
+    b = list(x for _, x in zip(range(2), TokenStream(128, 4, 32, seed=1)))
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x["tokens"], y["tokens"])
+    batch = a[0]
+    assert batch["tokens"].shape == (4, 32)
+    np.testing.assert_array_equal(batch["tokens"][:, 1:], batch["labels"][:, :-1])
+
+
+def test_weather_csv_roundtrip_and_regression():
+    csv = make_weather_csv(2000, seed=2)
+    X, y = parse_weather_csv(csv)
+    assert X.shape == (2000, 5)
+    coef = linear_regression(X, y)
+    np.testing.assert_allclose(coef[:4], [0.8, -3.0, 0.02, -0.1], atol=0.35)
+
+
+def test_adamw_converges_quadratic():
+    opt = AdamW(learning_rate=0.1, weight_decay=0.0)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+
+    @jax.jit
+    def step(p, s):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        return opt.update(g, s, p)
+
+    for _ in range(200):
+        params, state, m = step(params, state)
+    assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+
+def test_adamw_clips_grad_norm():
+    opt = AdamW(learning_rate=0.0, clip_norm=1.0)
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+    _, _, m = opt.update({"w": jnp.full(3, 100.0)}, state, params)
+    assert float(m["grad_norm"]) > 100.0  # reported pre-clip
+
+
+def test_mixed_precision_master_weights():
+    """bf16 params accumulate tiny updates via the fp32 master copy."""
+    opt = AdamW(learning_rate=1e-5, weight_decay=0.0)
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    state = opt.init(params)
+    for _ in range(3):
+        params, state, _ = opt.update({"w": jnp.ones(4, jnp.bfloat16)}, state, params)
+    master = state.master["w"]
+    assert master.dtype == jnp.float32
+    assert float(jnp.abs(master - 1.0).max()) > 0.0  # master moved
+
+
+def test_schedules():
+    lr = warmup_cosine(1e-3, 10, 100)
+    assert float(lr(0)) == 0.0
+    assert float(lr(10)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr(100)) == pytest.approx(1e-4, rel=1e-2)
+    lin = warmup_linear(1e-3, 10, 110)
+    assert float(lin(110)) == pytest.approx(0.0, abs=1e-9)
+
+
+def test_checkpoint_roundtrip_nested():
+    tree = {
+        "a": jnp.arange(6).reshape(2, 3),
+        "b": {"c": jnp.ones(4, jnp.bfloat16), "d": [jnp.zeros(2), jnp.ones(1)]},
+    }
+    save("/tmp/test_ck.npz", tree)
+    back = restore("/tmp/test_ck.npz", tree)
+    flat_a, flat_b = jax.tree.leaves(tree), jax.tree.leaves(back)
+    for x, y in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(x, np.float32), np.asarray(y, np.float32))
+
+
+def test_serving_engine_minos_improves_pool():
+    from repro.serving.engine import MinosServingEngine, ServeRequest
+
+    cfg = get_smoke_config("granite-moe-1b-a400m")
+    probe_work = 200.0
+    reqs = [ServeRequest(prompt=np.arange(4, dtype=np.int32), max_new_tokens=2,
+                         request_id=i) for i in range(6)]
+    base = MinosServingEngine(
+        cfg, MinosPolicy(elysium_threshold=0, enabled=False),
+        Pricing.tpu_chip_seconds(4), seed=5, probe_work_ms=probe_work)
+    gated = MinosServingEngine(
+        cfg, MinosPolicy(elysium_threshold=probe_work * 0.98, max_retries=6),
+        Pricing.tpu_chip_seconds(4), seed=5, probe_work_ms=probe_work)
+    rb = base.serve(list(reqs))
+    rg = gated.serve(list(reqs))
+    assert len(rb) == len(rg) == 6
+    for a, b in zip(rb, rg):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
+    # the gate only admits replicas with speed >= ~1.02
+    assert all(r.speed >= 1.0 for r in gated.pool)

@@ -1,0 +1,36 @@
+"""End-to-end behaviour: the complete Minos system on the paper's workload
+and the serving integration — the top-level acceptance tests."""
+import numpy as np
+
+from repro.core import MinosPolicy, Pricing
+from repro.sim import run_day
+from repro.sim.variation import paper_week
+
+
+def test_end_to_end_minos_beats_baseline_on_analysis_step():
+    """The core paper claim, end to end: pre-test -> elysium threshold ->
+    instance selection -> faster CPU-bound step, requests never lost."""
+    day = run_day(0, paper_week(seed=0)[0], seed=0,
+                  duration_ms=10 * 60 * 1000.0)
+    assert day.minos.mean_analysis_ms < day.baseline.mean_analysis_ms
+    assert day.minos.n_terminated > 0
+    assert day.minos.warm_pool_mean_speed > 1.0 or np.isnan(
+        day.minos.warm_pool_mean_speed)
+    assert day.elysium_threshold > 0
+
+
+def test_serving_integration_outputs_invariant():
+    """Minos gating is performance-transparent: identical model outputs."""
+    from repro.configs.registry import get_smoke_config
+    from repro.serving.engine import MinosServingEngine, ServeRequest
+
+    cfg = get_smoke_config("llama3.2-1b")
+    reqs = [ServeRequest(prompt=np.arange(6, dtype=np.int32) % cfg.vocab,
+                         max_new_tokens=3, request_id=i) for i in range(4)]
+    out = {}
+    for name, pol in (("base", MinosPolicy(0.0, enabled=False)),
+                      ("minos", MinosPolicy(200.0 * 0.95, max_retries=5))):
+        eng = MinosServingEngine(cfg, pol, Pricing.tpu_chip_seconds(1), seed=2)
+        out[name] = eng.serve(list(reqs))
+    for a, b in zip(out["base"], out["minos"]):
+        np.testing.assert_array_equal(a.tokens, b.tokens)
