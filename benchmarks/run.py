@@ -15,9 +15,10 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated benchmark names")
     args = ap.parse_args()
 
-    from . import figs, kernels_micro, roofline_table
+    from . import figs, kernels_micro, roofline_table, workflow_sweep
 
     benches = {
+        "workflow_sweep": workflow_sweep.workflow_sweep,
         "fig4_regression_duration": figs.fig4_regression_duration,
         "fig5_successful_requests": figs.fig5_successful_requests,
         "fig6_cost_per_day": figs.fig6_cost_per_day,
@@ -29,6 +30,10 @@ def main() -> None:
         "roofline_table": roofline_table.roofline_table,
     }
     selected = [s for s in args.only.split(",") if s] or list(benches)
+    unknown = [s for s in selected if s not in benches]
+    if unknown:
+        sys.exit(f"unknown benchmark(s): {', '.join(unknown)}; "
+                 f"available: {', '.join(benches)}")
 
     print("name,us_per_call,derived")
     details = []

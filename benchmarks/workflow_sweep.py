@@ -1,0 +1,96 @@
+"""Workflow-length × platform × arm sweep (EXPERIMENTS.md §Workflow sweep).
+
+The paper's §V scaling claim, quantified: Minos end-to-end speedup grows
+with workflow length because the CPU-bound (pool-served) share of an item's
+latency grows while fixed overheads (network-bound extract, cold starts,
+selection waste) amortize. Three arms per cell:
+
+* ``disabled`` — baseline, no gate;
+* ``fixed``    — pre-tested elysium threshold per stage (§III-A protocol);
+* ``adaptive`` — online threshold (§IV), NO pre-test phase at all.
+
+Speedup is the relative reduction of mean end-to-end item latency vs the
+same platform's ``disabled`` arm, averaged over seeds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim import (
+    ARMS,
+    PlatformProfile,
+    VariationModel,
+    WorkflowEngine,
+    WorkflowSummary,
+    etl_chain,
+    improvement,
+    run_workflow_closed_loop,
+    workflow_arm_factory,
+)
+
+STAGE_COUNTS = (1, 3, 5, 7)
+SWEEP_SIGMA = 0.18
+
+
+def _profiles():
+    return {
+        "gcf-gen1": PlatformProfile.gcf_gen1(),
+        "gcf-gen2": PlatformProfile.gcf_gen2(),
+        "lambda": PlatformProfile.aws_lambda(),
+    }
+
+
+def workflow_sweep(quick=False):
+    seeds = (42, 43, 44) if quick else (42, 43, 44, 45, 46)
+    duration_ms = (8 if quick else 15) * 60 * 1000.0
+    vm = VariationModel(sigma=SWEEP_SIGMA)
+
+    rows = []
+    speedups: dict[tuple[str, int, str], float] = {}
+    for prof_name, prof in _profiles().items():
+        for n in STAGE_COUNTS:
+            dag = etl_chain(n)
+            per_arm: dict[str, list[WorkflowSummary]] = {a: [] for a in ARMS}
+            for seed in seeds:
+                for arm in ARMS:
+                    eng = WorkflowEngine(
+                        dag, vm, workflow_arm_factory(arm, vm, pricing=prof.pricing),
+                        profile=prof, seed=seed,
+                    )
+                    run = run_workflow_closed_loop(
+                        eng, n_vus=10, duration_ms=duration_ms)
+                    per_arm[arm].append(WorkflowSummary.from_run(arm, run))
+            base_lat = float(np.mean(
+                [s.mean_item_latency_ms for s in per_arm["disabled"]]))
+            for arm in ARMS:
+                lat = float(np.mean([s.mean_item_latency_ms for s in per_arm[arm]]))
+                cost = float(np.mean([s.cost_per_million_items for s in per_arm[arm]]))
+                term = float(np.mean([s.n_terminated for s in per_arm[arm]]))
+                sp = improvement(base_lat, lat)
+                speedups[(prof_name, n, arm)] = sp
+                rows.append({
+                    "profile": prof_name,
+                    "stages": n,
+                    "arm": arm,
+                    "items": int(np.mean([s.n_items for s in per_arm[arm]])),
+                    "mean_item_ms": round(lat, 1),
+                    "speedup_pct": round(sp * 100, 2),
+                    "cost_per_m_items": round(cost, 2),
+                    "terminated": round(term, 1),
+                })
+
+    gen1 = [speedups[("gcf-gen1", n, "fixed")] for n in STAGE_COUNTS]
+    monotone = all(b > a for a, b in zip(gen1, gen1[1:]))
+    # adaptive-vs-pretested convergence, averaged over workflow lengths —
+    # per-length ratios are dominated by seed noise (EXPERIMENTS.md
+    # §Workflow sweep); quick mode under-converges (short windows leave
+    # the warm-up's unselected instances in the pools)
+    mean_fixed = float(np.mean(gen1))
+    mean_adaptive = float(np.mean(
+        [speedups[("gcf-gen1", n, "adaptive")] for n in STAGE_COUNTS]))
+    ratio = mean_adaptive / mean_fixed if mean_fixed > 0 else float("nan")
+    headline = (
+        f"gen1_fixed_speedups={'/'.join(f'{s*100:.1f}%' for s in gen1)}"
+        f"_monotone={monotone}_adaptive_vs_pretest_ratio={ratio:.2f}"
+    )
+    return rows, headline

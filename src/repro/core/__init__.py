@@ -25,6 +25,7 @@ from .estimators import (
 )
 from .lifecycle import FunctionInstance, InstanceState, LifecycleError
 from .policy import (
+    AdaptiveMinosPolicy,
     MinosPolicy,
     Verdict,
     expected_cold_start_attempts,
@@ -42,7 +43,7 @@ __all__ = [
     "p2_init", "p2_update", "p2_value",
     "welford_init", "welford_merge", "welford_std", "welford_update", "welford_variance",
     "FunctionInstance", "InstanceState", "LifecycleError",
-    "MinosPolicy", "Verdict", "expected_cold_start_attempts",
+    "AdaptiveMinosPolicy", "MinosPolicy", "Verdict", "expected_cold_start_attempts",
     "retries_for_runaway_budget", "runaway_probability",
     "Invocation", "InvocationQueue",
 ]

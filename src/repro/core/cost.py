@@ -62,6 +62,18 @@ class Pricing:
         )
 
     @staticmethod
+    def aws_lambda(memory_mb: int = 1024) -> "Pricing":
+        """AWS-Lambda-style pricing: $0.20/1M requests + $1.66667e-5/GiB-s,
+        CPU allocation proportional to memory (no separate GHz term)."""
+        if memory_mb < 128 or memory_mb > 10240:
+            raise ValueError(f"Lambda memory must be in [128, 10240] MB, got {memory_mb}")
+        return Pricing(
+            cost_per_invocation=0.2e-6,
+            cost_per_ms=(memory_mb / 1024.0) * 1.66667e-5 / 1000.0,
+            name=f"lambda-{memory_mb}mb",
+        )
+
+    @staticmethod
     def tpu_chip_seconds(chips: int, usd_per_chip_hour: float = 1.2) -> "Pricing":
         """Accelerator-serving analogue: a replica of ``chips`` chips billed
         per ms of occupancy; 'invocations' (request dispatches) are free."""

@@ -68,6 +68,102 @@ class MinosPolicy:
         return retry_count < self.max_retries
 
 
+class AdaptiveMinosPolicy:
+    """The §IV policy: elysium threshold maintained *online* from streaming
+    probe results — no pre-test phase (DESIGN.md §6).
+
+    Drop-in for :class:`MinosPolicy` at the platform boundary (``judge`` /
+    ``passes`` / ``should_benchmark`` / ``elysium_threshold``), but mutable:
+    the platform calls :meth:`report` with every cold-start probe result
+    (passing AND failing — a survivor-only stream ratchets the threshold
+    down forever), and the threshold follows an
+    :class:`~repro.core.elysium.OnlineElysiumController` (P² percentile +
+    Welford moments + EMA republish, all O(1) memory).
+
+    Warm-up replaces pre-testing: until ``warmup_reports`` probes have been
+    observed the policy passes every instance (it is *collecting* the
+    distribution, exactly what the pre-test did — but on production traffic,
+    so no separate unguarded phase is billed). The default is P²'s minimum
+    (5): every instance admitted unjudged during warm-up pollutes the warm
+    pool until platform churn evicts it, so the gate should arm as early as
+    the estimate exists (EXPERIMENTS.md §Workflow sweep quantifies this).
+    With ``initial_threshold`` set, the warm-up gate uses it instead of
+    passing everyone (the stale-threshold degraded mode the paper requires
+    on controller failure).
+    """
+
+    def __init__(
+        self,
+        pass_fraction: float = 0.4,
+        *,
+        max_retries: int = 5,
+        warmup_reports: int = 5,
+        republish_every: int = 4,
+        smoothing_alpha: float = 0.7,
+        initial_threshold: float | None = None,
+        higher_is_better: bool = False,
+    ) -> None:
+        from .elysium import OnlineElysiumController  # avoid import cycle at module load
+
+        if warmup_reports < 5:
+            raise ValueError("warmup_reports must be >= 5 (P² needs 5 markers)")
+        self.pass_fraction = pass_fraction
+        self.max_retries = max_retries
+        self.warmup_reports = warmup_reports
+        self.higher_is_better = higher_is_better
+        self.enabled = True
+        self._initial_threshold = initial_threshold
+        # durations: pass the fastest pass_fraction ⇒ threshold at the
+        # pass_fraction quantile; throughput-style (higher is better):
+        # passing the top pass_fraction needs the (1 - pass_fraction) one
+        self.controller = OnlineElysiumController(
+            pass_fraction=(1.0 - pass_fraction) if higher_is_better else pass_fraction,
+            republish_every=republish_every,
+            smoothing_alpha=smoothing_alpha,
+            initial_threshold=initial_threshold,
+        )
+
+    # -- streaming input ------------------------------------------------
+    def report(self, benchmark_result: float) -> None:
+        """Feed one cold-start probe observation to the estimators. The
+        platform calls this for every probed instance before judging it."""
+        self.controller.report(benchmark_result)
+
+    @property
+    def warmed_up(self) -> bool:
+        return self.controller.n_reports >= self.warmup_reports
+
+    @property
+    def elysium_threshold(self) -> float:
+        """Current effective threshold. During warm-up: the initial
+        threshold if one was given, else pass-everything (the estimate off
+        a handful of probes is not worth terminating on)."""
+        if not self.warmed_up and self._initial_threshold is None:
+            return -math.inf if self.higher_is_better else math.inf
+        return self.controller.threshold
+
+    # -- MinosPolicy-compatible decision surface ------------------------
+    def passes(self, benchmark_result: float) -> bool:
+        thr = self.elysium_threshold
+        if self.higher_is_better:
+            return benchmark_result >= thr
+        return benchmark_result <= thr
+
+    def judge(self, benchmark_result: float, retry_count: int) -> Verdict:
+        if not self.enabled:
+            return Verdict.PASS
+        if retry_count >= self.max_retries:
+            return Verdict.FORCED_PASS
+        return Verdict.PASS if self.passes(benchmark_result) else Verdict.TERMINATE
+
+    def should_benchmark(self, retry_count: int, is_cold_start: bool) -> bool:
+        # identical to MinosPolicy — warm-up instances still benchmark (the
+        # probe result is the estimator's training signal) but always pass.
+        if not self.enabled or not is_cold_start:
+            return False
+        return retry_count < self.max_retries
+
+
 def runaway_probability(termination_rate: float, retries: int) -> float:
     """P(an invocation is terminated ``retries`` times in a row).
 

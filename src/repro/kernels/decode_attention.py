@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.6 names the TPU compiler-params container TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 _NEG_INF = -1e30
 
 
@@ -126,7 +129,7 @@ def decode_attention(
         ),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((batch * q_heads, 1, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,24 +1,42 @@
 """Discrete-event FaaS platform simulator (the paper's evaluation substrate)."""
 from .experiment import (
+    ARMS,
     PAPER_PRICING,
     PAPER_SPEC,
     PASS_FRACTION,
     DayResult,
     WeekResult,
+    make_arm_policy,
     run_day,
     run_pretest_phase,
     run_week,
+    workflow_arm_factory,
 )
-from .metrics import ArmSummary, cost_timeline, improvement
-from .platform import FaaSPlatform, FunctionSpec, RequestResult
+from .metrics import ArmSummary, WorkflowSummary, cost_timeline, improvement
+from .platform import FaaSPlatform, FunctionSpec, PlatformProfile, RequestResult
 from .variation import VariationModel, paper_week
+from .workflow_dag import (
+    ItemResult,
+    Stage,
+    WorkflowDAG,
+    WorkflowEngine,
+    WorkflowRunResult,
+    etl_chain,
+    etl_suite,
+    run_workflow_batch,
+    run_workflow_closed_loop,
+)
 from .workload import WorkflowSpec, make_chain, run_closed_loop, run_workflow
 
 __all__ = [
-    "PAPER_PRICING", "PAPER_SPEC", "PASS_FRACTION",
-    "DayResult", "WeekResult", "run_day", "run_pretest_phase", "run_week",
-    "ArmSummary", "cost_timeline", "improvement",
-    "FaaSPlatform", "FunctionSpec", "RequestResult",
+    "ARMS", "PAPER_PRICING", "PAPER_SPEC", "PASS_FRACTION",
+    "DayResult", "WeekResult", "make_arm_policy", "run_day",
+    "run_pretest_phase", "run_week", "workflow_arm_factory",
+    "ArmSummary", "WorkflowSummary", "cost_timeline", "improvement",
+    "FaaSPlatform", "FunctionSpec", "PlatformProfile", "RequestResult",
     "VariationModel", "paper_week",
+    "ItemResult", "Stage", "WorkflowDAG", "WorkflowEngine",
+    "WorkflowRunResult", "etl_chain", "etl_suite",
+    "run_workflow_batch", "run_workflow_closed_loop",
     "WorkflowSpec", "make_chain", "run_closed_loop", "run_workflow",
 ]

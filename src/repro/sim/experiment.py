@@ -22,7 +22,7 @@ import numpy as np
 
 from repro.core.cost import Pricing
 from repro.core.elysium import pretest_threshold, run_pretest
-from repro.core.policy import MinosPolicy
+from repro.core.policy import AdaptiveMinosPolicy, MinosPolicy
 from .metrics import ArmSummary, cost_timeline, improvement
 from .platform import FaaSPlatform, FunctionSpec
 from .variation import VariationModel, paper_week
@@ -46,6 +46,83 @@ PAPER_SPEC = FunctionSpec(
 PAPER_PRICING = Pricing.gcf(256)
 PASS_FRACTION = 0.4  # 60th-percentile elysium threshold
 
+ARMS = ("disabled", "fixed", "adaptive")
+
+
+def make_arm_policy(
+    arm: str,
+    *,
+    threshold: float | None = None,
+    pass_fraction: float = PASS_FRACTION,
+    max_retries: int = 5,
+    warmup_reports: int = 5,
+    initial_threshold: float | None = None,
+):
+    """Policy for one experiment arm.
+
+    * ``disabled`` — the paper's baseline: every instance passes.
+    * ``fixed`` — the paper's prototype: a pre-tested elysium threshold
+      (§III-A), supplied via ``threshold``.
+    * ``adaptive`` — the §IV protocol: :class:`AdaptiveMinosPolicy`
+      maintains the threshold online from the probe stream; no pre-test
+      phase exists (warm-up passes everything while the estimators fill).
+    """
+    if arm == "disabled":
+        return MinosPolicy(elysium_threshold=float("inf"), enabled=False)
+    if arm == "fixed":
+        if threshold is None:
+            raise ValueError("fixed arm needs a pre-tested threshold")
+        return MinosPolicy(elysium_threshold=threshold, max_retries=max_retries)
+    if arm == "adaptive":
+        return AdaptiveMinosPolicy(
+            pass_fraction,
+            max_retries=max_retries,
+            warmup_reports=warmup_reports,
+            initial_threshold=initial_threshold,
+        )
+    raise ValueError(f"unknown arm {arm!r}; expected one of {ARMS}")
+
+
+def workflow_arm_factory(
+    arm: str,
+    variation: VariationModel,
+    *,
+    pass_fraction: float = PASS_FRACTION,
+    max_retries: int = 5,
+    warmup_reports: int = 5,
+    pricing: Pricing = PAPER_PRICING,
+    pretest_seed: int = 1234,
+):
+    """Per-stage policy factory for :class:`~repro.sim.workflow_dag.WorkflowEngine`.
+
+    The ``fixed`` arm pre-tests each stage's function separately (a stage's
+    threshold is in units of its own probe duration); the ``adaptive`` arm
+    gets one independent online estimator per stage and skips pre-testing
+    entirely. Stage ``max_retries`` overrides the default bound.
+    """
+    _cache: dict[str, float] = {}
+
+    def factory(stage):
+        mr = stage.max_retries if stage.max_retries is not None else max_retries
+        if arm == "fixed":
+            if stage.name not in _cache:
+                import zlib
+                _cache[stage.name] = run_pretest_phase(
+                    variation, stage.spec, pricing,
+                    seed=pretest_seed + zlib.crc32(stage.name.encode()) % 7919,
+                    pass_fraction=pass_fraction,
+                )
+            return make_arm_policy(
+                "fixed", threshold=_cache[stage.name],
+                pass_fraction=pass_fraction, max_retries=mr,
+            )
+        return make_arm_policy(
+            arm, pass_fraction=pass_fraction, max_retries=mr,
+            warmup_reports=warmup_reports,
+        )
+
+    return factory
+
 
 @dataclasses.dataclass
 class DayResult:
@@ -56,6 +133,9 @@ class DayResult:
     minos: ArmSummary
     timeline_baseline: tuple[np.ndarray, np.ndarray]
     timeline_minos: tuple[np.ndarray, np.ndarray]
+    # §IV arm (no pre-test; threshold maintained online) — populated when
+    # run_day(include_adaptive=True)
+    adaptive: ArmSummary | None = None
 
     @property
     def analysis_improvement(self) -> float:
@@ -103,6 +183,7 @@ def run_pretest_phase(
     n_vus: int = 10,
     duration_ms: float = 60_000.0,
     seed: int = 1234,
+    pass_fraction: float = PASS_FRACTION,
 ) -> float:
     """§III-A: measure the elysium threshold with a short unguarded run."""
     disabled = MinosPolicy(elysium_threshold=float("inf"), enabled=False)
@@ -115,7 +196,7 @@ def run_pretest_phase(
     if not speeds:
         speeds = [r.instance_speed for r in plat.results]
     probes = [spec.benchmark_ms / s for s in speeds]
-    return pretest_threshold(probes, PASS_FRACTION)
+    return pretest_threshold(probes, pass_fraction)
 
 
 def run_day(
@@ -129,17 +210,25 @@ def run_day(
     max_retries: int = 5,
     seed: int = 0,
     threshold: float | None = None,
+    include_adaptive: bool = False,
 ) -> DayResult:
     if threshold is None:
         threshold = run_pretest_phase(variation, spec, pricing, seed=seed * 7919 + day)
 
-    base_policy = MinosPolicy(elysium_threshold=float("inf"), enabled=False)
+    base_policy = make_arm_policy("disabled")
     base_plat = FaaSPlatform(spec, variation, base_policy, pricing, seed=seed * 31 + day)
     base_results = run_closed_loop(base_plat, n_vus=n_vus, duration_ms=duration_ms)
 
-    minos_policy = MinosPolicy(elysium_threshold=threshold, max_retries=max_retries)
+    minos_policy = make_arm_policy("fixed", threshold=threshold, max_retries=max_retries)
     minos_plat = FaaSPlatform(spec, variation, minos_policy, pricing, seed=seed * 37 + day)
     minos_results = run_closed_loop(minos_plat, n_vus=n_vus, duration_ms=duration_ms)
+
+    adaptive_summary = None
+    if include_adaptive:
+        ad_policy = make_arm_policy("adaptive", max_retries=max_retries)
+        ad_plat = FaaSPlatform(spec, variation, ad_policy, pricing, seed=seed * 41 + day)
+        ad_results = run_closed_loop(ad_plat, n_vus=n_vus, duration_ms=duration_ms)
+        adaptive_summary = ArmSummary.from_platform("adaptive", ad_plat, ad_results)
 
     return DayResult(
         day=day,
@@ -153,6 +242,7 @@ def run_day(
         timeline_minos=cost_timeline(
             minos_results, minos_plat.cost, duration_ms,
             termination_events=minos_plat.termination_events),
+        adaptive=adaptive_summary,
     )
 
 

@@ -56,6 +56,45 @@ def improvement(baseline: float, treatment: float) -> float:
     return (baseline - treatment) / baseline
 
 
+@dataclasses.dataclass
+class WorkflowSummary:
+    """One (workflow × platform × arm) cell of the sweep
+    (EXPERIMENTS.md §Workflow sweep)."""
+
+    name: str
+    arm: str
+    n_items: int
+    mean_item_latency_ms: float
+    median_item_latency_ms: float
+    mean_item_analysis_ms: float
+    total_cost: float
+    cost_per_million_items: float
+    n_instance_starts: int
+    n_terminated: int
+    mean_item_retries: float
+
+    @staticmethod
+    def from_run(arm: str, run) -> "WorkflowSummary":
+        """``run`` is a :class:`~repro.sim.workflow_dag.WorkflowRunResult`
+        (duck-typed to keep this module free of a workflow_dag import)."""
+        retries = (
+            float(np.mean([i.total_retries for i in run.items])) if run.items else 0.0
+        )
+        return WorkflowSummary(
+            name=run.dag.name,
+            arm=arm,
+            n_items=run.n_items,
+            mean_item_latency_ms=run.mean_item_latency_ms,
+            median_item_latency_ms=run.median_item_latency_ms,
+            mean_item_analysis_ms=run.mean_item_analysis_ms,
+            total_cost=run.cost.total,
+            cost_per_million_items=run.cost_per_million_items,
+            n_instance_starts=run.engine.instances_started,
+            n_terminated=run.engine.instances_terminated,
+            mean_item_retries=retries,
+        )
+
+
 def cost_timeline(
     results: list[RequestResult],
     cost: WorkflowCost,

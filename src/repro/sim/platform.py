@@ -66,6 +66,81 @@ class FunctionSpec:
     recycle_lifetime_ms: float | None = 7 * 60 * 1000.0
 
 
+@dataclasses.dataclass(frozen=True)
+class PlatformProfile:
+    """Platform-level behavior knobs, separated from the function's own
+    workload shape (DESIGN.md §7). A :class:`FunctionSpec` says what the
+    *function* does (prepare/body/benchmark durations); the profile says how
+    the *platform* hosts it: warm-pool reuse order, per-instance request
+    concurrency, cold-start and recycle behavior, billing, and the pricing
+    tier. When a profile is passed to :class:`FaaSPlatform` it overrides the
+    spec's platform-level fields, so one scenario runs unchanged on several
+    platform models.
+    """
+
+    name: str
+    pricing: Pricing
+    warm_pool_order: str = "lifo"          # "lifo" (MRU-first) | "fifo" (round-robin-ish)
+    per_instance_concurrency: int = 1      # concurrent requests one warm instance takes
+    cold_start_ms: float = 250.0
+    cold_start_jitter: float = 0.25
+    idle_timeout_ms: float = 15 * 60 * 1000.0
+    recycle_lifetime_ms: float | None = 7 * 60 * 1000.0
+    bill_cold_start: bool = True
+    requeue_overhead_ms: float = 30.0
+
+    def __post_init__(self) -> None:
+        if self.warm_pool_order not in ("lifo", "fifo"):
+            raise ValueError(f"warm_pool_order must be 'lifo' or 'fifo', got {self.warm_pool_order!r}")
+        if self.per_instance_concurrency < 1:
+            raise ValueError("per_instance_concurrency must be >= 1")
+
+    @staticmethod
+    def gcf_gen1(memory_mb: int = 256) -> "PlatformProfile":
+        """The paper's platform: one request per instance, MRU reuse,
+        cold starts billed, aggressive instance churn (EXPERIMENTS.md
+        calibration)."""
+        return PlatformProfile(
+            name="gcf-gen1",
+            pricing=Pricing.gcf(memory_mb),
+            warm_pool_order="lifo",
+            per_instance_concurrency=1,
+            cold_start_ms=250.0,
+            recycle_lifetime_ms=45_000.0,
+        )
+
+    @staticmethod
+    def gcf_gen2(memory_mb: int = 1024, concurrency: int = 4) -> "PlatformProfile":
+        """Cloud-Run-based gen2: request-concurrent instances, slower cold
+        start (bigger runtime), request-time-only billing, FIFO-ish reuse
+        (the load balancer spreads across the instance set)."""
+        return PlatformProfile(
+            name="gcf-gen2",
+            pricing=Pricing.gcf(memory_mb),
+            warm_pool_order="fifo",
+            per_instance_concurrency=concurrency,
+            cold_start_ms=400.0,
+            recycle_lifetime_ms=90_000.0,
+            bill_cold_start=False,
+        )
+
+    @staticmethod
+    def aws_lambda(memory_mb: int = 1024) -> "PlatformProfile":
+        """Lambda-like: one request per instance, MRU reuse, fast firecracker
+        cold start, init phase unbilled, shorter idle reclaim."""
+        return PlatformProfile(
+            name="lambda",
+            pricing=Pricing.aws_lambda(memory_mb),
+            warm_pool_order="lifo",
+            per_instance_concurrency=1,
+            cold_start_ms=150.0,
+            cold_start_jitter=0.20,
+            idle_timeout_ms=7 * 60 * 1000.0,
+            recycle_lifetime_ms=120_000.0,
+            bill_cold_start=False,
+        )
+
+
 @dataclasses.dataclass
 class RequestResult:
     invocation_id: int
@@ -117,23 +192,59 @@ class FaaSPlatform:
         spec: FunctionSpec,
         variation: VariationModel,
         policy: MinosPolicy,
-        pricing: Pricing,
+        pricing: Pricing | None = None,
         seed: int = 0,
         online_controller=None,
+        profile: Optional[PlatformProfile] = None,
     ) -> None:
         """online_controller: an OnlineElysiumController (paper §IV future
         work, implemented here): every cold-start probe result is reported
         to it and the effective elysium threshold follows its estimate —
-        the platform keeps working (stale threshold) if it dies."""
+        the platform keeps working (stale threshold) if it dies.
+
+        An AdaptiveMinosPolicy (anything with a ``report`` method) is fed
+        the same probe stream directly — the §IV wiring without a separate
+        controller object.
+
+        profile: platform-level overrides (pool order, concurrency, cold
+        start, recycling, billing). Without one, those knobs come from the
+        spec and the platform behaves exactly like GCF gen1 (LIFO pool, one
+        request per instance)."""
         self.spec = spec
         self.variation = variation
         self.policy = policy
         self.online_controller = online_controller
+        self.profile = profile
+        if pricing is None:
+            if profile is None:
+                raise ValueError("pricing is required when no profile is given")
+            pricing = profile.pricing
         self.pricing = pricing
+        # platform-level knobs: profile overrides the spec's defaults
+        if profile is not None:
+            self._cold_start_ms = profile.cold_start_ms
+            self._cold_start_jitter = profile.cold_start_jitter
+            self._idle_timeout_ms = profile.idle_timeout_ms
+            self._recycle_lifetime_ms = profile.recycle_lifetime_ms
+            self._bill_cold_start = profile.bill_cold_start
+            self._requeue_overhead_ms = profile.requeue_overhead_ms
+            self._warm_order = profile.warm_pool_order
+            self._concurrency = profile.per_instance_concurrency
+        else:
+            self._cold_start_ms = spec.cold_start_ms
+            self._cold_start_jitter = spec.cold_start_jitter
+            self._idle_timeout_ms = spec.idle_timeout_ms
+            self._recycle_lifetime_ms = spec.recycle_lifetime_ms
+            self._bill_cold_start = spec.bill_cold_start
+            self._requeue_overhead_ms = spec.requeue_overhead_ms
+            self._warm_order = "lifo"
+            self._concurrency = 1
         self.rng = np.random.RandomState(seed)
         self.loop = _EventLoop()
         self.queue = InvocationQueue()
-        self.warm_pool: list[FunctionInstance] = []   # idle WARM instances (LIFO)
+        # WARM instances with spare request capacity, in reuse order
+        self.warm_pool: list[FunctionInstance] = []
+        self._active: dict[int, int] = {}  # instance_id -> in-flight requests
         self.cost = WorkflowCost(pricing)
         self.results: list[RequestResult] = []
         self.benchmark_observations: list[float] = []  # all cold-start probe durations
@@ -153,14 +264,35 @@ class FaaSPlatform:
     # ------------------------------------------------------------------
     def _take_warm(self) -> Optional[FunctionInstance]:
         now = self.loop.now
-        # reclaim idle-expired and platform-recycled instances
+        # reclaim idle-expired and platform-recycled instances (never ones
+        # with requests in flight)
         self.warm_pool = [
             i for i in self.warm_pool
-            if not i.maybe_expire(now) and not self._recycled(i, now)
+            if self._active.get(i.instance_id, 0) > 0
+            or (not i.maybe_expire(now) and not self._recycled(i, now))
         ]
-        if self.warm_pool:
-            return self.warm_pool.pop()  # LIFO: most recently used first
-        return None
+        if not self.warm_pool:
+            return None
+        # "lifo": most recently used first (GCF gen1 / Lambda MRU reuse);
+        # "fifo": oldest available first (load-balancer spread)
+        idx = len(self.warm_pool) - 1 if self._warm_order == "lifo" else 0
+        inst = self.warm_pool[idx]
+        n = self._active.get(inst.instance_id, 0) + 1
+        self._active[inst.instance_id] = n
+        if n >= self._concurrency:  # at capacity: no longer available
+            self.warm_pool.pop(idx)
+        return inst
+
+    def _release(self, inst: FunctionInstance) -> None:
+        """A request on ``inst`` completed: free one concurrency slot and
+        return the instance to the available pool if it left it."""
+        n = self._active.get(inst.instance_id, 0) - 1
+        if n <= 0:
+            self._active.pop(inst.instance_id, None)
+        else:
+            self._active[inst.instance_id] = n
+        if inst.state is InstanceState.WARM and inst not in self.warm_pool:
+            self.warm_pool.append(inst)
 
     def _recycled(self, inst: FunctionInstance, now: float) -> bool:
         deadline = self._recycle_deadline.get(inst.instance_id)
@@ -210,7 +342,7 @@ class FaaSPlatform:
         def _complete() -> None:
             inst.serve(self.loop.now)
             self.cost.record_reused(duration)
-            self.warm_pool.append(inst)
+            self._release(inst)
             self._finish(inv, t0, download, analysis, served_by_cold=False,
                          speed=inst.speed_factor, bench=None)
             self._dispatch()
@@ -225,16 +357,17 @@ class FaaSPlatform:
         inst = FunctionInstance(
             speed_factor=speed,
             created_at_ms=t0,
-            idle_timeout_ms=spec.idle_timeout_ms,
+            idle_timeout_ms=self._idle_timeout_ms,
         )
-        if spec.recycle_lifetime_ms is not None:
+        self._active[inst.instance_id] = 1
+        if self._recycle_lifetime_ms is not None:
             self._recycle_deadline[inst.instance_id] = t0 + float(
-                self.rng.exponential(spec.recycle_lifetime_ms)
+                self.rng.exponential(self._recycle_lifetime_ms)
             )
-        cold = spec.cold_start_ms * self._sample_jitter(spec.cold_start_jitter)
+        cold = self._cold_start_ms * self._sample_jitter(self._cold_start_jitter)
         download = spec.prepare_ms * self._sample_jitter(spec.prepare_jitter)
 
-        billed_cold = cold if spec.bill_cold_start else 0.0
+        billed_cold = cold if self._bill_cold_start else 0.0
 
         do_benchmark = self.policy.should_benchmark(inv.retry_count, is_cold_start=True)
         if not do_benchmark:
@@ -246,7 +379,7 @@ class FaaSPlatform:
             def _complete_direct() -> None:
                 inst.serve(self.loop.now)
                 self.cost.record_passed(billed_cold + duration)
-                self.warm_pool.append(inst)
+                self._release(inst)
                 self._finish(inv, t0, download, analysis, served_by_cold=True,
                              speed=speed, bench=None)
                 self._dispatch()
@@ -271,19 +404,25 @@ class FaaSPlatform:
             policy = _dc.replace(
                 self.policy, elysium_threshold=self.online_controller.threshold
             )
+        elif hasattr(self.policy, "report"):
+            # AdaptiveMinosPolicy: the policy IS the controller (DESIGN.md
+            # §6); it sees the probe before judging, so its threshold always
+            # reflects the full (unbiased) stream.
+            self.policy.report(bench)
         verdict = inst.judge(policy, inv.retry_count)
         if verdict is Verdict.TERMINATE:
             # judged as soon as the probe finishes; requeue + crash.
             # Billed: startup + probe wall time (download is torn down with
             # the instance; the platform bills active instance time).
             self.instances_terminated += 1
+            self._active.pop(inst.instance_id, None)
             billed = billed_cold + bench
 
             def _crash() -> None:
                 self.cost.record_terminated(billed)
                 self.termination_events.append((self.loop.now, billed))
                 self.queue.requeue(inv, self.loop.now)
-                self.loop.after(self.spec.requeue_overhead_ms, self._dispatch)
+                self.loop.after(self._requeue_overhead_ms, self._dispatch)
 
             self.loop.after(cold + bench, _crash)
             return
@@ -296,7 +435,7 @@ class FaaSPlatform:
         def _complete_pass() -> None:
             inst.serve(self.loop.now)
             self.cost.record_passed(billed_cold + duration)
-            self.warm_pool.append(inst)
+            self._release(inst)
             self._finish(inv, t0, download, analysis, served_by_cold=True,
                          speed=speed, bench=bench)
             self._dispatch()

@@ -1,0 +1,419 @@
+"""Multi-stage workflow DAG engine (paper §V; DESIGN.md §5).
+
+The paper's headline scaling claim is that "longer and complex workflows
+lead to increased savings, as the pool of fast instances is re-used more
+often". This module makes that claim testable: a :class:`WorkflowDAG` of
+:class:`~repro.sim.platform.FunctionSpec` stages with fan-out/fan-in edges,
+where every stage invocation flows through the existing Minos gate on its
+own :class:`~repro.sim.platform.FaaSPlatform` — so each stage keeps a
+per-stage warm pool of benchmark-certified instances, and pool re-use
+compounds across stages.
+
+Execution model (all stages share ONE simulated clock):
+
+* an *item* is one end-to-end workflow execution;
+* a stage is submitted for an item as soon as ALL of its parent stages
+  have completed for that item (fan-in barrier); source stages are
+  submitted at item arrival; the item completes when every sink stage has
+  completed;
+* a terminated (benchmark-failed) instance re-queues its stage invocation
+  on the stage's own queue — downstream stages never observe the retry,
+  only the delay; each stage may bound its own emergency exit via
+  ``Stage.max_retries``.
+
+Scenario builders: :func:`etl_chain` and :func:`etl_suite` construct the
+3-/5-/7-stage ETL workflows used by ``benchmarks/workflow_sweep.py`` and
+``examples/etl_workflows.py`` (protocol: EXPERIMENTS.md §Workflow sweep).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost import Pricing, WorkflowCost
+from .platform import FaaSPlatform, FunctionSpec, PlatformProfile, RequestResult
+from .variation import VariationModel
+
+
+# ---------------------------------------------------------------------------
+# DAG structure
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Stage:
+    """One node of the workflow: a deployed function plus its dependencies.
+
+    ``max_retries`` optionally overrides the policy's emergency-exit bound
+    for this stage only (e.g. an idempotent transform tolerates more
+    re-selection than a stage with external side effects).
+    """
+
+    spec: FunctionSpec
+    deps: tuple[str, ...] = ()
+    max_retries: Optional[int] = None
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+
+class WorkflowDAG:
+    """A validated DAG of stages, keyed by stage (function) name."""
+
+    def __init__(self, stages: Sequence[Stage], name: str = "workflow") -> None:
+        self.name = name
+        self.stages: Dict[str, Stage] = {}
+        for s in stages:
+            if s.name in self.stages:
+                raise ValueError(f"duplicate stage name {s.name!r}")
+            self.stages[s.name] = s
+        for s in stages:
+            for d in s.deps:
+                if d not in self.stages:
+                    raise ValueError(f"stage {s.name!r} depends on unknown stage {d!r}")
+        self.children: Dict[str, tuple[str, ...]] = {n: () for n in self.stages}
+        for s in stages:
+            for d in s.deps:
+                self.children[d] = self.children[d] + (s.name,)
+        self.order = self._topo_sort()
+        self.sources = tuple(n for n, s in self.stages.items() if not s.deps)
+        self.sinks = tuple(n for n in self.stages if not self.children[n])
+        if not self.sources:
+            raise ValueError("workflow has no source stage")
+
+    def _topo_sort(self) -> tuple[str, ...]:
+        indeg = {n: len(s.deps) for n, s in self.stages.items()}
+        ready = sorted(n for n, d in indeg.items() if d == 0)
+        order: List[str] = []
+        while ready:
+            n = ready.pop(0)
+            order.append(n)
+            for c in self.children[n]:
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    ready.append(c)
+        if len(order) != len(self.stages):
+            cyc = sorted(set(self.stages) - set(order))
+            raise ValueError(f"workflow DAG has a cycle through {cyc}")
+        return tuple(order)
+
+    def __len__(self) -> int:
+        return len(self.stages)
+
+    def __iter__(self):
+        return iter(self.order)
+
+    @staticmethod
+    def chain(specs: Sequence[FunctionSpec], name: str = "chain") -> "WorkflowDAG":
+        """Linear pipeline: each stage depends on the previous one."""
+        stages = []
+        prev: tuple[str, ...] = ()
+        for spec in specs:
+            stages.append(Stage(spec=spec, deps=prev))
+            prev = (spec.name,)
+        return WorkflowDAG(stages, name=name)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ItemResult:
+    """One completed end-to-end workflow execution."""
+
+    item_id: int
+    t_submitted_ms: float
+    t_completed_ms: float
+    stage_results: Dict[str, RequestResult]
+
+    @property
+    def latency_ms(self) -> float:
+        return self.t_completed_ms - self.t_submitted_ms
+
+    @property
+    def total_analysis_ms(self) -> float:
+        return sum(r.analysis_ms for r in self.stage_results.values())
+
+    @property
+    def total_retries(self) -> int:
+        return sum(r.retries for r in self.stage_results.values())
+
+
+class _ItemState:
+    __slots__ = ("item_id", "t0", "waiting", "results", "on_complete")
+
+    def __init__(self, item_id: int, t0: float, dag: WorkflowDAG, on_complete) -> None:
+        self.item_id = item_id
+        self.t0 = t0
+        self.waiting = {n: len(s.deps) for n, s in dag.stages.items()}
+        self.results: Dict[str, RequestResult] = {}
+        self.on_complete = on_complete
+
+
+class WorkflowEngine:
+    """Per-stage FaaSPlatforms sharing one event loop, plus the fan-in logic.
+
+    ``policy_factory`` builds one policy object *per stage* — required for
+    :class:`~repro.core.policy.AdaptiveMinosPolicy`, whose threshold is in
+    units of the stage's own probe duration and must never be shared across
+    stages with different ``benchmark_ms``. It receives the :class:`Stage`
+    so it can honor per-stage ``max_retries``.
+    """
+
+    def __init__(
+        self,
+        dag: WorkflowDAG,
+        variation: VariationModel,
+        policy_factory: Callable[[Stage], object],
+        *,
+        profile: Optional[PlatformProfile] = None,
+        pricing: Optional[Pricing] = None,
+        seed: int = 0,
+    ) -> None:
+        if profile is None and pricing is None:
+            raise ValueError("need a PlatformProfile or an explicit Pricing")
+        self.dag = dag
+        self.variation = variation
+        self.profile = profile
+        self.platforms: Dict[str, FaaSPlatform] = {}
+        self.items: List[ItemResult] = []
+        self._next_item = 0
+        loop = None
+        for i, name in enumerate(dag.order):
+            stage = dag.stages[name]
+            plat = FaaSPlatform(
+                stage.spec, variation, policy_factory(stage),
+                pricing=pricing, seed=seed + 97 * i, profile=profile,
+            )
+            if loop is None:
+                loop = plat.loop
+            else:
+                plat.loop = loop  # all stages share stage-0's clock
+            self.platforms[name] = plat
+        assert loop is not None
+        self.loop = loop
+
+    # -- item flow ------------------------------------------------------
+    def submit_item(self, on_complete: Optional[Callable[[ItemResult], None]] = None) -> int:
+        """Start one workflow execution now; returns the item id."""
+        item_id = self._next_item
+        self._next_item += 1
+        state = _ItemState(item_id, self.loop.now, self.dag, on_complete)
+        for src in self.dag.sources:
+            self._submit_stage(state, src)
+        return item_id
+
+    def _submit_stage(self, state: _ItemState, name: str) -> None:
+        plat = self.platforms[name]
+
+        def done(res: RequestResult) -> None:
+            state.results[name] = res
+            for child in self.dag.children[name]:
+                state.waiting[child] -= 1
+                if state.waiting[child] == 0:  # fan-in: ALL parents arrived
+                    self._submit_stage(state, child)
+            if all(s in state.results for s in self.dag.sinks):
+                item = ItemResult(
+                    item_id=state.item_id,
+                    t_submitted_ms=state.t0,
+                    t_completed_ms=self.loop.now,
+                    stage_results=dict(state.results),
+                )
+                self.items.append(item)
+                if state.on_complete is not None:
+                    state.on_complete(item)
+
+        plat.submit({"item": state.item_id, "stage": name}, done)
+
+    # -- aggregates -----------------------------------------------------
+    @property
+    def cost(self) -> WorkflowCost:
+        merged: Optional[WorkflowCost] = None
+        for p in self.platforms.values():
+            merged = p.cost if merged is None else merged.merge(p.cost)
+        assert merged is not None
+        return merged
+
+    @property
+    def instances_started(self) -> int:
+        return sum(p.instances_started for p in self.platforms.values())
+
+    @property
+    def instances_terminated(self) -> int:
+        return sum(p.instances_terminated for p in self.platforms.values())
+
+    def per_stage_results(self) -> Dict[str, List[RequestResult]]:
+        return {n: list(p.results) for n, p in self.platforms.items()}
+
+
+@dataclasses.dataclass
+class WorkflowRunResult:
+    """Everything a sweep needs from one workflow run.
+
+    ``items`` are the executions completing inside the measurement window
+    (latency statistics); ``n_items_costed`` additionally counts items that
+    completed while draining, because the cost ledgers accrue through the
+    drain too — dividing drain-inclusive cost by window-only items would
+    overstate cost per item, and by more for slower arms.
+    """
+
+    dag: WorkflowDAG
+    items: List[ItemResult]
+    engine: WorkflowEngine
+
+    @property
+    def n_items(self) -> int:
+        return len(self.items)
+
+    @property
+    def n_items_costed(self) -> int:
+        return len(self.engine.items)
+
+    @property
+    def mean_item_latency_ms(self) -> float:
+        return float(np.mean([i.latency_ms for i in self.items])) if self.items else float("nan")
+
+    @property
+    def median_item_latency_ms(self) -> float:
+        return float(np.median([i.latency_ms for i in self.items])) if self.items else float("nan")
+
+    @property
+    def mean_item_analysis_ms(self) -> float:
+        return float(np.mean([i.total_analysis_ms for i in self.items])) if self.items else float("nan")
+
+    @property
+    def cost(self) -> WorkflowCost:
+        return self.engine.cost
+
+    @property
+    def cost_per_million_items(self) -> float:
+        if not self.engine.items:
+            return float("nan")
+        return self.engine.cost.total / self.n_items_costed * 1e6
+
+
+def run_workflow_closed_loop(
+    engine: WorkflowEngine,
+    *,
+    n_vus: int = 10,
+    think_time_ms: float = 1000.0,
+    duration_ms: float = 10 * 60 * 1000.0,
+    start_ms: float = 0.0,
+) -> WorkflowRunResult:
+    """The paper's closed-loop workload lifted to whole workflows: each VU
+    submits an item, waits for the full DAG to complete, thinks, repeats.
+    Item-level concurrency is what bounds total pool size across stages —
+    the amortization the paper's workflow argument rests on."""
+    window_end = start_ms + duration_ms
+    completed: List[ItemResult] = []
+
+    def make_vu():
+        def on_complete(item: ItemResult) -> None:
+            if item.t_completed_ms <= window_end:
+                completed.append(item)
+            next_t = item.t_completed_ms + think_time_ms
+            if next_t < window_end:
+                engine.loop.at(next_t, lambda: engine.submit_item(on_complete))
+
+        return on_complete
+
+    for _ in range(n_vus):
+        cb = make_vu()
+        engine.loop.at(start_ms, lambda cb=cb: engine.submit_item(cb))
+
+    engine.loop.run_until(window_end)
+    engine.loop.run_all(hard_limit_ms=window_end + 20 * 60 * 1000.0)
+    return WorkflowRunResult(dag=engine.dag, items=completed, engine=engine)
+
+
+def run_workflow_batch(
+    engine: WorkflowEngine,
+    *,
+    n_items: int,
+    inter_arrival_ms: float = 500.0,
+) -> WorkflowRunResult:
+    """Open-loop: push a fixed batch of items at a fixed rate and drain."""
+    for i in range(n_items):
+        engine.loop.at(i * inter_arrival_ms, lambda: engine.submit_item(None))
+    engine.loop.run_all(hard_limit_ms=1e12)
+    return WorkflowRunResult(dag=engine.dag, items=list(engine.items), engine=engine)
+
+
+# ---------------------------------------------------------------------------
+# ETL scenario suite (EXPERIMENTS.md §Workflow sweep)
+# ---------------------------------------------------------------------------
+
+# Stage archetypes. The extract stage is network-bound (the paper's weather
+# CSV download); transforms are CPU-bound — the Minos-improvable share of an
+# item's latency therefore GROWS with workflow length, which is what makes
+# the paper's "longer workflows save more" claim come out monotone.
+_EXTRACT = dict(prepare_ms=1200.0, body_ms=500.0, benchmark_ms=300.0)
+_TRANSFORM = dict(prepare_ms=150.0, body_ms=1300.0, benchmark_ms=300.0)
+_LOAD = dict(prepare_ms=300.0, body_ms=800.0, benchmark_ms=300.0)
+_COMMON = dict(
+    cold_start_ms=250.0,
+    recycle_lifetime_ms=45_000.0,
+    # higher persistence than the single-function calibration: workflow
+    # items re-visit the per-stage pools quickly, so the certified speed
+    # must survive long enough for re-use to compound (EXPERIMENTS.md
+    # §Workflow sweep documents this choice and its sensitivity)
+    contention_rho=0.995,
+    benchmark_noise=0.05,
+)
+
+
+def _spec(name: str, archetype: dict) -> FunctionSpec:
+    return FunctionSpec(name=name, **archetype, **_COMMON)
+
+
+def etl_chain(n_stages: int, name: Optional[str] = None) -> WorkflowDAG:
+    """Linear ETL pipeline: extract → transform×(n-2) → load. ``n_stages=1``
+    degenerates to the paper's single-function scenario shape."""
+    if n_stages < 1:
+        raise ValueError("n_stages must be >= 1")
+    if n_stages == 1:
+        specs = [_spec("extract", _EXTRACT)]
+    else:
+        specs = (
+            [_spec("extract", _EXTRACT)]
+            + [_spec(f"transform{i}", _TRANSFORM) for i in range(1, n_stages - 1)]
+            + [_spec("load", _LOAD)]
+        )
+    return WorkflowDAG.chain(specs, name=name or f"etl-{n_stages}")
+
+
+def etl_suite() -> Dict[str, WorkflowDAG]:
+    """The 3-/5-/7-stage ETL workflows. The 3-stage is a pure chain; the
+    5- and 7-stage add fan-out/fan-in (parallel transforms joined before
+    load), exercising the DAG barrier."""
+    three = etl_chain(3, name="etl-3")
+
+    five = WorkflowDAG(
+        [
+            Stage(_spec("extract", _EXTRACT)),
+            Stage(_spec("clean", _TRANSFORM), deps=("extract",)),
+            Stage(_spec("enrich", _TRANSFORM), deps=("extract",)),
+            Stage(_spec("join", _TRANSFORM), deps=("clean", "enrich")),
+            Stage(_spec("load", _LOAD), deps=("join",)),
+        ],
+        name="etl-5",
+    )
+
+    seven = WorkflowDAG(
+        [
+            Stage(_spec("extract", _EXTRACT)),
+            Stage(_spec("validate", _TRANSFORM), deps=("extract",)),
+            Stage(_spec("clean", _TRANSFORM), deps=("validate",)),
+            Stage(_spec("enrich", _TRANSFORM), deps=("validate",)),
+            Stage(_spec("aggregate", _TRANSFORM), deps=("validate",)),
+            Stage(_spec("join", _TRANSFORM), deps=("clean", "enrich", "aggregate")),
+            Stage(_spec("load", _LOAD), deps=("join",)),
+        ],
+        name="etl-7",
+    )
+    return {"etl-3": three, "etl-5": five, "etl-7": seven}

@@ -1,0 +1,56 @@
+"""Fallback shim for the optional ``hypothesis`` dev dependency.
+
+Property-based tests use hypothesis when it is installed (the ``dev``
+extra in pyproject.toml). On a clean environment the real import fails;
+test modules then fall back to this stub so that
+
+* module collection succeeds (the seed repo errored at collection), and
+* the plain (non-property) tests in the same module still run, while
+* every ``@hypothesis.given(...)`` test is reported as *skipped*.
+
+Usage in a test module::
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+    except ImportError:
+        from _hypothesis_stub import hypothesis, st
+"""
+import pytest
+
+
+class _Strategies:
+    """Any ``st.<name>(...)`` call returns an inert placeholder."""
+
+    def __getattr__(self, name):
+        return lambda *args, **kwargs: None
+
+
+class _HypothesisStub:
+    HAVE_HYPOTHESIS = False
+
+    @staticmethod
+    def given(*args, **kwargs):
+        def deco(fn):
+            # Replace with a zero-arg test so pytest does not try to resolve
+            # the strategy parameters as fixtures before the skip applies.
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():  # pragma: no cover
+                pass
+
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+
+        return deco
+
+    @staticmethod
+    def settings(*args, **kwargs):
+        def deco(fn):
+            return fn
+
+        return deco
+
+
+hypothesis = _HypothesisStub()
+st = _Strategies()

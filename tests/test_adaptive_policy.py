@@ -1,0 +1,174 @@
+"""AdaptiveMinosPolicy (§IV online thresholds) and the P² estimator it
+rests on — accuracy against np.percentile on random streams, warm-up
+semantics, and full platform integration without a pre-test phase."""
+import numpy as np
+import pytest
+
+from repro.core.estimators import P2Quantile
+from repro.core.policy import AdaptiveMinosPolicy, MinosPolicy, Verdict
+from repro.sim import (
+    FaaSPlatform,
+    FunctionSpec,
+    PlatformProfile,
+    VariationModel,
+    make_arm_policy,
+    run_closed_loop,
+)
+
+# ---------------------------------------------------------------------------
+# P² vs np.percentile on random streams
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("p", [0.1, 0.25, 0.4, 0.5, 0.75, 0.9])
+@pytest.mark.parametrize("dist,seed", [
+    ("lognormal", 0), ("lognormal", 1), ("uniform", 2),
+    ("exponential", 3), ("normal", 4),
+])
+def test_p2_matches_np_percentile(p, dist, seed):
+    rs = np.random.RandomState(seed)
+    n = 4000
+    xs = {
+        "lognormal": lambda: rs.lognormal(1.0, 0.4, n) * 50,
+        "uniform": lambda: rs.uniform(10, 200, n),
+        "exponential": lambda: rs.exponential(80, n) + 5,
+        "normal": lambda: rs.normal(500, 60, n),
+    }[dist]()
+    est = P2Quantile(p)
+    est.update_many(xs)
+    true = float(np.percentile(xs, p * 100))
+    spread = float(np.percentile(xs, 90) - np.percentile(xs, 10))
+    assert abs(est.value - true) / spread < 0.03, (dist, p, est.value, true)
+
+
+def test_p2_small_sample_is_exact_quantile():
+    est = P2Quantile(0.4)
+    for x in [30.0, 10.0, 20.0]:
+        est.update(x)
+    assert est.value == pytest.approx(float(np.quantile([30.0, 10.0, 20.0], 0.4)))
+
+
+def test_p2_shifts_with_distribution_drift():
+    rs = np.random.RandomState(5)
+    est = P2Quantile(0.4)
+    est.update_many(rs.uniform(100, 200, 2000))
+    before = est.value
+    est.update_many(rs.uniform(150, 300, 6000))
+    assert est.value > before
+
+
+# ---------------------------------------------------------------------------
+# AdaptiveMinosPolicy unit behavior
+# ---------------------------------------------------------------------------
+
+
+def test_warmup_passes_everything():
+    pol = AdaptiveMinosPolicy(0.4, warmup_reports=10)
+    assert not pol.warmed_up
+    for i in range(9):
+        pol.report(100.0 + i)
+        assert pol.judge(1e9, retry_count=0) is Verdict.PASS
+    pol.report(200.0)
+    assert pol.warmed_up
+    assert pol.judge(1e9, retry_count=0) is Verdict.TERMINATE
+
+
+def test_warmup_uses_initial_threshold_when_given():
+    pol = AdaptiveMinosPolicy(0.4, warmup_reports=10, initial_threshold=50.0)
+    # stale-pretest degraded mode: gate active from the first probe
+    assert pol.judge(60.0, retry_count=0) is Verdict.TERMINATE
+    assert pol.judge(40.0, retry_count=0) is Verdict.PASS
+
+
+def test_adaptive_threshold_tracks_quantile():
+    rs = np.random.RandomState(6)
+    pol = AdaptiveMinosPolicy(0.4, warmup_reports=25, smoothing_alpha=1.0)
+    xs = rs.lognormal(0.0, 0.3, 3000) * 100
+    for x in xs:
+        pol.report(x)
+    true = float(np.quantile(xs, 0.4))
+    assert abs(pol.elysium_threshold - true) / true < 0.05
+
+
+def test_adaptive_higher_is_better_tracks_upper_quantile():
+    """Throughput-style metric: passing the top 40% needs the 60th-
+    percentile threshold, not the 40th."""
+    rs = np.random.RandomState(7)
+    pol = AdaptiveMinosPolicy(0.4, warmup_reports=25, smoothing_alpha=1.0,
+                              higher_is_better=True)
+    xs = rs.uniform(100, 200, 4000)
+    for x in xs:
+        pol.report(x)
+    true = float(np.quantile(xs, 0.6))
+    assert abs(pol.elysium_threshold - true) / true < 0.05
+    assert pol.judge(true * 1.05, retry_count=0) is Verdict.PASS
+    assert pol.judge(true * 0.95, retry_count=0) is Verdict.TERMINATE
+
+
+def test_adaptive_emergency_exit():
+    pol = AdaptiveMinosPolicy(0.4, max_retries=3, warmup_reports=5)
+    for x in (1.0, 1.0, 1.0, 1.0, 1.0):
+        pol.report(x)
+    assert pol.judge(99.0, retry_count=3) is Verdict.FORCED_PASS
+    assert not pol.should_benchmark(retry_count=3, is_cold_start=True)
+    assert not pol.should_benchmark(retry_count=0, is_cold_start=False)
+    assert pol.should_benchmark(retry_count=0, is_cold_start=True)
+
+
+def test_make_arm_policy():
+    assert not make_arm_policy("disabled").enabled
+    fixed = make_arm_policy("fixed", threshold=123.0)
+    assert isinstance(fixed, MinosPolicy) and fixed.elysium_threshold == 123.0
+    assert isinstance(make_arm_policy("adaptive"), AdaptiveMinosPolicy)
+    with pytest.raises(ValueError):
+        make_arm_policy("fixed")
+    with pytest.raises(ValueError):
+        make_arm_policy("nope")
+
+
+# ---------------------------------------------------------------------------
+# Platform integration — §IV without a pre-test phase
+# ---------------------------------------------------------------------------
+
+
+def _spec(**kw):
+    base = dict(
+        name="t", prepare_ms=300.0, body_ms=600.0, benchmark_ms=100.0,
+        cold_start_ms=50.0, recycle_lifetime_ms=20_000.0, contention_rho=1.0,
+        benchmark_noise=0.0,
+    )
+    base.update(kw)
+    return FunctionSpec(**base)
+
+
+def test_adaptive_policy_on_platform_converges_to_oracle():
+    """Running the gate with NO pre-test: after enough probe reports the
+    live threshold approaches the analytic 40th-percentile probe duration
+    and the selected pool is faster than the population mean."""
+    vm = VariationModel(sigma=0.2)
+    pol = AdaptiveMinosPolicy(0.4, max_retries=6, warmup_reports=20)
+    plat = FaaSPlatform(
+        _spec(), vm, pol, profile=PlatformProfile.gcf_gen1(), seed=11)
+    res = run_closed_loop(plat, n_vus=8, duration_ms=8 * 60 * 1000.0)
+    assert plat.instances_terminated > 0
+    assert pol.controller.n_reports > 50
+    oracle = 100.0 / vm.speed_quantile(0.6)  # benchmark_ms / 60th-pct speed
+    assert abs(pol.elysium_threshold - oracle) / oracle < 0.15
+    warm_speeds = [r.instance_speed for r in res if not r.served_by_cold]
+    assert np.mean(warm_speeds) > vm.mean_speed
+
+
+def test_adaptive_tracks_platform_slowdown():
+    """The §IV motivation: the platform slows 30% mid-run; the adaptive
+    threshold rises instead of over-terminating forever."""
+    pol = AdaptiveMinosPolicy(0.4, max_retries=6, warmup_reports=15)
+    plat = FaaSPlatform(
+        _spec(), VariationModel(sigma=0.15), pol,
+        profile=PlatformProfile.gcf_gen1(), seed=12)
+    run_closed_loop(plat, n_vus=8, duration_ms=4 * 60 * 1000.0)
+    thr_before = pol.elysium_threshold
+    plat2 = FaaSPlatform(
+        _spec(), VariationModel(sigma=0.15, day_factor=0.7), pol,
+        profile=PlatformProfile.gcf_gen1(), seed=13)
+    run_closed_loop(plat2, n_vus=8, duration_ms=8 * 60 * 1000.0)
+    assert pol.elysium_threshold > thr_before * 1.1

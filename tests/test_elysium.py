@@ -1,8 +1,12 @@
 """Elysium threshold: pre-testing, online controller, optimal pass fraction."""
-import hypothesis
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev] extra)
+    from _hypothesis_stub import hypothesis, st
 
 from repro.core.elysium import (
     OnlineElysiumController,

@@ -1,7 +1,10 @@
 """Online estimators: exactness (Welford), convergence (P²), and the
 Python/JAX implementations agreeing — including hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev] extra)
+    from _hypothesis_stub import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

@@ -1,6 +1,9 @@
 """MinosPolicy, emergency exit, cost model (paper §II-A, Fig 3)."""
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev] extra)
+    from _hypothesis_stub import hypothesis, st
 import pytest
 
 from repro.core.cost import Pricing, WorkflowCost, total_cost

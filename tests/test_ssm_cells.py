@@ -1,6 +1,9 @@
 """Chunked recurrent cells vs naive per-step recurrences (the oracles)."""
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev] extra)
+    from _hypothesis_stub import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np
