@@ -1,0 +1,159 @@
+"""24 h diurnal sweep: the adaptive elysium threshold vs a fixed pre-tested
+one under time-of-day platform variation (EXPERIMENTS.md §Diurnal sweep).
+
+The Night Shift (Schirmer et al.; PAPERS.md) measures >10 % faster FaaS
+execution at night. ``VariationModel.diurnal`` models that cycle; this sweep
+quantifies what it does to the §III-A protocol: a threshold pre-tested at
+one hour (the paper measured 3–4 pm UTC) is miscalibrated for the rest of
+the day — too lax when the platform speeds up, too harsh when it slows —
+while the §IV adaptive policy re-estimates the pass quantile from the live
+probe stream and tracks the cycle. Rows are per simulated hour; the
+headline reports each arm's analysis-time improvement over the ungated
+baseline and the correlation between the adaptive threshold and the
+(inverted) diurnal speed factor.
+
+Usage: PYTHONPATH=src python benchmarks/diurnal_sweep.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core.elysium import pretest_threshold
+from repro.core.policy import AdaptiveMinosPolicy, MinosPolicy
+from repro.sim import FaaSPlatform, FunctionSpec, VariationModel, improvement
+from repro.sim.experiment import PAPER_PRICING, PASS_FRACTION
+from repro.sim.workload import run_closed_loop
+
+# PAPER_SPEC shape, with the probe/body ratio kept and churn retained so
+# cold-start probes keep flowing all day
+SPEC = FunctionSpec(
+    name="weather-linreg-diurnal",
+    prepare_ms=1500.0,
+    body_ms=1800.0,
+    benchmark_ms=450.0,
+    cold_start_ms=250.0,
+    recycle_lifetime_ms=45_000.0,
+    contention_rho=0.95,
+    benchmark_noise=0.08,
+)
+DIURNAL_AMPLITUDE = 0.12   # Night Shift: >10 % day/night swing
+PRETEST_HOUR = 15.0        # the paper's 3-4 pm UTC measurement slot
+HOUR_MS = 3.6e6
+
+
+class _RecordingAdaptive(AdaptiveMinosPolicy):
+    """Adaptive policy that timestamps its threshold after every report
+    (``clock`` is attached once the platform exists)."""
+
+    def __init__(self, *args, **kw) -> None:
+        super().__init__(*args, **kw)
+        self.clock = None
+        self.timeline: list[tuple[float, float]] = []
+
+    def report(self, benchmark_result: float) -> None:
+        super().report(benchmark_result)
+        if self.clock is not None and self.warmed_up:
+            self.timeline.append((self.clock.now, self.elysium_threshold))
+
+
+def _pretest_at_hour(vm: VariationModel, hour: float, seed: int) -> float:
+    """§III-A measured pre-test, run in a short window starting at ``hour``."""
+    disabled = MinosPolicy(elysium_threshold=float("inf"), enabled=False)
+    plat = FaaSPlatform(SPEC, vm, disabled, PAPER_PRICING, seed=seed)
+    res = run_closed_loop(plat, n_vus=10, duration_ms=60_000.0,
+                          start_ms=hour * HOUR_MS)
+    speeds = [r.instance_speed for r in res if r.served_by_cold] or \
+             [r.instance_speed for r in res]
+    return pretest_threshold([SPEC.benchmark_ms / s for s in speeds], PASS_FRACTION)
+
+
+def diurnal_sweep(quick: bool = False, *, hours: float | None = None,
+                  n_vus: int | None = None, seed: int = 42):
+    hours = hours if hours is not None else (8.0 if quick else 24.0)
+    n_vus = n_vus if n_vus is not None else (6 if quick else 10)
+    vm = VariationModel(sigma=0.15, diurnal_amplitude=DIURNAL_AMPLITUDE)
+
+    fixed_thr = _pretest_at_hour(vm, PRETEST_HOUR, seed=seed * 7919)
+    arms = {
+        "disabled": MinosPolicy(elysium_threshold=float("inf"), enabled=False),
+        "fixed": MinosPolicy(elysium_threshold=fixed_thr, max_retries=5),
+        "adaptive": _RecordingAdaptive(PASS_FRACTION, max_retries=5),
+    }
+
+    per_arm_hour: dict[str, dict[int, list[float]]] = {}
+    per_arm_mean: dict[str, float] = {}
+    terminated: dict[str, int] = {}
+    adaptive_timeline: list[tuple[float, float]] = []
+    for arm, policy in arms.items():
+        plat = FaaSPlatform(SPEC, vm, policy, PAPER_PRICING, seed=seed)
+        if isinstance(policy, _RecordingAdaptive):
+            policy.clock = plat.loop
+        res = run_closed_loop(plat, n_vus=n_vus, duration_ms=hours * HOUR_MS)
+        buckets: dict[int, list[float]] = {}
+        for r in res:
+            buckets.setdefault(int(r.t_completed_ms // HOUR_MS), []).append(r.analysis_ms)
+        per_arm_hour[arm] = buckets
+        per_arm_mean[arm] = float(np.mean([r.analysis_ms for r in res]))
+        terminated[arm] = plat.instances_terminated
+        if isinstance(policy, _RecordingAdaptive):
+            adaptive_timeline = policy.timeline
+
+    thr_by_hour: dict[int, list[float]] = {}
+    for t, thr in adaptive_timeline:
+        thr_by_hour.setdefault(int(t // HOUR_MS), []).append(thr)
+
+    rows = []
+    for h in sorted(per_arm_hour["disabled"]):
+        thr_h = float(np.mean(thr_by_hour[h])) if h in thr_by_hour else float("nan")
+        rows.append({
+            "hour": h,
+            "diurnal_factor": round(vm.diurnal((h + 0.5) * HOUR_MS), 4),
+            "disabled_ms": round(float(np.mean(per_arm_hour["disabled"][h])), 1),
+            "fixed_ms": round(float(np.mean(per_arm_hour["fixed"].get(h, [np.nan]))), 1),
+            "adaptive_ms": round(float(np.mean(per_arm_hour["adaptive"].get(h, [np.nan]))), 1),
+            "adaptive_thr_ms": round(thr_h, 1),
+            "fixed_thr_ms": round(fixed_thr, 1),
+        })
+
+    # does the adaptive threshold track the cycle? threshold ∝ 1/diurnal in
+    # log space, so corr(log thr, -log diurnal) → +1 under perfect tracking
+    tracked = [(np.log(r["adaptive_thr_ms"]), -np.log(r["diurnal_factor"]))
+               for r in rows if np.isfinite(r["adaptive_thr_ms"])]
+    if len(tracked) >= 3:
+        a, d = np.array(tracked).T
+        tracking_corr = float(np.corrcoef(a, d)[0, 1])
+    else:
+        tracking_corr = float("nan")
+
+    imp_fixed = improvement(per_arm_mean["disabled"], per_arm_mean["fixed"])
+    imp_adaptive = improvement(per_arm_mean["disabled"], per_arm_mean["adaptive"])
+    headline = (
+        f"fixed_improvement={imp_fixed*100:.1f}%"
+        f"_adaptive_improvement={imp_adaptive*100:.1f}%"
+        f"_adaptive_advantage={(imp_adaptive-imp_fixed)*100:.1f}pp"
+        f"_tracking_corr={tracking_corr:.2f}"
+    )
+    return rows, headline
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="8 h window, 6 VUs")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: 2 h window, 4 VUs")
+    args = ap.parse_args()
+    if args.smoke:
+        rows, headline = diurnal_sweep(quick=True, hours=2.0, n_vus=4)
+    else:
+        rows, headline = diurnal_sweep(quick=args.quick)
+    print(f"diurnal_sweep,{headline}")
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

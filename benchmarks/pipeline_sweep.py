@@ -1,0 +1,107 @@
+"""Gated-vs-ungated sweep of the whisper→llama serving pipeline
+(EXPERIMENTS.md §Pipeline sweep).
+
+The paper's §V workflow argument on REAL model compute: both stages keep a
+Minos-gated replica pool, the fast pools are re-used across every item, and
+the sweep reports end-to-end item latency, body (compute) time, and cost
+per item for each arm. ``--smoke`` runs a tiny config (CI entry-point
+guard); model outputs are asserted identical across arms.
+
+Usage: PYTHONPATH=src python benchmarks/pipeline_sweep.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.serving.pipeline import (
+    PIPELINE_ARMS,
+    PipelineSpec,
+    build_asr_llm_pipeline,
+    pipeline_arm_factory,
+    pipeline_pricing,
+)
+from repro.sim.variation import VariationModel
+from repro.sim.workflow_dag import WorkflowEngine, run_workflow_batch
+
+
+def pipeline_sweep(quick: bool = False, *, n_items: int | None = None,
+                   seeds: tuple[int, ...] | None = None,
+                   spec: PipelineSpec | None = None):
+    spec = spec or PipelineSpec()
+    n_items = n_items if n_items is not None else (12 if quick else 30)
+    seeds = seeds if seeds is not None else ((3,) if quick else (3, 4))
+    vm = VariationModel(sigma=spec.speed_sigma)
+    dag, backends = build_asr_llm_pipeline(spec, seed=0)  # weights shared by all arms
+
+    rows = []
+    agg: dict[str, dict[str, float]] = {}
+    outputs: dict[str, list] = {}
+    for arm in PIPELINE_ARMS:
+        lat, body, cost, term = [], [], [], []
+        for seed in seeds:
+            eng = WorkflowEngine(dag, vm, pipeline_arm_factory(arm),
+                                 pricing=pipeline_pricing(), seed=seed)
+            run = run_workflow_batch(eng, n_items=n_items, inter_arrival_ms=400.0,
+                                     payload_fn=lambda i: {"audio_id": i})
+            run.items.sort(key=lambda it: it.item_id)
+            if seed == seeds[0]:
+                outputs[arm] = [it.stage_results["llm"].output for it in run.items]
+            lat.append(run.mean_item_latency_ms)
+            body.append(run.mean_item_analysis_ms)
+            cost.append(run.cost.total / max(1, run.n_items))
+            term.append(eng.instances_terminated)
+        agg[arm] = {
+            "latency_ms": float(np.mean(lat)),
+            "body_ms": float(np.mean(body)),
+            "cost_per_item": float(np.mean(cost)),
+            "terminated": float(np.mean(term)),
+        }
+        rows.append({
+            "arm": arm,
+            "items": n_items,
+            "mean_item_ms": round(agg[arm]["latency_ms"], 1),
+            "mean_body_ms": round(agg[arm]["body_ms"], 1),
+            "cost_per_item_usd": round(agg[arm]["cost_per_item"], 6),
+            "terminated": round(agg[arm]["terminated"], 1),
+        })
+
+    # instance selection is performance-transparent: identical tokens per item
+    for arm in PIPELINE_ARMS[1:]:
+        for a, b in zip(outputs[PIPELINE_ARMS[0]], outputs[arm]):
+            assert np.array_equal(a, b), "pipeline outputs must not depend on gating"
+
+    base = agg["disabled"]
+    body_gain = (base["body_ms"] - agg["fixed"]["body_ms"]) / base["body_ms"]
+    lat_gain = (base["latency_ms"] - agg["fixed"]["latency_ms"]) / base["latency_ms"]
+    cost_ratio = agg["fixed"]["cost_per_item"] / base["cost_per_item"]
+    headline = (
+        f"gated_body_gain={body_gain*100:.1f}%_latency_gain={lat_gain*100:.1f}%"
+        f"_cost_ratio={cost_ratio:.2f}_outputs_identical=True"
+    )
+    return rows, headline
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer items/seeds")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: 4 items, short decodes")
+    args = ap.parse_args()
+    if args.smoke:
+        rows, headline = pipeline_sweep(
+            quick=True, n_items=4, seeds=(3,),
+            spec=PipelineSpec(transcript_tokens=3, answer_tokens=4, max_pool=3),
+        )
+    else:
+        rows, headline = pipeline_sweep(quick=args.quick)
+    print(f"pipeline_sweep,{headline}")
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

@@ -15,10 +15,13 @@ def main() -> None:
     ap.add_argument("--only", default="", help="comma-separated benchmark names")
     args = ap.parse_args()
 
-    from . import figs, kernels_micro, roofline_table, workflow_sweep
+    from . import (diurnal_sweep, figs, kernels_micro, pipeline_sweep,
+                   roofline_table, workflow_sweep)
 
     benches = {
         "workflow_sweep": workflow_sweep.workflow_sweep,
+        "pipeline_sweep": pipeline_sweep.pipeline_sweep,
+        "diurnal_sweep": diurnal_sweep.diurnal_sweep,
         "fig4_regression_duration": figs.fig4_regression_duration,
         "fig5_successful_requests": figs.fig5_successful_requests,
         "fig6_cost_per_day": figs.fig6_cost_per_day,

@@ -33,6 +33,15 @@ from .policy import (
     runaway_probability,
 )
 from .queue import Invocation, InvocationQueue
+from .substrate import (
+    ElysiumGate,
+    InstancePool,
+    RequestResult,
+    SimClock,
+    SubstrateEngine,
+    SubstrateKnobs,
+    sample_jitter,
+)
 
 __all__ = [
     "CallableProbe", "MatmulProbe", "effective_cold_start_overhead_ms", "overlap_fraction",
@@ -46,4 +55,6 @@ __all__ = [
     "AdaptiveMinosPolicy", "MinosPolicy", "Verdict", "expected_cold_start_attempts",
     "retries_for_runaway_budget", "runaway_probability",
     "Invocation", "InvocationQueue",
+    "ElysiumGate", "InstancePool", "RequestResult", "SimClock",
+    "SubstrateEngine", "SubstrateKnobs", "sample_jitter",
 ]

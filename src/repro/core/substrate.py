@@ -1,0 +1,528 @@
+"""The shared execution substrate (DESIGN.md §9).
+
+One copy of the machinery that used to exist twice — once in
+``sim/platform.py`` and again, divergently, in ``serving/engine.py``:
+
+* :class:`SimClock` — the discrete event loop (simulated milliseconds);
+* :class:`InstancePool` — the warm pool: LIFO/FIFO reuse order,
+  per-instance request concurrency, idle-timeout reclaim, and
+  platform-initiated recycling;
+* :class:`ElysiumGate` — the Minos pass/terminate decision point: records
+  every cold-start probe observation, feeds it to an online controller or
+  an :class:`~repro.core.policy.AdaptiveMinosPolicy` (the §IV wiring), and
+  judges the instance against the effective threshold;
+* :class:`SubstrateEngine` — the generic invocation-processing loop
+  (queue → dispatch → warm reuse | gated cold start → complete/requeue)
+  with the Fig-3 cost accounting.
+
+What *differs* between the simulator and the model-serving engine is
+isolated behind the :class:`Backend` protocol: where fresh-instance speeds
+come from, how the prepare phase and probe are observed, and — crucially —
+what the body *is*: a sampled duration for a simulated
+:class:`~repro.sim.platform.FunctionSpec`, real JAX prefill/decode for a
+serving replica (``serving/backend.py``). Everything else (pool dynamics,
+gating, billing, requeue semantics, contention drift hooks) is shared, so
+behavior can no longer drift between the two paths.
+
+Time unit: milliseconds of simulated time; deterministic given a seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+import math
+from typing import Any, Callable, Optional, Protocol
+
+import numpy as np
+
+from .cost import Pricing, WorkflowCost
+from .lifecycle import FunctionInstance, InstanceState
+from .policy import Verdict
+from .queue import Invocation, InvocationQueue
+
+
+# ---------------------------------------------------------------------------
+# Clock
+# ---------------------------------------------------------------------------
+
+
+class SimClock:
+    """Discrete event loop over simulated milliseconds."""
+
+    def __init__(self) -> None:
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+        self.now = 0.0
+
+    def at(self, t_ms: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (t_ms, next(self._seq), fn))
+
+    def after(self, dt_ms: float, fn: Callable[[], None]) -> None:
+        self.at(self.now + dt_ms, fn)
+
+    def run_until(self, t_end_ms: float) -> None:
+        while self._heap and self._heap[0][0] <= t_end_ms:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+        self.now = max(self.now, t_end_ms)
+
+    def run_all(self, hard_limit_ms: float = float("inf")) -> None:
+        while self._heap and self._heap[0][0] <= hard_limit_ms:
+            t, _, fn = heapq.heappop(self._heap)
+            self.now = t
+            fn()
+
+
+def sample_jitter(rng: np.random.RandomState, scale: float) -> float:
+    """Multiplicative lognormal jitter; scale<=0 draws nothing (exactly 1.0),
+    so disabling a noise term also removes its RNG consumption."""
+    if scale <= 0.0:
+        return 1.0
+    return float(np.exp(rng.normal(0.0, scale)))
+
+
+def ar1_drift(
+    inst: FunctionInstance,
+    rng: np.random.RandomState,
+    *,
+    day_mean: float,
+    sigma: float,
+    rho: float,
+) -> None:
+    """Co-tenancy drift, shared by both backends: AR(1) on the instance's
+    log-relative speed. The benchmark certified the speed at cold-start
+    time, but node neighbors change, so the advantage decays toward the
+    day mean. rho>=1 is the frozen (idealized) model and draws nothing."""
+    if rho >= 1.0:
+        return
+    log_rel = math.log(inst.speed_factor / day_mean)
+    noise = rng.normal(0.0, sigma)
+    log_rel = rho * log_rel + math.sqrt(1.0 - rho * rho) * noise
+    inst.speed_factor = day_mean * math.exp(log_rel)
+
+
+# ---------------------------------------------------------------------------
+# Warm pool
+# ---------------------------------------------------------------------------
+
+
+class InstancePool:
+    """WARM instances with spare request capacity, in reuse order.
+
+    * ``order`` — "lifo": most recently used first (GCF gen1 / Lambda MRU
+      reuse); "fifo": oldest available first (load-balancer spread).
+    * ``concurrency`` — requests one warm instance serves at once; an
+      instance at capacity leaves the available list until a slot frees.
+    * ``recycle_lifetime_ms`` — platform-initiated instance rotation:
+      each cold start draws an exponential lifetime deadline from ``rng``.
+    * ``max_size`` — optional cap on *available* instances (serving
+      replica pools); a release that would exceed it expires the instance.
+
+    Invariants (tested in tests/test_unified_substrate.py): an instance
+    with requests in flight is never reclaimed; every pooled instance is
+    WARM, i.e. passed the gate (or was force-accepted) on its first
+    invocation.
+    """
+
+    def __init__(
+        self,
+        *,
+        order: str = "lifo",
+        concurrency: int = 1,
+        recycle_lifetime_ms: float | None = None,
+        rng: Optional[np.random.RandomState] = None,
+        max_size: Optional[int] = None,
+    ) -> None:
+        if order not in ("lifo", "fifo"):
+            raise ValueError(f"order must be 'lifo' or 'fifo', got {order!r}")
+        if concurrency < 1:
+            raise ValueError("concurrency must be >= 1")
+        self.order = order
+        self.concurrency = concurrency
+        self.recycle_lifetime_ms = recycle_lifetime_ms
+        self.max_size = max_size
+        self._rng = rng
+        self.available: list[FunctionInstance] = []
+        self._active: dict[int, int] = {}  # instance_id -> in-flight requests
+        self._recycle_deadline: dict[int, float] = {}
+
+    # -- lifecycle entry points ----------------------------------------
+    def admit_cold(self, inst: FunctionInstance, now: float) -> None:
+        """Register a freshly started instance with one request in flight
+        (it is serving the invocation that caused the cold start)."""
+        self._active[inst.instance_id] = 1
+        if self.recycle_lifetime_ms is not None:
+            assert self._rng is not None, "recycling requires an rng"
+            self._recycle_deadline[inst.instance_id] = now + float(
+                self._rng.exponential(self.recycle_lifetime_ms)
+            )
+
+    def take(self, now: float) -> Optional[FunctionInstance]:
+        """Reserve one request slot on a warm instance, or None."""
+        # reclaim idle-expired and platform-recycled instances (never ones
+        # with requests in flight)
+        self.available = [
+            i for i in self.available
+            if self._active.get(i.instance_id, 0) > 0
+            or (not i.maybe_expire(now) and not self._recycled(i, now))
+        ]
+        if not self.available:
+            return None
+        idx = len(self.available) - 1 if self.order == "lifo" else 0
+        inst = self.available[idx]
+        n = self._active.get(inst.instance_id, 0) + 1
+        self._active[inst.instance_id] = n
+        if n >= self.concurrency:  # at capacity: no longer available
+            self.available.pop(idx)
+        return inst
+
+    def release(self, inst: FunctionInstance) -> None:
+        """A request on ``inst`` completed: free one concurrency slot and
+        return the instance to the available pool if it left it."""
+        n = self._active.get(inst.instance_id, 0) - 1
+        if n <= 0:
+            self._active.pop(inst.instance_id, None)
+        else:
+            self._active[inst.instance_id] = n
+        if inst.state is InstanceState.WARM and inst not in self.available:
+            if self.max_size is not None and len(self.available) >= self.max_size:
+                inst.state = InstanceState.EXPIRED  # pool full: despawn
+                return
+            self.available.append(inst)
+
+    def drop(self, inst: FunctionInstance) -> None:
+        """A terminated (gate-failed) instance leaves without serving."""
+        self._active.pop(inst.instance_id, None)
+
+    def _recycled(self, inst: FunctionInstance, now: float) -> bool:
+        deadline = self._recycle_deadline.get(inst.instance_id)
+        if deadline is not None and now >= deadline:
+            inst.state = InstanceState.EXPIRED
+            return True
+        return False
+
+    # -- views ----------------------------------------------------------
+    @property
+    def speeds(self) -> list[float]:
+        return [i.speed_factor for i in self.available if i.state is InstanceState.WARM]
+
+    def __len__(self) -> int:
+        return len(self.available)
+
+
+# ---------------------------------------------------------------------------
+# Gate
+# ---------------------------------------------------------------------------
+
+
+class ElysiumGate:
+    """The Minos decision point, shared by both backends.
+
+    Owns the probe-observation stream: every cold-start probe result is
+    recorded and — before judging — reported to the online controller
+    (§IV: passing AND failing probes, otherwise the estimate is
+    survivor-biased) or to an :class:`~repro.core.policy.AdaptiveMinosPolicy`
+    (anything with a ``report`` method — the policy IS the controller,
+    DESIGN.md §6). The instance then judges itself against the latest
+    published threshold.
+    """
+
+    def __init__(self, policy, online_controller=None) -> None:
+        self.policy = policy
+        self.online_controller = online_controller
+        self.observations: list[float] = []
+
+    def should_probe(self, retry_count: int, *, is_cold_start: bool = True) -> bool:
+        return self.policy.should_benchmark(retry_count, is_cold_start=is_cold_start)
+
+    def judge(self, inst: FunctionInstance, observed_ms: float, retry_count: int) -> Verdict:
+        self.observations.append(observed_ms)
+        policy = self.policy
+        if self.online_controller is not None:
+            self.online_controller.report(observed_ms)
+            policy = dataclasses.replace(
+                self.policy, elysium_threshold=self.online_controller.threshold
+            )
+        elif hasattr(self.policy, "report"):
+            self.policy.report(observed_ms)
+        return inst.judge(policy, retry_count)
+
+
+# ---------------------------------------------------------------------------
+# Backend protocol
+# ---------------------------------------------------------------------------
+
+
+class Backend(Protocol):
+    """What an execution backend must supply; everything else is shared.
+
+    Durations are *observed* milliseconds (jitter/noise already applied);
+    every random draw must come from the ``rng`` argument so runs stay
+    deterministic per seed.
+    """
+
+    name: str
+
+    def sample_speed(self, rng: np.random.RandomState, t_ms: float) -> float:
+        """Hidden speed factor of a freshly placed instance."""
+        ...
+
+    def reuse_drift(self, inst: FunctionInstance, rng: np.random.RandomState, t_ms: float) -> None:
+        """Mutate ``inst.speed_factor`` for co-tenancy drift on reuse."""
+        ...
+
+    def prepare_ms(self, rng: np.random.RandomState) -> float:
+        """Observed prepare-phase duration (network-bound: does not scale
+        with instance speed). Runs concurrently with the probe."""
+        ...
+
+    def probe(self, inst: FunctionInstance, rng: np.random.RandomState) -> float:
+        """Run the benchmark probe on ``inst``; returns the observed
+        duration and leaves it in ``inst.benchmark_result``."""
+        ...
+
+    def body(
+        self, payload: Any, inst: FunctionInstance, rng: np.random.RandomState
+    ) -> tuple[float, Any]:
+        """Execute the body work for ``payload`` on ``inst``; returns
+        (observed duration, output). The output rides on the
+        :class:`RequestResult` (None for simulated functions)."""
+        ...
+
+    def requeue_penalty_ms(self, payload: Any) -> float:
+        """Extra delay when ``payload`` migrates to another instance after
+        a termination (e.g. KV-cache re-prefill for attention families)."""
+        ...
+
+
+@dataclasses.dataclass
+class RequestResult:
+    invocation_id: int
+    t_submitted_ms: float
+    t_completed_ms: float
+    download_ms: float        # observed prepare duration
+    analysis_ms: float        # observed body duration
+    retries: int              # terminated instances this request caused
+    served_by_cold: bool      # final (serving) instance was a cold start
+    instance_speed: float
+    benchmark_ms: Optional[float] = None  # probe duration on serving instance
+    output: Any = None                    # backend body output (serving: tokens)
+
+    @property
+    def latency_ms(self) -> float:
+        return self.t_completed_ms - self.t_submitted_ms
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SubstrateKnobs:
+    """Platform-level hosting knobs, backend-independent (the overlap of
+    :class:`~repro.sim.platform.PlatformProfile` and the serving engine's
+    constructor arguments)."""
+
+    cold_start_ms: float = 250.0
+    cold_start_jitter: float = 0.25
+    idle_timeout_ms: float = 15 * 60 * 1000.0
+    recycle_lifetime_ms: float | None = 7 * 60 * 1000.0
+    bill_cold_start: bool = True
+    requeue_overhead_ms: float = 30.0
+    warm_pool_order: str = "lifo"
+    per_instance_concurrency: int = 1
+    max_pool: Optional[int] = None
+
+
+class SubstrateEngine:
+    """The unified invocation-processing loop.
+
+    On a cold start the probe runs concurrently with the backend's
+    prepare phase (paper Fig 2); the instance judges itself at the
+    :class:`ElysiumGate` and either proceeds (body starts once BOTH
+    prepare and probe are done) or re-queues the invocation and crashes.
+    Warm instances are reused without re-benchmarking (paper §II-B).
+    """
+
+    def __init__(
+        self,
+        backend: Backend,
+        policy,
+        pricing: Pricing,
+        *,
+        knobs: SubstrateKnobs = SubstrateKnobs(),
+        seed: int = 0,
+        online_controller=None,
+        clock: Optional[SimClock] = None,
+        rng: Optional[np.random.RandomState] = None,
+    ) -> None:
+        self.backend = backend
+        self.knobs = knobs
+        self.gate = ElysiumGate(policy, online_controller)
+        self.pricing = pricing
+        self.rng = rng if rng is not None else np.random.RandomState(seed)
+        self.loop = clock if clock is not None else SimClock()
+        self.queue = InvocationQueue()
+        self.pool = InstancePool(
+            order=knobs.warm_pool_order,
+            concurrency=knobs.per_instance_concurrency,
+            recycle_lifetime_ms=knobs.recycle_lifetime_ms,
+            rng=self.rng,
+            max_size=knobs.max_pool,
+        )
+        self.cost = WorkflowCost(pricing)
+        self.results: list[RequestResult] = []
+        self.instances_started = 0
+        self.instances_terminated = 0
+        self.termination_events: list[tuple[float, float]] = []  # (t_ms, billed_ms)
+
+    # -- compatibility views -------------------------------------------
+    @property
+    def policy(self):
+        return self.gate.policy
+
+    @property
+    def online_controller(self):
+        return self.gate.online_controller
+
+    @property
+    def benchmark_observations(self) -> list[float]:
+        return self.gate.observations
+
+    @property
+    def warm_pool_speeds(self) -> list[float]:
+        return self.pool.speeds
+
+    # ------------------------------------------------------------------
+    def submit(self, payload: Any, on_complete: Callable[[RequestResult], None] | None = None) -> None:
+        inv = Invocation(payload={"on_complete": on_complete, "user": payload},
+                         enqueued_at_ms=self.loop.now)
+        inv.first_enqueued_at_ms = self.loop.now
+        self.queue.push(inv, self.loop.now)
+        self.loop.after(0.0, self._dispatch)
+
+    def _dispatch(self) -> None:
+        if len(self.queue) == 0:
+            return
+        inv = self.queue.pop()
+        warm = self.pool.take(self.loop.now)
+        if warm is not None:
+            self._run_on_warm(inv, warm)
+        else:
+            self._cold_start(inv)
+
+    # ------------------------------------------------------------------
+    def _run_on_warm(self, inv: Invocation, inst: FunctionInstance) -> None:
+        t0 = self.loop.now
+        self.backend.reuse_drift(inst, self.rng, t0)
+        download = self.backend.prepare_ms(self.rng)
+        analysis, output = self.backend.body(inv.payload["user"], inst, self.rng)
+        duration = download + analysis
+
+        def _complete() -> None:
+            inst.serve(self.loop.now)
+            self.cost.record_reused(duration)
+            self.pool.release(inst)
+            self._finish(inv, t0, download, analysis, served_by_cold=False,
+                         speed=inst.speed_factor, bench=None, output=output)
+            self._dispatch()
+
+        self.loop.after(duration, _complete)
+
+    def _cold_start(self, inv: Invocation) -> None:
+        knobs = self.knobs
+        t0 = self.loop.now
+        self.instances_started += 1
+        speed = self.backend.sample_speed(self.rng, t0)
+        inst = FunctionInstance(
+            speed_factor=speed,
+            created_at_ms=t0,
+            idle_timeout_ms=knobs.idle_timeout_ms,
+        )
+        self.pool.admit_cold(inst, t0)
+        cold = knobs.cold_start_ms * sample_jitter(self.rng, knobs.cold_start_jitter)
+        download = self.backend.prepare_ms(self.rng)
+
+        billed_cold = cold if knobs.bill_cold_start else 0.0
+
+        if not self.gate.should_probe(inv.retry_count, is_cold_start=True):
+            # baseline arm, or emergency exit: run the body directly
+            inst.accept_without_benchmark()  # FORCED_PASS / baseline accept
+            analysis, output = self.backend.body(inv.payload["user"], inst, self.rng)
+            duration = download + analysis
+
+            def _complete_direct() -> None:
+                inst.serve(self.loop.now)
+                self.cost.record_passed(billed_cold + duration)
+                self.pool.release(inst)
+                self._finish(inv, t0, download, analysis, served_by_cold=True,
+                             speed=speed, bench=None, output=output)
+                self._dispatch()
+
+            self.loop.after(cold + duration, _complete_direct)
+            return
+
+        # Minos path: probe runs in parallel with the prepare phase.
+        bench = self.backend.probe(inst, self.rng)
+        verdict = self.gate.judge(inst, bench, inv.retry_count)
+        if verdict is Verdict.TERMINATE:
+            # judged as soon as the probe finishes; requeue + crash.
+            # Billed: startup + probe wall time (prepare is torn down with
+            # the instance; the platform bills active instance time).
+            self.instances_terminated += 1
+            self.pool.drop(inst)
+            billed = billed_cold + bench
+            delay = knobs.requeue_overhead_ms + self.backend.requeue_penalty_ms(
+                inv.payload["user"]
+            )
+
+            def _crash() -> None:
+                self.cost.record_terminated(billed)
+                self.termination_events.append((self.loop.now, billed))
+                self.queue.requeue(inv, self.loop.now)
+                self.loop.after(delay, self._dispatch)
+
+            self.loop.after(cold + bench, _crash)
+            return
+
+        # passed (or forced): body starts once BOTH prepare and probe done
+        analysis, output = self.backend.body(inv.payload["user"], inst, self.rng)
+        ready = max(download, bench)
+        duration = ready + analysis
+
+        def _complete_pass() -> None:
+            inst.serve(self.loop.now)
+            self.cost.record_passed(billed_cold + duration)
+            self.pool.release(inst)
+            self._finish(inv, t0, download, analysis, served_by_cold=True,
+                         speed=speed, bench=bench, output=output)
+            self._dispatch()
+
+        self.loop.after(cold + duration, _complete_pass)
+
+    # ------------------------------------------------------------------
+    def _finish(
+        self, inv: Invocation, t0: float, download: float, analysis: float,
+        *, served_by_cold: bool, speed: float, bench: Optional[float],
+        output: Any = None,
+    ) -> None:
+        res = RequestResult(
+            invocation_id=inv.invocation_id,
+            # NB: 0.0 is a valid submit time — only None falls back to t0
+            t_submitted_ms=t0 if inv.first_enqueued_at_ms is None else inv.first_enqueued_at_ms,
+            t_completed_ms=self.loop.now,
+            download_ms=download,
+            analysis_ms=analysis,
+            retries=inv.terminations_experienced,
+            served_by_cold=served_by_cold,
+            instance_speed=speed,
+            benchmark_ms=bench,
+            output=output,
+        )
+        self.results.append(res)
+        cb = inv.payload.get("on_complete")
+        if cb is not None:
+            cb(res)

@@ -1,0 +1,15 @@
+"""Pallas API compatibility shims shared by all kernels (ROADMAP: Pallas
+API dual-support).
+
+jax < 0.6 names the TPU compiler-params container ``TPUCompilerParams``;
+jax >= 0.6 renames it ``CompilerParams``. Every kernel imports the alias
+from here instead of carrying its own copy; the supported jax range is
+pinned in ``pyproject.toml`` and enforced by CI running the tier-1 suite.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

@@ -18,8 +18,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-# jax < 0.6 names the TPU compiler-params container TPUCompilerParams
-_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+from ._compat import CompilerParams as _CompilerParams
 
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):

@@ -1,0 +1,167 @@
+"""Model-serving backend for the shared execution substrate (DESIGN.md §9).
+
+The FaaS→TPU-serving adaptation (DESIGN.md §2) expressed as a
+:class:`~repro.core.substrate.Backend`: a *replica* is just a substrate
+instance whose body work is REAL JAX prefill/decode of the configured
+architecture instead of a sampled duration. Everything else — the warm
+replica pool, the elysium gate, the simulated clock, requeue semantics,
+platform profiles, contention drift — comes from the substrate, identical
+to the simulator path.
+
+Work units: prefill = S tokens × c_prefill, decode = steps × c_decode ms at
+unit speed; observed duration = work / replica speed. ``requeue_penalty_ms``
+accounts for the family asymmetry when an in-flight stream migrates to a new
+replica: full-attention archs must re-prefill their KV cache (enc-dec archs
+re-encode the audio window), SSM archs just replay O(d_state) state
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.lifecycle import FunctionInstance
+from repro.core.substrate import SubstrateKnobs, ar1_drift, sample_jitter
+from repro.models.model import Model, build_model, greedy_token
+from repro.sim.variation import VariationModel
+
+
+@dataclasses.dataclass
+class ServeRequest:
+    prompt: np.ndarray          # (S,) int32
+    max_new_tokens: int = 16
+    request_id: int = 0
+
+
+@dataclasses.dataclass
+class ServeResult:
+    request_id: int
+    tokens: np.ndarray
+    sim_duration_ms: float
+    replica_speed: float
+    retries: int
+    latency_ms: float = 0.0     # end-to-end simulated latency (queue + cold + body)
+
+
+class ModelServingBackend:
+    """Substrate backend whose body is real model compute.
+
+    Replica speed heterogeneity (co-tenant hosts, thermal variation,
+    degraded links) comes from a :class:`VariationModel` — the same
+    distribution family the simulator uses, so serving runs can exercise
+    diurnal cycles and day drift too. ``contention_rho`` < 1 adds the
+    per-serve AR(1) drift of a replica's certified speed (1.0 = frozen,
+    the idealized model).
+    """
+
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        *,
+        seed: int = 0,
+        variation: Optional[VariationModel] = None,
+        speed_sigma: float = 0.15,
+        probe_work_ms: float = 200.0,
+        probe_noise: float = 0.0,
+        weight_load_ms: float = 400.0,   # the 'prepare' phase that hides the probe
+        c_prefill_ms_per_tok: float = 0.5,
+        c_decode_ms_per_tok: float = 5.0,
+        contention_rho: float = 1.0,
+        max_pool: Optional[int] = 8,
+        name: Optional[str] = None,
+        model: Optional[Model] = None,
+        params: Any = None,
+    ) -> None:
+        self.cfg = cfg
+        self.model = model if model is not None else build_model(cfg)
+        self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
+        self.variation = variation if variation is not None else VariationModel(sigma=speed_sigma)
+        self.probe_work_ms = probe_work_ms
+        self.probe_noise = probe_noise
+        self.weight_load_ms = weight_load_ms
+        self.c_prefill = c_prefill_ms_per_tok
+        self.c_decode = c_decode_ms_per_tok
+        self.contention_rho = contention_rho
+        self.max_pool = max_pool
+        self.name = name if name is not None else f"serve-{cfg.arch_id}"
+
+    # -- substrate hooks -----------------------------------------------
+    def sample_speed(self, rng: np.random.RandomState, t_ms: float) -> float:
+        return self.variation.sample_speed(rng, t_ms=t_ms)
+
+    def reuse_drift(self, inst: FunctionInstance, rng: np.random.RandomState, t_ms: float) -> None:
+        ar1_drift(
+            inst, rng,
+            day_mean=self.variation.day_factor * self.variation.diurnal(t_ms),
+            sigma=self.variation.sigma,
+            rho=self.contention_rho,
+        )
+
+    def prepare_ms(self, rng: np.random.RandomState) -> float:
+        return self.weight_load_ms
+
+    def probe(self, inst: FunctionInstance, rng: np.random.RandomState) -> float:
+        obs = inst.run_benchmark(self.probe_work_ms) * sample_jitter(rng, self.probe_noise)
+        inst.benchmark_result = obs
+        return obs
+
+    def body(
+        self, payload: Any, inst: FunctionInstance, rng: np.random.RandomState
+    ) -> tuple[float, Any]:
+        req: ServeRequest = payload
+        model, cfg = self.model, self.cfg
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        cache = model.init_cache(1, prompt.shape[1] + req.max_new_tokens)
+        if cfg.family == "encdec":
+            frames = jnp.zeros((1, cfg.encoder_frames, cfg.d_model), jnp.float32)
+            _, cache = model.prefill(self.params, {"frames": frames}, cache)
+            tok = prompt[:, :1]
+        else:
+            _, cache = model.prefill(self.params, {"tokens": prompt}, cache)
+            tok = prompt[:, -1:]
+        out = []
+        for _ in range(req.max_new_tokens):
+            logits, cache = model.decode_step(self.params, cache, tok)
+            tok = greedy_token(logits)
+            out.append(int(tok[0, 0]))
+        work = self.c_prefill * int(prompt.shape[1]) + self.c_decode * req.max_new_tokens
+        return work / inst.speed_factor, np.asarray(out, np.int32)
+
+    def requeue_penalty_ms(self, payload: Any) -> float:
+        """Cost of moving an in-flight stream to another replica."""
+        if self.cfg.family in ("xlstm", "hybrid"):
+            return 5.0  # O(d_state) state transfer
+        if self.cfg.family == "encdec":
+            # the new replica re-encodes the audio window (cross-attention
+            # KV is a function of the encoder output, not the prompt)
+            return self.c_prefill * self.cfg.encoder_frames
+        return self.c_prefill * len(payload.prompt)  # re-prefill the KV cache
+
+    # -- hosting defaults ----------------------------------------------
+    def default_knobs(self, max_pool: Optional[int] = None) -> SubstrateKnobs:
+        """Serving replica hosting: spin-up latency IS the weight load
+        (prepare), replicas never idle out or get recycled by default, and
+        occupancy is billed from spin-up (chip-seconds)."""
+        return SubstrateKnobs(
+            cold_start_ms=0.0,
+            cold_start_jitter=0.0,
+            idle_timeout_ms=float("inf"),
+            recycle_lifetime_ms=None,
+            bill_cold_start=True,
+            requeue_overhead_ms=0.0,
+            warm_pool_order="lifo",
+            per_instance_concurrency=1,
+            max_pool=max_pool if max_pool is not None else self.max_pool,
+        )
+
+    def pretest_threshold(self, pass_fraction: float = 0.4) -> float:
+        """Analytic §III-A threshold: the probe duration the fastest
+        ``pass_fraction`` of replicas beat under this backend's variation
+        model (durations: P(probe ≤ thr) = pass_fraction ⇒ thr =
+        probe_work / speed-quantile(1 − pass_fraction))."""
+        return self.probe_work_ms / self.variation.speed_quantile(1.0 - pass_fraction)

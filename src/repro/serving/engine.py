@@ -1,191 +1,159 @@
-"""Model-serving engine with Minos replica selection.
+"""Model-serving engine with Minos replica selection — a thin wrapper over
+the shared execution substrate (DESIGN.md §9).
 
 The FaaS→TPU-serving adaptation (DESIGN.md §2): a *replica* is one
 mesh-worth of serving capacity hosting the model; the platform's worker
-heterogeneity becomes per-replica speed factors (co-tenant hosts, thermal
-variation, degraded links). The Minos layer is the paper's algorithm
-verbatim: on replica spin-up a matmul probe runs during the *prepare* phase
-(weight load), the replica judges itself against the elysium threshold, and
-either joins the pool or re-queues its request and despawns.
+heterogeneity becomes per-replica speed factors. The Minos layer is the
+paper's algorithm verbatim: on replica spin-up a matmul probe runs during
+the *prepare* phase (weight load), the replica judges itself against the
+elysium threshold, and either joins the pool or re-queues its request and
+despawns.
+
+All execution machinery (replica pool, gate, clock, queue, billing) is the
+:class:`~repro.core.substrate.SubstrateEngine`; this module only adapts the
+request/result types and exposes the historical serving API. Because both
+this engine and the simulator are backends of the same substrate, the
+serving path supports :class:`~repro.sim.platform.PlatformProfile` hosting
+knobs, contention drift, LIFO/FIFO pools, and idle/recycle reclaim — and an
+:class:`~repro.core.policy.AdaptiveMinosPolicy` gets its probe stream wired
+automatically.
 
 The model compute is REAL (JAX prefill/decode of the configured arch); time
 is simulated as work/speed so the selection dynamics are measurable without
-a fleet. ``requeue_penalty`` accounts for the family asymmetry: full-
-attention archs must re-prefill their KV cache on the new replica, SSM
-archs just replay O(d_state) state (DESIGN.md §4).
+a fleet.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import TYPE_CHECKING, Any, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core.cost import Pricing, WorkflowCost
+from repro.core.cost import Pricing
 from repro.core.lifecycle import FunctionInstance
-from repro.core.policy import MinosPolicy, Verdict
-from repro.core.queue import Invocation, InvocationQueue
-from repro.models.model import Model, build_model, greedy_token
+from repro.core.substrate import RequestResult, SubstrateEngine
+from repro.serving.backend import ModelServingBackend, ServeRequest, ServeResult
 
+if TYPE_CHECKING:
+    from repro.sim.platform import PlatformProfile
 
-@dataclasses.dataclass
-class ServeRequest:
-    prompt: np.ndarray          # (S,) int32
-    max_new_tokens: int = 16
-    request_id: int = 0
-
-
-@dataclasses.dataclass
-class ServeResult:
-    request_id: int
-    tokens: np.ndarray
-    sim_duration_ms: float
-    replica_speed: float
-    retries: int
+__all__ = ["MinosServingEngine", "Replica", "ServeRequest", "ServeResult"]
 
 
 @dataclasses.dataclass
 class Replica:
+    """View of one pooled serving instance (weights are shared on one host;
+    they would be per-host copies on a fleet)."""
+
     instance: FunctionInstance
     params: Any
-    model: Model
+    model: Any
 
     @property
     def speed(self) -> float:
         return self.instance.speed_factor
 
 
-class MinosServingEngine:
-    """Single-host engine; replicas share one set of weights (they would be
-    per-host copies on a fleet). Work units: prefill = S tokens * c_prefill,
-    decode = steps * c_decode ms at unit speed."""
+class MinosServingEngine(SubstrateEngine):
+    """Single-host engine over a :class:`ModelServingBackend`.
+
+    ``serve`` keeps the historical synchronous semantics: requests are
+    processed in order, each driven to completion on the shared simulated
+    clock (so replica reuse compounds across the batch exactly as before).
+    """
 
     def __init__(
         self,
         cfg: ArchConfig,
-        policy: MinosPolicy,
+        policy,
         pricing: Pricing,
         *,
         seed: int = 0,
         speed_sigma: float = 0.15,
         probe_work_ms: float = 200.0,
-        weight_load_ms: float = 400.0,   # the 'prepare' phase that hides the probe
+        weight_load_ms: float = 400.0,
         c_prefill_ms_per_tok: float = 0.5,
         c_decode_ms_per_tok: float = 5.0,
         max_pool: int = 8,
+        contention_rho: float = 1.0,
+        variation=None,
+        profile: Optional["PlatformProfile"] = None,
+        online_controller=None,
     ) -> None:
+        backend = ModelServingBackend(
+            cfg,
+            seed=seed,
+            variation=variation,
+            speed_sigma=speed_sigma,
+            probe_work_ms=probe_work_ms,
+            weight_load_ms=weight_load_ms,
+            c_prefill_ms_per_tok=c_prefill_ms_per_tok,
+            c_decode_ms_per_tok=c_decode_ms_per_tok,
+            contention_rho=contention_rho,
+            max_pool=max_pool,
+        )
+        knobs = (
+            profile.knobs(max_pool=max_pool)
+            if profile is not None
+            else backend.default_knobs(max_pool=max_pool)
+        )
+        super().__init__(
+            backend, policy, pricing,
+            knobs=knobs, seed=seed, online_controller=online_controller,
+        )
         self.cfg = cfg
-        self.model = build_model(cfg)
-        self.params = self.model.init(jax.random.PRNGKey(seed))
-        self.policy = policy
-        self.cost = WorkflowCost(pricing)
-        self.rng = np.random.RandomState(seed)
-        self.speed_sigma = speed_sigma
-        self.probe_work_ms = probe_work_ms
-        self.weight_load_ms = weight_load_ms
-        self.c_prefill = c_prefill_ms_per_tok
-        self.c_decode = c_decode_ms_per_tok
+        self.model = backend.model
+        self.params = backend.params
         self.max_pool = max_pool
-        self.pool: list[Replica] = []
-        self.queue = InvocationQueue()
-        self.now_ms = 0.0
-        self.replicas_started = 0
-        self.replicas_terminated = 0
-        self.probe_observations: list[float] = []
-
-    # ---- replica lifecycle -------------------------------------------
-    def _spawn_replica(self) -> Replica:
-        self.replicas_started += 1
-        speed = float(np.exp(self.rng.normal(0.0, self.speed_sigma)))
-        inst = FunctionInstance(speed_factor=speed, created_at_ms=self.now_ms)
-        return Replica(instance=inst, params=self.params, model=self.model)
-
-    def requeue_penalty_ms(self, req: ServeRequest) -> float:
-        """Cost of moving an in-flight stream to another replica."""
-        if self.cfg.family in ("xlstm", "hybrid"):
-            return 5.0  # O(d_state) state transfer
-        return self.c_prefill * len(req.prompt)  # re-prefill the KV cache
 
     # ---- serving ------------------------------------------------------
-    def _acquire_replica(self, inv: Invocation) -> Optional[Replica]:
-        """Warm replica, or cold spin-up gated by the elysium benchmark.
-        Returns None if the spin-up was terminated (request requeued)."""
-        if self.pool:
-            return self.pool.pop()
-        rep = self._spawn_replica()
-        if not self.policy.should_benchmark(inv.retry_count, is_cold_start=True):
-            rep.instance.accept_without_benchmark()
-            self.now_ms += self.weight_load_ms
-            self.cost.record_passed(self.weight_load_ms)
-            return rep
-        probe = rep.instance.run_benchmark(self.probe_work_ms)
-        self.probe_observations.append(probe)
-        verdict = rep.instance.judge(self.policy, inv.retry_count)
-        if verdict is Verdict.TERMINATE:
-            self.replicas_terminated += 1
-            billed = max(probe, 0.0)
-            self.now_ms += max(probe, 0.0)  # probe ran under weight load
-            self.cost.record_terminated(billed)
-            self.queue.requeue(inv, self.now_ms)
-            return None
-        self.now_ms += max(self.weight_load_ms, probe)
-        return rep
-
-    def _run_request(self, rep: Replica, req: ServeRequest) -> ServeResult:
-        model, cfg = rep.model, self.cfg
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        cache = model.init_cache(1, len(req.prompt) + req.max_new_tokens)
-        if cfg.family == "encdec":
-            frames = jnp.zeros((1, cfg.encoder_frames, cfg.d_model), jnp.float32)
-            _, cache = model.prefill(self.params, {"frames": frames}, cache)
-            tok = prompt[:, :1]
-        else:
-            _, cache = model.prefill(self.params, {"tokens": prompt}, cache)
-            tok = prompt[:, -1:]
-        out = []
-        for _ in range(req.max_new_tokens):
-            logits, cache = model.decode_step(self.params, cache, tok)
-            tok = greedy_token(logits)
-            out.append(int(tok[0, 0]))
-        work = self.c_prefill * len(req.prompt) + self.c_decode * req.max_new_tokens
-        dur = work / rep.speed
-        return ServeResult(
-            request_id=req.request_id,
-            tokens=np.asarray(out, np.int32),
-            sim_duration_ms=dur,
-            replica_speed=rep.speed,
-            retries=0,
-        )
-
     def serve(self, requests: list[ServeRequest]) -> list[ServeResult]:
-        for r in requests:
-            self.queue.push(Invocation(payload=r), self.now_ms)
         results: list[ServeResult] = []
-        while len(self.queue):
-            inv = self.queue.pop()
-            rep = self._acquire_replica(inv)
-            if rep is None:
-                self.now_ms += self.requeue_penalty_ms(inv.payload)
-                continue
-            res = self._run_request(rep, inv.payload)
-            res.retries = inv.terminations_experienced
-            self.now_ms += res.sim_duration_ms
-            served_cold = rep.instance.invocations_served == 0
-            if served_cold:
-                self.cost.record_passed(res.sim_duration_ms)
-            else:
-                self.cost.record_reused(res.sim_duration_ms)
-            rep.instance.serve(self.now_ms)
-            results.append(res)
-            if len(self.pool) < self.max_pool:
-                self.pool.append(rep)
+        for req in requests:
+            done: list[RequestResult] = []
+            self.submit(req, done.append)
+            self.loop.run_all()
+            assert done, "request did not complete"
+            res = done[0]
+            results.append(ServeResult(
+                request_id=req.request_id,
+                tokens=res.output,
+                sim_duration_ms=res.analysis_ms,
+                replica_speed=res.instance_speed,
+                retries=res.retries,
+                latency_ms=res.latency_ms,
+            ))
         return results
+
+    def requeue_penalty_ms(self, req: ServeRequest) -> float:
+        return self.backend.requeue_penalty_ms(req)
+
+    # ---- historical views --------------------------------------------
+    @property
+    def now_ms(self) -> float:
+        return self.loop.now
+
+    @property
+    def replicas(self) -> list[Replica]:
+        return [Replica(instance=i, params=self.params, model=self.model)
+                for i in self.pool.available]
+
+    @property
+    def replicas_started(self) -> int:
+        return self.instances_started
+
+    @property
+    def replicas_terminated(self) -> int:
+        return self.instances_terminated
+
+    @property
+    def probe_observations(self) -> list[float]:
+        return self.gate.observations
 
     @property
     def pool_mean_speed(self) -> float:
-        if not self.pool:
+        speeds = self.pool.speeds
+        if not speeds:
             return float("nan")
-        return float(np.mean([r.speed for r in self.pool]))
+        return float(np.mean(speeds))

@@ -13,7 +13,13 @@ from .experiment import (
     workflow_arm_factory,
 )
 from .metrics import ArmSummary, WorkflowSummary, cost_timeline, improvement
-from .platform import FaaSPlatform, FunctionSpec, PlatformProfile, RequestResult
+from .platform import (
+    FaaSPlatform,
+    FunctionSpec,
+    PlatformProfile,
+    RequestResult,
+    SimFunctionBackend,
+)
 from .variation import VariationModel, paper_week
 from .workflow_dag import (
     ItemResult,
@@ -34,6 +40,7 @@ __all__ = [
     "run_pretest_phase", "run_week", "workflow_arm_factory",
     "ArmSummary", "WorkflowSummary", "cost_timeline", "improvement",
     "FaaSPlatform", "FunctionSpec", "PlatformProfile", "RequestResult",
+    "SimFunctionBackend",
     "VariationModel", "paper_week",
     "ItemResult", "Stage", "WorkflowDAG", "WorkflowEngine",
     "WorkflowRunResult", "etl_chain", "etl_suite",

@@ -1,4 +1,5 @@
-"""Discrete-event FaaS platform simulator.
+"""Discrete-event FaaS platform simulator — the *simulated* backend of the
+shared execution substrate (DESIGN.md §9).
 
 Models the slice of platform behavior Minos interacts with:
 
@@ -14,23 +15,38 @@ Models the slice of platform behavior Minos interacts with:
   itself against the elysium threshold and either proceeds, or re-queues
   the invocation and crashes.
 
+The pool/gate/clock/queue machinery and the invocation-processing loop all
+live in :mod:`repro.core.substrate`; this module contributes only what is
+simulation-specific — :class:`SimFunctionBackend` samples every duration
+from a :class:`FunctionSpec` and speeds from the variation model. The
+model-serving engine (``serving/engine.py``) is the other backend of the
+same substrate, so both paths share identical execution semantics.
+
 Time unit: milliseconds of simulated time. The simulator is fully
 deterministic given a seed.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import itertools
-from typing import Callable, Optional
+from typing import Any, Optional
 
 import numpy as np
 
-from repro.core.cost import Pricing, WorkflowCost
-from repro.core.lifecycle import FunctionInstance, InstanceState
-from repro.core.policy import MinosPolicy, Verdict
-from repro.core.queue import Invocation, InvocationQueue
+from repro.core.cost import Pricing
+from repro.core.lifecycle import FunctionInstance
+from repro.core.policy import MinosPolicy
+from repro.core.substrate import (
+    RequestResult,
+    SimClock,
+    SubstrateEngine,
+    SubstrateKnobs,
+    ar1_drift,
+    sample_jitter,
+)
 from .variation import VariationModel
+
+# Re-exported for compatibility: the event loop lives in core.substrate now.
+_EventLoop = SimClock
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,6 +111,20 @@ class PlatformProfile:
         if self.per_instance_concurrency < 1:
             raise ValueError("per_instance_concurrency must be >= 1")
 
+    def knobs(self, max_pool: Optional[int] = None) -> SubstrateKnobs:
+        """The substrate's view of this profile."""
+        return SubstrateKnobs(
+            cold_start_ms=self.cold_start_ms,
+            cold_start_jitter=self.cold_start_jitter,
+            idle_timeout_ms=self.idle_timeout_ms,
+            recycle_lifetime_ms=self.recycle_lifetime_ms,
+            bill_cold_start=self.bill_cold_start,
+            requeue_overhead_ms=self.requeue_overhead_ms,
+            warm_pool_order=self.warm_pool_order,
+            per_instance_concurrency=self.per_instance_concurrency,
+            max_pool=max_pool,
+        )
+
     @staticmethod
     def gcf_gen1(memory_mb: int = 256) -> "PlatformProfile":
         """The paper's platform: one request per instance, MRU reuse,
@@ -141,51 +171,56 @@ class PlatformProfile:
         )
 
 
-@dataclasses.dataclass
-class RequestResult:
-    invocation_id: int
-    t_submitted_ms: float
-    t_completed_ms: float
-    download_ms: float        # observed prepare duration
-    analysis_ms: float        # observed body duration
-    retries: int              # terminated instances this request caused
-    served_by_cold: bool      # final (serving) instance was a cold start
-    instance_speed: float
-    benchmark_ms: Optional[float] = None  # probe duration on serving instance
+class SimFunctionBackend:
+    """Substrate backend that *samples* every duration from a
+    :class:`FunctionSpec` and instance speeds from a
+    :class:`VariationModel` — the paper's evaluation world."""
 
-    @property
-    def latency_ms(self) -> float:
-        return self.t_completed_ms - self.t_submitted_ms
+    def __init__(self, spec: FunctionSpec, variation: VariationModel) -> None:
+        self.spec = spec
+        self.variation = variation
+        self.name = spec.name
+
+    def sample_speed(self, rng: np.random.RandomState, t_ms: float) -> float:
+        return self.variation.sample_speed(rng, t_ms=t_ms)
+
+    def reuse_drift(self, inst: FunctionInstance, rng: np.random.RandomState, t_ms: float) -> None:
+        ar1_drift(
+            inst, rng,
+            day_mean=self.variation.day_factor * self.variation.diurnal(t_ms),
+            sigma=self.variation.sigma,
+            rho=self.spec.contention_rho,
+        )
+
+    def prepare_ms(self, rng: np.random.RandomState) -> float:
+        return self.spec.prepare_ms * sample_jitter(rng, self.spec.prepare_jitter)
+
+    def probe(self, inst: FunctionInstance, rng: np.random.RandomState) -> float:
+        # The probe observes speed with noise (it is short), so selection is
+        # imperfect; the noisy observation is what the instance judges on.
+        bench = inst.run_benchmark(self.spec.benchmark_ms) * sample_jitter(
+            rng, self.spec.benchmark_noise
+        )
+        inst.benchmark_result = bench
+        return bench
+
+    def body(
+        self, payload: Any, inst: FunctionInstance, rng: np.random.RandomState
+    ) -> tuple[float, Any]:
+        analysis = (
+            self.spec.body_ms * sample_jitter(rng, self.spec.body_jitter)
+            / inst.speed_factor
+        )
+        return analysis, None
+
+    def requeue_penalty_ms(self, payload: Any) -> float:
+        return 0.0  # stateless function: nothing to migrate
 
 
-class _EventLoop:
-    def __init__(self) -> None:
-        self._heap: list[tuple[float, int, Callable[[], None]]] = []
-        self._seq = itertools.count()
-        self.now = 0.0
-
-    def at(self, t_ms: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (t_ms, next(self._seq), fn))
-
-    def after(self, dt_ms: float, fn: Callable[[], None]) -> None:
-        self.at(self.now + dt_ms, fn)
-
-    def run_until(self, t_end_ms: float) -> None:
-        while self._heap and self._heap[0][0] <= t_end_ms:
-            t, _, fn = heapq.heappop(self._heap)
-            self.now = t
-            fn()
-        self.now = max(self.now, t_end_ms)
-
-    def run_all(self, hard_limit_ms: float = float("inf")) -> None:
-        while self._heap and self._heap[0][0] <= hard_limit_ms:
-            t, _, fn = heapq.heappop(self._heap)
-            self.now = t
-            fn()
-
-
-class FaaSPlatform:
-    """One function deployment on a simulated region."""
+class FaaSPlatform(SubstrateEngine):
+    """One function deployment on a simulated region: a
+    :class:`~repro.core.substrate.SubstrateEngine` over a
+    :class:`SimFunctionBackend`."""
 
     def __init__(
         self,
@@ -210,260 +245,40 @@ class FaaSPlatform:
         start, recycling, billing). Without one, those knobs come from the
         spec and the platform behaves exactly like GCF gen1 (LIFO pool, one
         request per instance)."""
-        self.spec = spec
-        self.variation = variation
-        self.policy = policy
-        self.online_controller = online_controller
-        self.profile = profile
         if pricing is None:
             if profile is None:
                 raise ValueError("pricing is required when no profile is given")
             pricing = profile.pricing
-        self.pricing = pricing
-        # platform-level knobs: profile overrides the spec's defaults
         if profile is not None:
-            self._cold_start_ms = profile.cold_start_ms
-            self._cold_start_jitter = profile.cold_start_jitter
-            self._idle_timeout_ms = profile.idle_timeout_ms
-            self._recycle_lifetime_ms = profile.recycle_lifetime_ms
-            self._bill_cold_start = profile.bill_cold_start
-            self._requeue_overhead_ms = profile.requeue_overhead_ms
-            self._warm_order = profile.warm_pool_order
-            self._concurrency = profile.per_instance_concurrency
+            knobs = profile.knobs()
         else:
-            self._cold_start_ms = spec.cold_start_ms
-            self._cold_start_jitter = spec.cold_start_jitter
-            self._idle_timeout_ms = spec.idle_timeout_ms
-            self._recycle_lifetime_ms = spec.recycle_lifetime_ms
-            self._bill_cold_start = spec.bill_cold_start
-            self._requeue_overhead_ms = spec.requeue_overhead_ms
-            self._warm_order = "lifo"
-            self._concurrency = 1
-        self.rng = np.random.RandomState(seed)
-        self.loop = _EventLoop()
-        self.queue = InvocationQueue()
-        # WARM instances with spare request capacity, in reuse order
-        self.warm_pool: list[FunctionInstance] = []
-        self._active: dict[int, int] = {}  # instance_id -> in-flight requests
-        self.cost = WorkflowCost(pricing)
-        self.results: list[RequestResult] = []
-        self.benchmark_observations: list[float] = []  # all cold-start probe durations
-        self.instances_started = 0
-        self.instances_terminated = 0
-        self._recycle_deadline: dict[int, float] = {}
-        self.termination_events: list[tuple[float, float]] = []  # (t_ms, billed_ms)
-
-    # ------------------------------------------------------------------
-    def submit(self, payload, on_complete: Callable[[RequestResult], None] | None = None) -> None:
-        inv = Invocation(payload={"on_complete": on_complete, "user": payload},
-                         enqueued_at_ms=self.loop.now)
-        inv.first_enqueued_at_ms = self.loop.now
-        self.queue.push(inv, self.loop.now)
-        self.loop.after(0.0, self._dispatch)
-
-    # ------------------------------------------------------------------
-    def _take_warm(self) -> Optional[FunctionInstance]:
-        now = self.loop.now
-        # reclaim idle-expired and platform-recycled instances (never ones
-        # with requests in flight)
-        self.warm_pool = [
-            i for i in self.warm_pool
-            if self._active.get(i.instance_id, 0) > 0
-            or (not i.maybe_expire(now) and not self._recycled(i, now))
-        ]
-        if not self.warm_pool:
-            return None
-        # "lifo": most recently used first (GCF gen1 / Lambda MRU reuse);
-        # "fifo": oldest available first (load-balancer spread)
-        idx = len(self.warm_pool) - 1 if self._warm_order == "lifo" else 0
-        inst = self.warm_pool[idx]
-        n = self._active.get(inst.instance_id, 0) + 1
-        self._active[inst.instance_id] = n
-        if n >= self._concurrency:  # at capacity: no longer available
-            self.warm_pool.pop(idx)
-        return inst
-
-    def _release(self, inst: FunctionInstance) -> None:
-        """A request on ``inst`` completed: free one concurrency slot and
-        return the instance to the available pool if it left it."""
-        n = self._active.get(inst.instance_id, 0) - 1
-        if n <= 0:
-            self._active.pop(inst.instance_id, None)
-        else:
-            self._active[inst.instance_id] = n
-        if inst.state is InstanceState.WARM and inst not in self.warm_pool:
-            self.warm_pool.append(inst)
-
-    def _recycled(self, inst: FunctionInstance, now: float) -> bool:
-        deadline = self._recycle_deadline.get(inst.instance_id)
-        if deadline is not None and now >= deadline:
-            inst.state = InstanceState.EXPIRED
-            return True
-        return False
-
-    def _dispatch(self) -> None:
-        if len(self.queue) == 0:
-            return
-        inv = self.queue.pop()
-        warm = self._take_warm()
-        if warm is not None:
-            self._run_on_warm(inv, warm)
-        else:
-            self._cold_start(inv)
-
-    # ------------------------------------------------------------------
-    def _sample_jitter(self, scale: float) -> float:
-        if scale <= 0.0:
-            return 1.0
-        return float(np.exp(self.rng.normal(0.0, scale)))
-
-    def _drift_speed(self, inst: FunctionInstance) -> None:
-        """Co-tenancy drift (AR(1) on log-relative speed): the benchmark
-        certified the instance's speed at cold-start time, but node
-        neighbors change, so the advantage decays toward the day mean."""
-        rho = self.spec.contention_rho
-        if rho >= 1.0:
-            return
-        import math
-        day = self.variation.day_factor * self.variation.diurnal(self.loop.now)
-        log_rel = math.log(inst.speed_factor / day)
-        noise = self.rng.normal(0.0, self.variation.sigma)
-        log_rel = rho * log_rel + math.sqrt(1.0 - rho * rho) * noise
-        inst.speed_factor = day * math.exp(log_rel)
-
-    def _run_on_warm(self, inv: Invocation, inst: FunctionInstance) -> None:
-        spec = self.spec
-        t0 = self.loop.now
-        self._drift_speed(inst)
-        download = spec.prepare_ms * self._sample_jitter(spec.prepare_jitter)
-        analysis = spec.body_ms * self._sample_jitter(spec.body_jitter) / inst.speed_factor
-        duration = download + analysis
-
-        def _complete() -> None:
-            inst.serve(self.loop.now)
-            self.cost.record_reused(duration)
-            self._release(inst)
-            self._finish(inv, t0, download, analysis, served_by_cold=False,
-                         speed=inst.speed_factor, bench=None)
-            self._dispatch()
-
-        self.loop.after(duration, _complete)
-
-    def _cold_start(self, inv: Invocation) -> None:
-        spec = self.spec
-        t0 = self.loop.now
-        self.instances_started += 1
-        speed = self.variation.sample_speed(self.rng, t_ms=self.loop.now)
-        inst = FunctionInstance(
-            speed_factor=speed,
-            created_at_ms=t0,
-            idle_timeout_ms=self._idle_timeout_ms,
-        )
-        self._active[inst.instance_id] = 1
-        if self._recycle_lifetime_ms is not None:
-            self._recycle_deadline[inst.instance_id] = t0 + float(
-                self.rng.exponential(self._recycle_lifetime_ms)
+            knobs = SubstrateKnobs(
+                cold_start_ms=spec.cold_start_ms,
+                cold_start_jitter=spec.cold_start_jitter,
+                idle_timeout_ms=spec.idle_timeout_ms,
+                recycle_lifetime_ms=spec.recycle_lifetime_ms,
+                bill_cold_start=spec.bill_cold_start,
+                requeue_overhead_ms=spec.requeue_overhead_ms,
+                warm_pool_order="lifo",
+                per_instance_concurrency=1,
             )
-        cold = self._cold_start_ms * self._sample_jitter(self._cold_start_jitter)
-        download = spec.prepare_ms * self._sample_jitter(spec.prepare_jitter)
-
-        billed_cold = cold if self._bill_cold_start else 0.0
-
-        do_benchmark = self.policy.should_benchmark(inv.retry_count, is_cold_start=True)
-        if not do_benchmark:
-            # baseline arm, or emergency exit: run the body directly
-            inst.accept_without_benchmark()  # FORCED_PASS / baseline accept
-            analysis = spec.body_ms * self._sample_jitter(spec.body_jitter) / speed
-            duration = download + analysis
-
-            def _complete_direct() -> None:
-                inst.serve(self.loop.now)
-                self.cost.record_passed(billed_cold + duration)
-                self._release(inst)
-                self._finish(inv, t0, download, analysis, served_by_cold=True,
-                             speed=speed, bench=None)
-                self._dispatch()
-
-            self.loop.after(cold + duration, _complete_direct)
-            return
-
-        # Minos path: probe runs in parallel with the download. The probe
-        # observes speed with noise (it is short), so selection is imperfect.
-        bench = inst.run_benchmark(spec.benchmark_ms) * self._sample_jitter(
-            spec.benchmark_noise
+        super().__init__(
+            SimFunctionBackend(spec, variation), policy, pricing,
+            knobs=knobs, seed=seed, online_controller=online_controller,
         )
-        inst.benchmark_result = bench
-        self.benchmark_observations.append(bench)
-        policy = self.policy
-        if self.online_controller is not None:
-            # §IV: both passing AND failing probes are reported (otherwise
-            # the estimate is survivor-biased); the instance judges against
-            # the controller's latest published threshold.
-            self.online_controller.report(bench)
-            import dataclasses as _dc
-            policy = _dc.replace(
-                self.policy, elysium_threshold=self.online_controller.threshold
-            )
-        elif hasattr(self.policy, "report"):
-            # AdaptiveMinosPolicy: the policy IS the controller (DESIGN.md
-            # §6); it sees the probe before judging, so its threshold always
-            # reflects the full (unbiased) stream.
-            self.policy.report(bench)
-        verdict = inst.judge(policy, inv.retry_count)
-        if verdict is Verdict.TERMINATE:
-            # judged as soon as the probe finishes; requeue + crash.
-            # Billed: startup + probe wall time (download is torn down with
-            # the instance; the platform bills active instance time).
-            self.instances_terminated += 1
-            self._active.pop(inst.instance_id, None)
-            billed = billed_cold + bench
+        self.spec = spec
+        self.variation = variation
+        self.profile = profile
 
-            def _crash() -> None:
-                self.cost.record_terminated(billed)
-                self.termination_events.append((self.loop.now, billed))
-                self.queue.requeue(inv, self.loop.now)
-                self.loop.after(self._requeue_overhead_ms, self._dispatch)
-
-            self.loop.after(cold + bench, _crash)
-            return
-
-        # passed (or forced): body starts once BOTH download and probe done
-        analysis = spec.body_ms * self._sample_jitter(spec.body_jitter) / speed
-        ready = max(download, bench)
-        duration = ready + analysis
-
-        def _complete_pass() -> None:
-            inst.serve(self.loop.now)
-            self.cost.record_passed(billed_cold + duration)
-            self._release(inst)
-            self._finish(inv, t0, download, analysis, served_by_cold=True,
-                         speed=speed, bench=bench)
-            self._dispatch()
-
-        self.loop.after(cold + duration, _complete_pass)
-
-    # ------------------------------------------------------------------
-    def _finish(
-        self, inv: Invocation, t0: float, download: float, analysis: float,
-        *, served_by_cold: bool, speed: float, bench: Optional[float],
-    ) -> None:
-        res = RequestResult(
-            invocation_id=inv.invocation_id,
-            t_submitted_ms=inv.first_enqueued_at_ms or t0,
-            t_completed_ms=self.loop.now,
-            download_ms=download,
-            analysis_ms=analysis,
-            retries=inv.terminations_experienced,
-            served_by_cold=served_by_cold,
-            instance_speed=speed,
-            benchmark_ms=bench,
-        )
-        self.results.append(res)
-        cb = inv.payload.get("on_complete")
-        if cb is not None:
-            cb(res)
-
-    # ------------------------------------------------------------------
     @property
-    def warm_pool_speeds(self) -> list[float]:
-        return [i.speed_factor for i in self.warm_pool if i.state is InstanceState.WARM]
+    def warm_pool(self) -> list[FunctionInstance]:
+        return self.pool.available
+
+__all__ = [
+    "FaaSPlatform",
+    "FunctionSpec",
+    "PlatformProfile",
+    "RequestResult",
+    "SimFunctionBackend",
+    "_EventLoop",
+]

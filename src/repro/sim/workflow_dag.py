@@ -27,12 +27,15 @@ Scenario builders: :func:`etl_chain` and :func:`etl_suite` construct the
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence
+import itertools
+from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core.cost import Pricing, WorkflowCost
+from repro.core.substrate import SubstrateEngine
 from .platform import FaaSPlatform, FunctionSpec, PlatformProfile, RequestResult
 from .variation import VariationModel
 
@@ -44,20 +47,50 @@ from .variation import VariationModel
 
 @dataclasses.dataclass(frozen=True)
 class Stage:
-    """One node of the workflow: a deployed function plus its dependencies.
+    """One node of the workflow: an execution binding plus its dependencies.
+
+    A stage is bound to exactly one of:
+
+    * ``spec`` — a simulated :class:`FunctionSpec` (body durations are
+      sampled; the paper's evaluation world), or
+    * ``backend`` — any :class:`~repro.core.substrate.Backend`, e.g. a
+      :class:`~repro.serving.backend.ModelServingBackend` whose body is
+      real JAX prefill/decode. The engine runs it on its own Minos-gated
+      pool with the same fan-in semantics.
 
     ``max_retries`` optionally overrides the policy's emergency-exit bound
     for this stage only (e.g. an idempotent transform tolerates more
     re-selection than a stage with external side effects).
+
+    ``max_in_flight`` optionally bounds items concurrently admitted to this
+    stage (submitted but not completed, retries included). When a requeue
+    storm inflates a stage's queue, further items wait at admission instead
+    of piling onto the stage queue — back-pressure, not just latency.
+
+    ``make_request`` adapts the item payload for this stage's backend:
+    called with ``(item_payload, parent_results)`` where ``parent_results``
+    maps each dependency name to its completed
+    :class:`~repro.core.substrate.RequestResult` (whose ``output`` carries
+    a serving backend's tokens). Without it, the raw item payload is
+    forwarded — simulated stages ignore payloads entirely.
     """
 
-    spec: FunctionSpec
+    spec: Optional[FunctionSpec] = None
     deps: tuple[str, ...] = ()
     max_retries: Optional[int] = None
+    backend: Optional[object] = None
+    max_in_flight: Optional[int] = None
+    make_request: Optional[Callable[[Any, Dict[str, RequestResult]], Any]] = None
+
+    def __post_init__(self) -> None:
+        if (self.spec is None) == (self.backend is None):
+            raise ValueError("a Stage needs exactly one of spec= or backend=")
+        if self.max_in_flight is not None and self.max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
 
     @property
     def name(self) -> str:
-        return self.spec.name
+        return self.spec.name if self.spec is not None else self.backend.name
 
 
 class WorkflowDAG:
@@ -145,18 +178,26 @@ class ItemResult:
 
 
 class _ItemState:
-    __slots__ = ("item_id", "t0", "waiting", "results", "on_complete")
+    __slots__ = ("item_id", "t0", "waiting", "results", "on_complete", "payload")
 
-    def __init__(self, item_id: int, t0: float, dag: WorkflowDAG, on_complete) -> None:
+    def __init__(self, item_id: int, t0: float, dag: WorkflowDAG, on_complete,
+                 payload: Any = None) -> None:
         self.item_id = item_id
         self.t0 = t0
         self.waiting = {n: len(s.deps) for n, s in dag.stages.items()}
         self.results: Dict[str, RequestResult] = {}
         self.on_complete = on_complete
+        self.payload = payload
 
 
 class WorkflowEngine:
-    """Per-stage FaaSPlatforms sharing one event loop, plus the fan-in logic.
+    """Per-stage substrate engines sharing one event loop, plus the fan-in
+    and admission logic. A :class:`Stage` bound to a ``spec`` gets a
+    :class:`~repro.sim.platform.FaaSPlatform`; one bound to a ``backend``
+    (e.g. model serving) gets a bare
+    :class:`~repro.core.substrate.SubstrateEngine` — both are the same
+    substrate, so mixed simulated/serving pipelines share identical pool,
+    gate, and requeue semantics on one clock.
 
     ``policy_factory`` builds one policy object *per stage* — required for
     :class:`~repro.core.policy.AdaptiveMinosPolicy`, whose threshold is in
@@ -180,16 +221,34 @@ class WorkflowEngine:
         self.dag = dag
         self.variation = variation
         self.profile = profile
-        self.platforms: Dict[str, FaaSPlatform] = {}
+        self.platforms: Dict[str, SubstrateEngine] = {}
         self.items: List[ItemResult] = []
         self._next_item = 0
+        self._in_flight = {n: 0 for n in dag.order}
+        self._admission: Dict[str, collections.deque] = {
+            n: collections.deque() for n in dag.order
+        }
         loop = None
         for i, name in enumerate(dag.order):
             stage = dag.stages[name]
-            plat = FaaSPlatform(
-                stage.spec, variation, policy_factory(stage),
-                pricing=pricing, seed=seed + 97 * i, profile=profile,
-            )
+            if stage.spec is not None:
+                plat: SubstrateEngine = FaaSPlatform(
+                    stage.spec, variation, policy_factory(stage),
+                    pricing=pricing, seed=seed + 97 * i, profile=profile,
+                )
+            else:
+                # a profile overrides hosting knobs but must not silently
+                # drop the backend's replica-pool cap
+                knobs = (
+                    profile.knobs(max_pool=getattr(stage.backend, "max_pool", None))
+                    if profile is not None
+                    else stage.backend.default_knobs()
+                )
+                plat = SubstrateEngine(
+                    stage.backend, policy_factory(stage),
+                    pricing if pricing is not None else profile.pricing,
+                    knobs=knobs, seed=seed + 97 * i,
+                )
             if loop is None:
                 loop = plat.loop
             else:
@@ -199,19 +258,49 @@ class WorkflowEngine:
         self.loop = loop
 
     # -- item flow ------------------------------------------------------
-    def submit_item(self, on_complete: Optional[Callable[[ItemResult], None]] = None) -> int:
+    def submit_item(
+        self,
+        on_complete: Optional[Callable[[ItemResult], None]] = None,
+        payload: Any = None,
+    ) -> int:
         """Start one workflow execution now; returns the item id."""
         item_id = self._next_item
         self._next_item += 1
-        state = _ItemState(item_id, self.loop.now, self.dag, on_complete)
+        state = _ItemState(item_id, self.loop.now, self.dag, on_complete, payload)
         for src in self.dag.sources:
             self._submit_stage(state, src)
         return item_id
 
+    def in_flight(self, stage_name: str) -> int:
+        """Items admitted to ``stage_name`` and not yet completed."""
+        return self._in_flight[stage_name]
+
+    def admission_queue_depth(self, stage_name: str) -> int:
+        """Items waiting at ``stage_name``'s admission bound."""
+        return len(self._admission[stage_name])
+
     def _submit_stage(self, state: _ItemState, name: str) -> None:
+        stage = self.dag.stages[name]
+        if (stage.max_in_flight is not None
+                and self._in_flight[name] >= stage.max_in_flight):
+            self._admission[name].append(state)  # back-pressure at admission
+            return
+        self._admit(state, name)
+
+    def _admit(self, state: _ItemState, name: str) -> None:
+        stage = self.dag.stages[name]
         plat = self.platforms[name]
+        self._in_flight[name] += 1
+        if stage.make_request is not None:
+            payload = stage.make_request(
+                state.payload, {d: state.results[d] for d in stage.deps})
+        else:
+            payload = state.payload
 
         def done(res: RequestResult) -> None:
+            self._in_flight[name] -= 1
+            if self._admission[name]:  # a completion frees one admission slot
+                self._admit(self._admission[name].popleft(), name)
             state.results[name] = res
             for child in self.dag.children[name]:
                 state.waiting[child] -= 1
@@ -228,7 +317,7 @@ class WorkflowEngine:
                 if state.on_complete is not None:
                     state.on_complete(item)
 
-        plat.submit({"item": state.item_id, "stage": name}, done)
+        plat.submit(payload, done)
 
     # -- aggregates -----------------------------------------------------
     @property
@@ -304,13 +393,21 @@ def run_workflow_closed_loop(
     think_time_ms: float = 1000.0,
     duration_ms: float = 10 * 60 * 1000.0,
     start_ms: float = 0.0,
+    payload_fn: Optional[Callable[[int], Any]] = None,
 ) -> WorkflowRunResult:
     """The paper's closed-loop workload lifted to whole workflows: each VU
     submits an item, waits for the full DAG to complete, thinks, repeats.
     Item-level concurrency is what bounds total pool size across stages —
-    the amortization the paper's workflow argument rests on."""
+    the amortization the paper's workflow argument rests on.
+    ``payload_fn(item_seq)`` builds the item payload (serving pipelines);
+    None submits payload-less items (simulated stages ignore payloads)."""
     window_end = start_ms + duration_ms
     completed: List[ItemResult] = []
+    seq = itertools.count()
+
+    def submit(cb) -> None:
+        payload = payload_fn(next(seq)) if payload_fn is not None else None
+        engine.submit_item(cb, payload=payload)
 
     def make_vu():
         def on_complete(item: ItemResult) -> None:
@@ -318,13 +415,13 @@ def run_workflow_closed_loop(
                 completed.append(item)
             next_t = item.t_completed_ms + think_time_ms
             if next_t < window_end:
-                engine.loop.at(next_t, lambda: engine.submit_item(on_complete))
+                engine.loop.at(next_t, lambda: submit(on_complete))
 
         return on_complete
 
     for _ in range(n_vus):
         cb = make_vu()
-        engine.loop.at(start_ms, lambda cb=cb: engine.submit_item(cb))
+        engine.loop.at(start_ms, lambda cb=cb: submit(cb))
 
     engine.loop.run_until(window_end)
     engine.loop.run_all(hard_limit_ms=window_end + 20 * 60 * 1000.0)
@@ -336,10 +433,15 @@ def run_workflow_batch(
     *,
     n_items: int,
     inter_arrival_ms: float = 500.0,
+    payload_fn: Optional[Callable[[int], Any]] = None,
 ) -> WorkflowRunResult:
     """Open-loop: push a fixed batch of items at a fixed rate and drain."""
     for i in range(n_items):
-        engine.loop.at(i * inter_arrival_ms, lambda: engine.submit_item(None))
+        payload = payload_fn(i) if payload_fn is not None else None
+        engine.loop.at(
+            i * inter_arrival_ms,
+            lambda payload=payload: engine.submit_item(None, payload=payload),
+        )
     engine.loop.run_all(hard_limit_ms=1e12)
     return WorkflowRunResult(dag=engine.dag, items=list(engine.items), engine=engine)
 

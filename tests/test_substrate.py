@@ -111,4 +111,4 @@ def test_serving_engine_minos_improves_pool():
     for a, b in zip(rb, rg):
         np.testing.assert_array_equal(a.tokens, b.tokens)
     # the gate only admits replicas with speed >= ~1.02
-    assert all(r.speed >= 1.0 for r in gated.pool)
+    assert gated.warm_pool_speeds and all(s >= 1.0 for s in gated.warm_pool_speeds)
