@@ -17,12 +17,19 @@ Usage: PYTHONPATH=src python benchmarks/diurnal_sweep.py [--quick|--smoke]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import numpy as np
 
 from repro.core.elysium import pretest_threshold
 from repro.core.policy import AdaptiveMinosPolicy, MinosPolicy
-from repro.sim import FaaSPlatform, FunctionSpec, VariationModel, improvement
+from repro.sim import (
+    FaaSPlatform,
+    FunctionSpec,
+    PlatformProfile,
+    VariationModel,
+    improvement,
+)
 from repro.sim.experiment import PAPER_PRICING, PASS_FRACTION
 from repro.sim.workload import run_closed_loop
 
@@ -76,18 +83,33 @@ def diurnal_sweep(quick: bool = False, *, hours: float | None = None,
     vm = VariationModel(sigma=0.15, diurnal_amplitude=DIURNAL_AMPLITUDE)
 
     fixed_thr = _pretest_at_hour(vm, PRETEST_HOUR, seed=seed * 7919)
-    arms = {
-        "disabled": MinosPolicy(elysium_threshold=float("inf"), enabled=False),
-        "fixed": MinosPolicy(elysium_threshold=fixed_thr, max_retries=5),
-        "adaptive": _RecordingAdaptive(PASS_FRACTION, max_retries=5),
+    # The load-aware arms re-host the same function on concurrency-4
+    # instances with a real self-contention curve (DESIGN.md §9 load
+    # model); "adaptive-load" additionally judges probes at live pool
+    # occupancy (gate_load_aware). Compared pairwise against its own
+    # "disabled-load" baseline, not against the one-request-per-instance
+    # arms above.
+    loaded_profile = dataclasses.replace(
+        PlatformProfile.gcf_gen2_loaded(), pricing=PAPER_PRICING,
+        cold_start_ms=SPEC.cold_start_ms, recycle_lifetime_ms=SPEC.recycle_lifetime_ms,
+    )
+    arms: dict[str, tuple] = {
+        "disabled": (MinosPolicy(elysium_threshold=float("inf"), enabled=False), None),
+        "fixed": (MinosPolicy(elysium_threshold=fixed_thr, max_retries=5), None),
+        "adaptive": (_RecordingAdaptive(PASS_FRACTION, max_retries=5), None),
+        "disabled-load": (MinosPolicy(elysium_threshold=float("inf"), enabled=False),
+                          loaded_profile),
+        "adaptive-load": (AdaptiveMinosPolicy(PASS_FRACTION, max_retries=5),
+                          loaded_profile),
     }
 
     per_arm_hour: dict[str, dict[int, list[float]]] = {}
     per_arm_mean: dict[str, float] = {}
     terminated: dict[str, int] = {}
     adaptive_timeline: list[tuple[float, float]] = []
-    for arm, policy in arms.items():
-        plat = FaaSPlatform(SPEC, vm, policy, PAPER_PRICING, seed=seed)
+    for arm, (policy, profile) in arms.items():
+        plat = FaaSPlatform(SPEC, vm, policy, PAPER_PRICING, seed=seed,
+                            profile=profile)
         if isinstance(policy, _RecordingAdaptive):
             policy.clock = plat.loop
         res = run_closed_loop(plat, n_vus=n_vus, duration_ms=hours * HOUR_MS)
@@ -113,6 +135,8 @@ def diurnal_sweep(quick: bool = False, *, hours: float | None = None,
             "disabled_ms": round(float(np.mean(per_arm_hour["disabled"][h])), 1),
             "fixed_ms": round(float(np.mean(per_arm_hour["fixed"].get(h, [np.nan]))), 1),
             "adaptive_ms": round(float(np.mean(per_arm_hour["adaptive"].get(h, [np.nan]))), 1),
+            "disabled_load_ms": round(float(np.mean(per_arm_hour["disabled-load"].get(h, [np.nan]))), 1),
+            "adaptive_load_ms": round(float(np.mean(per_arm_hour["adaptive-load"].get(h, [np.nan]))), 1),
             "adaptive_thr_ms": round(thr_h, 1),
             "fixed_thr_ms": round(fixed_thr, 1),
         })
@@ -129,11 +153,15 @@ def diurnal_sweep(quick: bool = False, *, hours: float | None = None,
 
     imp_fixed = improvement(per_arm_mean["disabled"], per_arm_mean["fixed"])
     imp_adaptive = improvement(per_arm_mean["disabled"], per_arm_mean["adaptive"])
+    # load arms compare pairwise: same (loaded) hosting, gate on vs off
+    imp_load = improvement(per_arm_mean["disabled-load"],
+                           per_arm_mean["adaptive-load"])
     headline = (
         f"fixed_improvement={imp_fixed*100:.1f}%"
         f"_adaptive_improvement={imp_adaptive*100:.1f}%"
         f"_adaptive_advantage={(imp_adaptive-imp_fixed)*100:.1f}pp"
         f"_tracking_corr={tracking_corr:.2f}"
+        f"_load_aware_improvement={imp_load*100:.1f}%"
     )
     return rows, headline
 

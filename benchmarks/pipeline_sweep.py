@@ -1,13 +1,23 @@
 """Gated-vs-ungated sweep of the whisper→llama serving pipeline
-(EXPERIMENTS.md §Pipeline sweep).
+(EXPERIMENTS.md §Pipeline sweep / §Load-aware pipeline sweep).
 
 The paper's §V workflow argument on REAL model compute: both stages keep a
 Minos-gated replica pool, the fast pools are re-used across every item, and
 the sweep reports end-to-end item latency, body (compute) time, and cost
-per item for each arm. ``--smoke`` runs a tiny config (CI entry-point
-guard); model outputs are asserted identical across arms.
+per item for each arm. Model outputs are asserted identical across arms.
 
-Usage: PYTHONPATH=src python benchmarks/pipeline_sweep.py [--quick|--smoke]
+``--load-aware`` runs the DESIGN.md §9 load model at hundreds of items:
+replicas serve 4 concurrent streams with a real self-contention curve
+(load**alpha) and the gate judges probes at live pool occupancy. This scale
+is only reachable because the decode path is jitted (one compiled scan per
+shape bucket instead of per-token Python dispatches); the sweep measures
+the jitted-vs-eager wall time on a representative request and ASSERTS the
+jitted path was hit for every body (``eager_calls == 0``) and is at least
+5× faster — the CI guard that keeps the eager fallback from silently
+regressing.
+
+Usage: PYTHONPATH=src python benchmarks/pipeline_sweep.py
+           [--quick|--smoke] [--load-aware]
 """
 from __future__ import annotations
 
@@ -22,13 +32,15 @@ from repro.serving.pipeline import (
     pipeline_arm_factory,
     pipeline_pricing,
 )
+from repro.serving.backend import ServeRequest
 from repro.sim.variation import VariationModel
 from repro.sim.workflow_dag import WorkflowEngine, run_workflow_batch
 
 
 def pipeline_sweep(quick: bool = False, *, n_items: int | None = None,
                    seeds: tuple[int, ...] | None = None,
-                   spec: PipelineSpec | None = None):
+                   spec: PipelineSpec | None = None,
+                   inter_arrival_ms: float = 400.0):
     spec = spec or PipelineSpec()
     n_items = n_items if n_items is not None else (12 if quick else 30)
     seeds = seeds if seeds is not None else ((3,) if quick else (3, 4))
@@ -43,7 +55,8 @@ def pipeline_sweep(quick: bool = False, *, n_items: int | None = None,
         for seed in seeds:
             eng = WorkflowEngine(dag, vm, pipeline_arm_factory(arm),
                                  pricing=pipeline_pricing(), seed=seed)
-            run = run_workflow_batch(eng, n_items=n_items, inter_arrival_ms=400.0,
+            run = run_workflow_batch(eng, n_items=n_items,
+                                     inter_arrival_ms=inter_arrival_ms,
                                      payload_fn=lambda i: {"audio_id": i})
             run.items.sort(key=lambda it: it.item_id)
             if seed == seeds[0]:
@@ -80,6 +93,53 @@ def pipeline_sweep(quick: bool = False, *, n_items: int | None = None,
         f"gated_body_gain={body_gain*100:.1f}%_latency_gain={lat_gain*100:.1f}%"
         f"_cost_ratio={cost_ratio:.2f}_outputs_identical=True"
     )
+    return rows, headline, agg, backends
+
+
+def load_aware_sweep(smoke: bool = False):
+    """The load-aware arm (EXPERIMENTS.md §Load-aware pipeline sweep):
+    concurrency-4 replicas, load**0.6 self-contention, load-aware gating,
+    hundreds of items pushed hard enough that streams actually share
+    replicas. Returns (rows, headline)."""
+    spec = PipelineSpec(
+        per_instance_concurrency=4,
+        load_slowdown_alpha=0.6,
+        gate_load_aware=True,
+        **(dict(transcript_tokens=3, answer_tokens=4, max_pool=3) if smoke else {}),
+    )
+    n_items = 200 if smoke else 240
+    rows, headline, agg, backends = pipeline_sweep(
+        quick=True, n_items=n_items, seeds=(3,), spec=spec,
+        inter_arrival_ms=50.0,  # pressure: streams must share replicas
+    )
+
+    # -- CI guards ------------------------------------------------------
+    # (1) every body went through the compiled path; the eager loop ran 0×
+    for name, be in backends.items():
+        assert be.jit_stats["eager_calls"] == 0, (
+            f"stage {name!r} fell back to eager decode: {be.jit_stats}")
+        assert be.jit_stats["jit_calls"] >= n_items, (
+            f"stage {name!r} jitted path under-hit: {be.jit_stats}")
+    # (2) the jitted decode is demonstrably faster than the eager baseline
+    llm = backends["llm"]
+    req = ServeRequest(prompt=np.arange(1, 1 + spec.transcript_tokens,
+                                        dtype=np.int32),
+                       max_new_tokens=spec.answer_tokens)
+    eager_ms = llm.time_model_ms(req, mode="eager", repeats=1)
+    jit_ms = llm.time_model_ms(req, mode="jit", repeats=5)
+    speedup = eager_ms / jit_ms
+    assert speedup >= 5.0, (
+        f"jitted decode must beat the eager baseline (got {speedup:.1f}x)")
+    # (3) the gate earns its keep under load: gated arms beat disabled on
+    # body (compute) latency
+    assert agg["fixed"]["body_ms"] < agg["disabled"]["body_ms"], (
+        "fixed-gated arm must beat disabled on body latency under load")
+
+    compiles = sum(b.jit_stats["bucket_compiles"] for b in backends.values())
+    headline += (
+        f"_items={n_items}_jit_decode_speedup={speedup:.1f}x"
+        f"_eager_ms={eager_ms:.0f}_jit_ms={jit_ms:.1f}_bucket_compiles={compiles}"
+    )
     return rows, headline
 
 
@@ -88,15 +148,22 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true", help="fewer items/seeds")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: 4 items, short decodes")
+    ap.add_argument("--load-aware", action="store_true",
+                    help="load-model arm: concurrency-4 replicas, "
+                         "load**0.6 slowdown, load-aware gate, 200+ items")
     args = ap.parse_args()
-    if args.smoke:
-        rows, headline = pipeline_sweep(
+    if args.load_aware:
+        rows, headline = load_aware_sweep(smoke=args.smoke)
+        print(f"pipeline_sweep_load_aware,{headline}")
+    elif args.smoke:
+        rows, headline, _, _ = pipeline_sweep(
             quick=True, n_items=4, seeds=(3,),
             spec=PipelineSpec(transcript_tokens=3, answer_tokens=4, max_pool=3),
         )
+        print(f"pipeline_sweep,{headline}")
     else:
-        rows, headline = pipeline_sweep(quick=args.quick)
-    print(f"pipeline_sweep,{headline}")
+        rows, headline, _, _ = pipeline_sweep(quick=args.quick)
+        print(f"pipeline_sweep,{headline}")
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

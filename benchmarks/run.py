@@ -45,7 +45,7 @@ def main() -> None:
         fn = benches[name]
         t0 = time.perf_counter()
         try:
-            rows, headline = fn(quick=args.quick)
+            rows, headline, *_ = fn(quick=args.quick)
             us = (time.perf_counter() - t0) * 1e6
             print(f"{name},{us:.0f},{headline}")
             details.append((name, rows))

@@ -9,10 +9,15 @@ Conventions: benchmark results are *durations* (lower is better) by default;
 
 The *emergency exit* (§II-A) prevents infinite requeue loops: if an
 invocation has already been requeued ``max_retries`` times, the instance
-accepts it without benchmarking. The paper sizes this from the expected
-termination rate: at 40 % pass rate, P(5 consecutive terminations) =
-0.6^5 ≈ 8 % ... the paper's own example: at an expected termination rate of
-40 %, P(5 in a row) = 0.4^5 ≈ 1 %.
+accepts it without benchmarking. Sizing it means picking the termination
+rate the bound must survive. With the repo's default gate — threshold at
+the 40th percentile, i.e. a 40 % *pass* rate — the termination rate is
+60 % and P(5 consecutive terminations) = 0.6^5 ≈ 8 % of invocations hit
+the exit. The paper's own example instead assumes a 40 % *termination*
+rate (a laxer, 60 %-pass gate), giving 0.4^5 ≈ 1 %. Same formula,
+different operating point: max_retries=5 is comfortable for a lax gate
+but spends the exit on ~1 in 12 invocations at pass fraction 0.4 — use
+:func:`retries_for_runaway_budget` to size it for your gate.
 """
 from __future__ import annotations
 
@@ -167,9 +172,11 @@ class AdaptiveMinosPolicy:
 def runaway_probability(termination_rate: float, retries: int) -> float:
     """P(an invocation is terminated ``retries`` times in a row).
 
-    Paper example: termination_rate=0.4 (60th-pct threshold ⇒ 40 % of fresh
-    instances fail... note the paper words it as 'expected termination rate
-    is 40%' ⇒ 0.4^5 ≈ 1 %).
+    Paper example: at an expected termination rate of 40 %
+    (``termination_rate=0.4``, i.e. a gate that passes 60 % of fresh
+    instances), 0.4^5 ≈ 1 %. At the repo default pass fraction 0.4 the
+    termination rate is 0.6 and the same bound gives 0.6^5 ≈ 8 % (see the
+    module docstring).
     """
     if not 0.0 <= termination_rate <= 1.0:
         raise ValueError("termination_rate must be in [0,1]")

@@ -4,6 +4,14 @@ Minos requires an *asynchronous* workload: invocations enter a queue; a
 terminating instance re-queues its invocation before crashing so no request
 is lost (at-least-once). The retry counter travels with the invocation —
 it is what the emergency exit reads.
+
+Sequence numbers are **per queue** (engine-local). An earlier revision used
+one module-global counter for both invocation ids and the heap tiebreaker,
+so the ids an engine produced depended on what else had run in the process
+first — two engines in one process could never reproduce the ids of either
+engine run alone, breaking cross-run comparability of seeded results. Now
+each queue owns both counters: ids are assigned on *first* push (stable
+across requeues) and the tiebreaker advances on every push.
 """
 from __future__ import annotations
 
@@ -12,8 +20,6 @@ import heapq
 import itertools
 from typing import Any, Optional
 
-_seq = itertools.count()
-
 
 @dataclasses.dataclass
 class Invocation:
@@ -21,7 +27,9 @@ class Invocation:
     enqueued_at_ms: float = 0.0
     retry_count: int = 0
     first_enqueued_at_ms: Optional[float] = None
-    invocation_id: int = dataclasses.field(default_factory=lambda: next(_seq))
+    # assigned by the owning InvocationQueue on first push (engine-local ids);
+    # an explicit id survives — the queue never reassigns a non-None id
+    invocation_id: Optional[int] = None
     # bookkeeping for metrics
     terminations_experienced: int = 0
 
@@ -31,10 +39,13 @@ class Invocation:
 
 
 class InvocationQueue:
-    """FIFO (by enqueue time, then sequence) queue with requeue semantics."""
+    """FIFO (by enqueue time, then per-queue sequence) queue with requeue
+    semantics."""
 
     def __init__(self) -> None:
         self._heap: list[tuple[float, int, Invocation]] = []
+        self._seq = itertools.count()  # heap tiebreaker: every push
+        self._ids = itertools.count()  # invocation ids: first push only
         self.total_enqueued = 0
         self.total_requeued = 0
 
@@ -42,8 +53,10 @@ class InvocationQueue:
         return len(self._heap)
 
     def push(self, inv: Invocation, now_ms: float) -> None:
+        if inv.invocation_id is None:
+            inv.invocation_id = next(self._ids)
         inv.enqueued_at_ms = now_ms
-        heapq.heappush(self._heap, (now_ms, next(_seq), inv))
+        heapq.heappush(self._heap, (now_ms, next(self._seq), inv))
         self.total_enqueued += 1
 
     def requeue(self, inv: Invocation, now_ms: float) -> None:

@@ -112,7 +112,10 @@ class InstancePool:
     """WARM instances with spare request capacity, in reuse order.
 
     * ``order`` — "lifo": most recently used first (GCF gen1 / Lambda MRU
-      reuse); "fifo": oldest available first (load-balancer spread).
+      reuse); "fifo": oldest available first (round-robin-ish);
+      "spread": least-loaded first (Cloud-Run-style concurrency target —
+      the order that actually relieves per-instance load when
+      ``concurrency > 1``; ties fall back to FIFO).
     * ``concurrency`` — requests one warm instance serves at once; an
       instance at capacity leaves the available list until a slot frees.
     * ``recycle_lifetime_ms`` — platform-initiated instance rotation:
@@ -135,8 +138,8 @@ class InstancePool:
         rng: Optional[np.random.RandomState] = None,
         max_size: Optional[int] = None,
     ) -> None:
-        if order not in ("lifo", "fifo"):
-            raise ValueError(f"order must be 'lifo' or 'fifo', got {order!r}")
+        if order not in ("lifo", "fifo", "spread"):
+            raise ValueError(f"order must be 'lifo', 'fifo' or 'spread', got {order!r}")
         if concurrency < 1:
             raise ValueError("concurrency must be >= 1")
         self.order = order
@@ -170,7 +173,14 @@ class InstancePool:
         ]
         if not self.available:
             return None
-        idx = len(self.available) - 1 if self.order == "lifo" else 0
+        if self.order == "lifo":
+            idx = len(self.available) - 1
+        elif self.order == "spread":
+            idx = min(range(len(self.available)),
+                      key=lambda i: self._active.get(
+                          self.available[i].instance_id, 0))
+        else:
+            idx = 0
         inst = self.available[idx]
         n = self._active.get(inst.instance_id, 0) + 1
         self._active[inst.instance_id] = n
@@ -178,17 +188,33 @@ class InstancePool:
             self.available.pop(idx)
         return inst
 
-    def release(self, inst: FunctionInstance) -> None:
+    def release(self, inst: FunctionInstance, now: Optional[float] = None) -> None:
         """A request on ``inst`` completed: free one concurrency slot and
-        return the instance to the available pool if it left it."""
+        return the instance to the available pool if it left it.
+
+        Readmission applies the same reclaim filter as :meth:`take`: an
+        instance whose recycle deadline (or idle timeout) has passed while
+        it was serving must NOT re-enter the pool — it would inflate the
+        pool views (``speeds``/``len``) until the next ``take`` swept it.
+        ``now=None`` (pool used standalone) skips the time-based checks.
+        """
         n = self._active.get(inst.instance_id, 0) - 1
         if n <= 0:
             self._active.pop(inst.instance_id, None)
         else:
             self._active[inst.instance_id] = n
         if inst.state is InstanceState.WARM and inst not in self.available:
+            if n <= 0 and now is not None and (
+                inst.maybe_expire(now) or self._recycled(inst, now)
+            ):
+                return  # past its deadline while serving: reclaim, not readmit
             if self.max_size is not None and len(self.available) >= self.max_size:
-                inst.state = InstanceState.EXPIRED  # pool full: despawn
+                if n <= 0:
+                    inst.state = InstanceState.EXPIRED  # pool full: despawn
+                # else: requests still in flight — an instance is never
+                # killed under live work (same invariant as take's reclaim);
+                # it stays out of the available list and is re-offered when
+                # its last request completes
                 return
             self.available.append(inst)
 
@@ -207,6 +233,33 @@ class InstancePool:
     @property
     def speeds(self) -> list[float]:
         return [i.speed_factor for i in self.available if i.state is InstanceState.WARM]
+
+    def load(self, inst: FunctionInstance) -> int:
+        """Requests currently in flight on ``inst`` (0 if idle)."""
+        return self._active.get(inst.instance_id, 0)
+
+    @property
+    def total_in_flight(self) -> int:
+        """Requests in flight across every instance of this pool."""
+        return sum(self._active.values())
+
+    @property
+    def n_instances(self) -> int:
+        """Live instances: available + at-capacity ones serving requests."""
+        ids = {i.instance_id for i in self.available}
+        ids.update(self._active)
+        return len(ids)
+
+    def mean_load(self) -> float:
+        """Mean in-flight requests per live instance, floored at 1.0 — the
+        occupancy a new request should expect; the gate uses it to judge
+        *effective* speed under the load-slowdown model (ROADMAP:
+        concurrency-aware gating). An idle pool reports 1.0: a request never
+        runs at less than single occupancy."""
+        n = self.n_instances
+        if n == 0:
+            return 1.0
+        return max(1.0, self.total_in_flight / n)
 
     def __len__(self) -> int:
         return len(self.available)
@@ -230,6 +283,16 @@ class ElysiumGate:
     """
 
     def __init__(self, policy, online_controller=None) -> None:
+        if online_controller is not None and not dataclasses.is_dataclass(policy):
+            # judging with a separate controller rebinds the policy's
+            # threshold via dataclasses.replace — impossible for a mutable
+            # policy like AdaptiveMinosPolicy, which IS its own controller.
+            raise TypeError(
+                "online_controller requires a dataclass policy (e.g. "
+                f"MinosPolicy); got {type(policy).__name__}. An adaptive "
+                "policy already maintains its threshold online — pass it "
+                "alone, without a separate controller."
+            )
         self.policy = policy
         self.online_controller = online_controller
         self.observations: list[float] = []
@@ -237,7 +300,31 @@ class ElysiumGate:
     def should_probe(self, retry_count: int, *, is_cold_start: bool = True) -> bool:
         return self.policy.should_benchmark(retry_count, is_cold_start=is_cold_start)
 
-    def judge(self, inst: FunctionInstance, observed_ms: float, retry_count: int) -> Verdict:
+    def judge(
+        self,
+        inst: FunctionInstance,
+        observed_ms: float,
+        retry_count: int,
+        *,
+        load_factor: float = 1.0,
+    ) -> Verdict:
+        """Judge ``inst`` on its probe result.
+
+        ``load_factor`` > 1 folds the pool's current occupancy into the
+        decision (ROADMAP: concurrency-aware gating): the instance is
+        judged on the *effective* duration ``observed × load_factor`` —
+        the speed a request will actually see under the load-slowdown
+        model — not the unloaded cold-start probe speed, so certification
+        reflects what the replica can sustain at the occupancy it is about
+        to serve. At load 1 this is exactly the paper's gate. The raw
+        observation is what is recorded and reported to the controller, so
+        threshold estimation stays in unloaded-probe units. The trade-off
+        is measured in EXPERIMENTS.md: under frozen certified speeds
+        (§Load-aware pipeline sweep) effective-speed gating preserves the
+        body-latency gains under real self-contention; under per-serve
+        contention drift with a long-lived concurrent pool (§Diurnal
+        sweep, load arms) the extra selectivity cannot pay for its churn.
+        """
         self.observations.append(observed_ms)
         policy = self.policy
         if self.online_controller is not None:
@@ -247,6 +334,12 @@ class ElysiumGate:
             )
         elif hasattr(self.policy, "report"):
             self.policy.report(observed_ms)
+        if load_factor != 1.0:
+            # durations inflate under load; throughput-style metrics deflate
+            if getattr(policy, "higher_is_better", False):
+                inst.benchmark_result = observed_ms / load_factor
+            else:
+                inst.benchmark_result = observed_ms * load_factor
         return inst.judge(policy, retry_count)
 
 
@@ -284,11 +377,24 @@ class Backend(Protocol):
         ...
 
     def body(
-        self, payload: Any, inst: FunctionInstance, rng: np.random.RandomState
+        self,
+        payload: Any,
+        inst: FunctionInstance,
+        rng: np.random.RandomState,
+        *,
+        load: int = 1,
     ) -> tuple[float, Any]:
         """Execute the body work for ``payload`` on ``inst``; returns
-        (observed duration, output). The output rides on the
-        :class:`RequestResult` (None for simulated functions)."""
+        (observed duration at single occupancy, output). The output rides on
+        the :class:`RequestResult` (None for simulated functions).
+
+        ``load`` is the instance's in-flight request count at body start
+        (>= 1, including this request). A backend may use it to make the
+        compute real — the serving backend batches its decode across the
+        replica's concurrent streams — but must NOT fold it into the
+        returned duration: the engine applies the platform-level
+        load-slowdown curve (``SubstrateKnobs.load_slowdown_alpha``) so the
+        model stays backend-independent."""
         ...
 
     def requeue_penalty_ms(self, payload: Any) -> float:
@@ -335,6 +441,20 @@ class SubstrateKnobs:
     warm_pool_order: str = "lifo"
     per_instance_concurrency: int = 1
     max_pool: Optional[int] = None
+    # Self-contention: a request sharing its instance with load-1 others
+    # runs load**alpha slower (alpha=0: the idealized free-concurrency
+    # model; alpha=1: perfect serialization; batched serving replicas sit
+    # in between — see ModelServingBackend.calibrate_load_slowdown).
+    load_slowdown_alpha: float = 0.0
+    # With True, the elysium gate judges a cold-start probe at the pool's
+    # current mean occupancy (effective speed), not at single occupancy.
+    gate_load_aware: bool = False
+
+    def load_multiplier(self, load: float) -> float:
+        """Body-duration multiplier at ``load`` in-flight requests."""
+        if self.load_slowdown_alpha <= 0.0 or load <= 1.0:
+            return 1.0
+        return float(load) ** self.load_slowdown_alpha
 
 
 class SubstrateEngine:
@@ -419,13 +539,19 @@ class SubstrateEngine:
         t0 = self.loop.now
         self.backend.reuse_drift(inst, self.rng, t0)
         download = self.backend.prepare_ms(self.rng)
-        analysis, output = self.backend.body(inv.payload["user"], inst, self.rng)
+        load = self.pool.load(inst)  # in-flight count incl. this request
+        analysis, output = self.backend.body(
+            inv.payload["user"], inst, self.rng, load=load
+        )
+        mult = self.knobs.load_multiplier(load)
+        if mult != 1.0:
+            analysis *= mult
         duration = download + analysis
 
         def _complete() -> None:
             inst.serve(self.loop.now)
             self.cost.record_reused(duration)
-            self.pool.release(inst)
+            self.pool.release(inst, self.loop.now)
             self._finish(inv, t0, download, analysis, served_by_cold=False,
                          speed=inst.speed_factor, bench=None, output=output)
             self._dispatch()
@@ -448,16 +574,23 @@ class SubstrateEngine:
 
         billed_cold = cold if knobs.bill_cold_start else 0.0
 
+        load = self.pool.load(inst)  # 1 unless warm takes landed mid-start
+        mult = self.knobs.load_multiplier(load)
+
         if not self.gate.should_probe(inv.retry_count, is_cold_start=True):
             # baseline arm, or emergency exit: run the body directly
             inst.accept_without_benchmark()  # FORCED_PASS / baseline accept
-            analysis, output = self.backend.body(inv.payload["user"], inst, self.rng)
+            analysis, output = self.backend.body(
+                inv.payload["user"], inst, self.rng, load=load
+            )
+            if mult != 1.0:
+                analysis *= mult
             duration = download + analysis
 
             def _complete_direct() -> None:
                 inst.serve(self.loop.now)
                 self.cost.record_passed(billed_cold + duration)
-                self.pool.release(inst)
+                self.pool.release(inst, self.loop.now)
                 self._finish(inv, t0, download, analysis, served_by_cold=True,
                              speed=speed, bench=None, output=output)
                 self._dispatch()
@@ -467,7 +600,13 @@ class SubstrateEngine:
 
         # Minos path: probe runs in parallel with the prepare phase.
         bench = self.backend.probe(inst, self.rng)
-        verdict = self.gate.judge(inst, bench, inv.retry_count)
+        load_factor = 1.0
+        if knobs.gate_load_aware:
+            # judge at the pool's current occupancy: the certified speed
+            # must hold up under the load the replica will actually serve
+            load_factor = knobs.load_multiplier(self.pool.mean_load())
+        verdict = self.gate.judge(inst, bench, inv.retry_count,
+                                  load_factor=load_factor)
         if verdict is Verdict.TERMINATE:
             # judged as soon as the probe finishes; requeue + crash.
             # Billed: startup + probe wall time (prepare is torn down with
@@ -489,14 +628,18 @@ class SubstrateEngine:
             return
 
         # passed (or forced): body starts once BOTH prepare and probe done
-        analysis, output = self.backend.body(inv.payload["user"], inst, self.rng)
+        analysis, output = self.backend.body(
+            inv.payload["user"], inst, self.rng, load=load
+        )
+        if mult != 1.0:
+            analysis *= mult
         ready = max(download, bench)
         duration = ready + analysis
 
         def _complete_pass() -> None:
             inst.serve(self.loop.now)
             self.cost.record_passed(billed_cold + duration)
-            self.pool.release(inst)
+            self.pool.release(inst, self.loop.now)
             self._finish(inv, t0, download, analysis, served_by_cold=True,
                          speed=speed, bench=bench, output=output)
             self._dispatch()

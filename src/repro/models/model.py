@@ -6,10 +6,26 @@
     cache = model.init_cache(batch_size, max_len)
     logits, cache = model.prefill(params, batch, cache)  # inference prefill
     logits, cache = model.decode_step(params, cache, tokens)  # serve_step
+
+Serving additionally uses the **jitted** surface:
+
+    logits, cache = model.prefill_jit(params, batch, cache)
+    tokens, cache = model.decode_tokens(params, cache, tok, n_steps)
+
+``decode_tokens`` rolls the whole greedy decode loop into ONE compiled
+program (``jax.lax.scan`` over ``decode_step``) instead of ``n_steps``
+un-jitted Python dispatches — the difference between seconds and
+milliseconds per request on the serving path (ROADMAP: "JIT the serving
+decode path"). ``n_steps`` is static: each distinct step count compiles
+once and is cached by jax; callers that want few compilations bucket it
+(see ``serving/backend.py``). Because step ``t`` depends only on steps
+``< t``, running extra (bucket-padding) steps never changes the first
+``n`` tokens — callers slice the prefix they asked for.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any, Callable, Optional
 
 import jax
@@ -28,6 +44,9 @@ class Model:
     init_cache: Callable[..., Any]
     prefill: Callable[..., tuple[Optional[jax.Array], Any]]
     decode_step: Callable[..., tuple[jax.Array, Any]]
+    # jitted serving surface (same semantics, compiled)
+    prefill_jit: Callable[..., tuple[Optional[jax.Array], Any]]
+    decode_tokens: Callable[..., tuple[jax.Array, Any]]
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -65,9 +84,26 @@ def build_model(cfg: ArchConfig) -> Model:
     def decode_step(params, cache, tokens):
         return mod.decode_step(cfg, params, cache, tokens)
 
+    @functools.partial(jax.jit, static_argnames=("n_steps",))
+    def decode_tokens(params, cache, tokens, n_steps: int):
+        """Greedy-decode ``n_steps`` tokens from ``tokens`` (B, 1) in one
+        compiled program. Returns ((B, n_steps) int32 tokens, final cache)."""
+
+        def step(carry, _):
+            tok, cache = carry
+            logits, cache = mod.decode_step(cfg, params, cache, tok)
+            tok = greedy_token(logits)
+            return (tok, cache), tok
+
+        (_, cache), toks = jax.lax.scan(
+            step, (tokens, cache), None, length=n_steps
+        )
+        return jnp.swapaxes(toks[:, :, 0], 0, 1), cache  # (T,B,1) -> (B,T)
+
     return Model(
         cfg=cfg, init=init, loss=loss, forward=forward,
         init_cache=init_cache, prefill=prefill, decode_step=decode_step,
+        prefill_jit=jax.jit(prefill), decode_tokens=decode_tokens,
     )
 
 

@@ -8,8 +8,32 @@ replica pool, the elysium gate, the simulated clock, requeue semantics,
 platform profiles, contention drift — comes from the substrate, identical
 to the simulator path.
 
+The model compute is **jitted** (ROADMAP: "JIT the serving decode path"):
+prefill runs through ``Model.prefill_jit`` and the whole greedy decode loop
+is ONE compiled scan (``Model.decode_tokens``) instead of per-token Python
+dispatches. Shapes are padded to buckets so the compile cache stays small:
+
+* decode steps and cache length round up to power-of-two buckets — extra
+  scan steps only append tokens past the requested prefix, so outputs are
+  unchanged (the caller slices the first ``max_new_tokens``);
+* the batch dimension rounds the replica's in-flight stream count (the
+  ``load`` the engine passes to :meth:`body`) up to a bucket, so
+  ``per_instance_concurrency > 1`` is real batched compute, not an
+  idealized no-op;
+* prompt lengths are NOT padded: causal prefill without per-row length
+  masking would change the last-token logits, and a serving stage sees few
+  distinct prompt lengths anyway (jax caches one executable per length).
+
+``jit_stats`` counts compiles/calls so sweeps and CI can assert the jitted
+path is actually hit (``eager_calls == 0``); ``decode_mode="eager"`` keeps
+the un-jitted loop as an explicit baseline for the same guard to measure
+against.
+
 Work units: prefill = S tokens × c_prefill, decode = steps × c_decode ms at
-unit speed; observed duration = work / replica speed. ``requeue_penalty_ms``
+unit speed; observed duration = work / replica speed — the engine then
+applies the platform's load-slowdown curve on top
+(``SubstrateKnobs.load_slowdown_alpha``; :meth:`calibrate_load_slowdown`
+fits that curve from the real batched compute). ``requeue_penalty_ms``
 accounts for the family asymmetry when an in-flight stream migrates to a new
 replica: full-attention archs must re-prefill their KV cache (enc-dec archs
 re-encode the audio window), SSM archs just replay O(d_state) state
@@ -18,6 +42,7 @@ re-encode the audio window), SSM archs just replay O(d_state) state
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Optional
 
 import jax
@@ -48,8 +73,18 @@ class ServeResult:
     latency_ms: float = 0.0     # end-to-end simulated latency (queue + cold + body)
 
 
+def _bucket(n: int, base: int = 1) -> int:
+    """Round ``n`` up to the next power-of-two bucket, floored at ``base``."""
+    if n < 1:
+        raise ValueError("bucket size must be >= 1")
+    b = base
+    while b < n:
+        b <<= 1
+    return b
+
+
 class ModelServingBackend:
-    """Substrate backend whose body is real model compute.
+    """Substrate backend whose body is real (jitted) model compute.
 
     Replica speed heterogeneity (co-tenant hosts, thermal variation,
     degraded links) comes from a :class:`VariationModel` — the same
@@ -57,6 +92,10 @@ class ModelServingBackend:
     diurnal cycles and day drift too. ``contention_rho`` < 1 adds the
     per-serve AR(1) drift of a replica's certified speed (1.0 = frozen,
     the idealized model).
+
+    ``per_instance_concurrency`` / ``load_slowdown_alpha`` /
+    ``gate_load_aware`` feed :meth:`default_knobs`, making replica load a
+    hosting property of this backend (DESIGN.md §9 load model).
     """
 
     def __init__(
@@ -76,7 +115,15 @@ class ModelServingBackend:
         name: Optional[str] = None,
         model: Optional[Model] = None,
         params: Any = None,
+        per_instance_concurrency: int = 1,
+        load_slowdown_alpha: float = 0.0,
+        gate_load_aware: bool = False,
+        decode_mode: str = "jit",        # "jit" | "eager" (baseline)
+        decode_bucket: int = 8,          # decode-step bucket floor
+        max_decode_batch: int = 8,       # cap on the batched-stream bucket
     ) -> None:
+        if decode_mode not in ("jit", "eager"):
+            raise ValueError(f"decode_mode must be 'jit' or 'eager', got {decode_mode!r}")
         self.cfg = cfg
         self.model = model if model is not None else build_model(cfg)
         self.params = params if params is not None else self.model.init(jax.random.PRNGKey(seed))
@@ -89,6 +136,14 @@ class ModelServingBackend:
         self.contention_rho = contention_rho
         self.max_pool = max_pool
         self.name = name if name is not None else f"serve-{cfg.arch_id}"
+        self.per_instance_concurrency = per_instance_concurrency
+        self.load_slowdown_alpha = load_slowdown_alpha
+        self.gate_load_aware = gate_load_aware
+        self.decode_mode = decode_mode
+        self.decode_bucket = decode_bucket
+        self.max_decode_batch = max_decode_batch
+        self._compiled_buckets: set[tuple] = set()
+        self.jit_stats = {"jit_calls": 0, "eager_calls": 0, "bucket_compiles": 0}
 
     # -- substrate hooks -----------------------------------------------
     def sample_speed(self, rng: np.random.RandomState, t_ms: float) -> float:
@@ -111,26 +166,17 @@ class ModelServingBackend:
         return obs
 
     def body(
-        self, payload: Any, inst: FunctionInstance, rng: np.random.RandomState
+        self,
+        payload: Any,
+        inst: FunctionInstance,
+        rng: np.random.RandomState,
+        *,
+        load: int = 1,
     ) -> tuple[float, Any]:
         req: ServeRequest = payload
-        model, cfg = self.model, self.cfg
-        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-        cache = model.init_cache(1, prompt.shape[1] + req.max_new_tokens)
-        if cfg.family == "encdec":
-            frames = jnp.zeros((1, cfg.encoder_frames, cfg.d_model), jnp.float32)
-            _, cache = model.prefill(self.params, {"frames": frames}, cache)
-            tok = prompt[:, :1]
-        else:
-            _, cache = model.prefill(self.params, {"tokens": prompt}, cache)
-            tok = prompt[:, -1:]
-        out = []
-        for _ in range(req.max_new_tokens):
-            logits, cache = model.decode_step(self.params, cache, tok)
-            tok = greedy_token(logits)
-            out.append(int(tok[0, 0]))
-        work = self.c_prefill * int(prompt.shape[1]) + self.c_decode * req.max_new_tokens
-        return work / inst.speed_factor, np.asarray(out, np.int32)
+        tokens = self.run_model(req, load=load)
+        work = self.c_prefill * len(req.prompt) + self.c_decode * req.max_new_tokens
+        return work / inst.speed_factor, tokens
 
     def requeue_penalty_ms(self, payload: Any) -> float:
         """Cost of moving an in-flight stream to another replica."""
@@ -142,11 +188,103 @@ class ModelServingBackend:
             return self.c_prefill * self.cfg.encoder_frames
         return self.c_prefill * len(payload.prompt)  # re-prefill the KV cache
 
+    # -- model compute --------------------------------------------------
+    def run_model(
+        self, req: ServeRequest, *, load: int = 1, mode: Optional[str] = None,
+    ) -> np.ndarray:
+        """Greedy-decode ``req`` and return its tokens ((T,) int32).
+
+        ``load`` >= 2 batches the decode across the replica's concurrent
+        streams (batch bucket; row 0 is this request — rows are computed
+        independently, so the tokens do not depend on the padding).
+        ``mode`` overrides ``self.decode_mode`` for measurement.
+        """
+        mode = mode if mode is not None else self.decode_mode
+        model, cfg = self.model, self.cfg
+        T = req.max_new_tokens
+        prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+        S = int(prompt.shape[1])
+
+        if mode == "eager":
+            self.jit_stats["eager_calls"] += 1
+            cache = model.init_cache(1, S + T)
+            if cfg.family == "encdec":
+                frames = jnp.zeros((1, cfg.encoder_frames, cfg.d_model), jnp.float32)
+                _, cache = model.prefill(self.params, {"frames": frames}, cache)
+                tok = prompt[:, :1]
+            else:
+                _, cache = model.prefill(self.params, {"tokens": prompt}, cache)
+                tok = prompt[:, -1:]
+            out = []
+            for _ in range(T):
+                logits, cache = model.decode_step(self.params, cache, tok)
+                tok = greedy_token(logits)
+                out.append(int(tok[0, 0]))
+            return np.asarray(out, np.int32)
+
+        B = min(_bucket(max(1, load)), self.max_decode_batch)
+        Tb = _bucket(T, base=self.decode_bucket)
+        # cache length is bucketed too, so decode_tokens executables are
+        # shared across prompt lengths that land in the same bucket (decode
+        # attention masks by `lengths`, so the padded tail is never read)
+        cache_len = _bucket(S + Tb, base=self.decode_bucket)
+        key = (cfg.family, B, S, Tb, cache_len)
+        if key not in self._compiled_buckets:
+            self._compiled_buckets.add(key)
+            self.jit_stats["bucket_compiles"] += 1
+        if B > 1:
+            prompt = jnp.broadcast_to(prompt, (B, S))
+        cache = model.init_cache(B, cache_len)
+        if cfg.family == "encdec":
+            frames = jnp.zeros((B, cfg.encoder_frames, cfg.d_model), jnp.float32)
+            _, cache = model.prefill_jit(self.params, {"frames": frames}, cache)
+            tok = prompt[:, :1]
+        else:
+            _, cache = model.prefill_jit(self.params, {"tokens": prompt}, cache)
+            tok = prompt[:, -1:]
+        toks, _ = model.decode_tokens(self.params, cache, tok, Tb)
+        self.jit_stats["jit_calls"] += 1
+        return np.asarray(toks[0, :T], np.int32)
+
+    def time_model_ms(
+        self, req: ServeRequest, *, mode: str, load: int = 1, repeats: int = 1,
+    ) -> float:
+        """Mean wall-clock ms per ``run_model`` call (one un-timed warmup
+        first, so jit compile time is excluded — steady-state serving cost)."""
+        self.run_model(req, load=load, mode=mode)
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            self.run_model(req, load=load, mode=mode)  # np conversion syncs
+        return (time.perf_counter() - t0) * 1e3 / max(1, repeats)
+
+    def calibrate_load_slowdown(
+        self,
+        loads: tuple[int, ...] = (1, 2, 4),
+        *,
+        max_new_tokens: int = 8,
+        repeats: int = 3,
+    ) -> float:
+        """Fit the load-slowdown exponent from the REAL batched compute:
+        time the jitted decode at several stream counts and least-squares
+        ``log time = alpha * log load + c``. The result calibrates
+        ``SubstrateKnobs.load_slowdown_alpha`` (alpha 0: batching is free,
+        1: perfect serialization; hardware lands in between)."""
+        req = ServeRequest(prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=max_new_tokens)
+        ts = [self.time_model_ms(req, mode="jit", load=b, repeats=repeats)
+              for b in loads]
+        logs_b = np.log(np.asarray(loads, np.float64))
+        logs_t = np.log(np.asarray(ts, np.float64))
+        alpha = float(np.polyfit(logs_b, logs_t, 1)[0])
+        return max(0.0, alpha)
+
     # -- hosting defaults ----------------------------------------------
     def default_knobs(self, max_pool: Optional[int] = None) -> SubstrateKnobs:
         """Serving replica hosting: spin-up latency IS the weight load
         (prepare), replicas never idle out or get recycled by default, and
-        occupancy is billed from spin-up (chip-seconds)."""
+        occupancy is billed from spin-up (chip-seconds). Load behavior
+        (stream concurrency, slowdown curve, load-aware gating) comes from
+        this backend's own knobs."""
         return SubstrateKnobs(
             cold_start_ms=0.0,
             cold_start_jitter=0.0,
@@ -155,8 +293,10 @@ class ModelServingBackend:
             bill_cold_start=True,
             requeue_overhead_ms=0.0,
             warm_pool_order="lifo",
-            per_instance_concurrency=1,
+            per_instance_concurrency=self.per_instance_concurrency,
             max_pool=max_pool if max_pool is not None else self.max_pool,
+            load_slowdown_alpha=self.load_slowdown_alpha,
+            gate_load_aware=self.gate_load_aware,
         )
 
     def pretest_threshold(self, pass_fraction: float = 0.4) -> float:

@@ -80,6 +80,10 @@ class MinosServingEngine(SubstrateEngine):
         variation=None,
         profile: Optional["PlatformProfile"] = None,
         online_controller=None,
+        per_instance_concurrency: int = 1,
+        load_slowdown_alpha: float = 0.0,
+        gate_load_aware: bool = False,
+        decode_mode: str = "jit",
     ) -> None:
         backend = ModelServingBackend(
             cfg,
@@ -92,6 +96,10 @@ class MinosServingEngine(SubstrateEngine):
             c_decode_ms_per_tok=c_decode_ms_per_tok,
             contention_rho=contention_rho,
             max_pool=max_pool,
+            per_instance_concurrency=per_instance_concurrency,
+            load_slowdown_alpha=load_slowdown_alpha,
+            gate_load_aware=gate_load_aware,
+            decode_mode=decode_mode,
         )
         knobs = (
             profile.knobs(max_pool=max_pool)
@@ -150,6 +158,11 @@ class MinosServingEngine(SubstrateEngine):
     @property
     def probe_observations(self) -> list[float]:
         return self.gate.observations
+
+    @property
+    def jit_stats(self) -> dict:
+        """Compile/call counters of the backend's jitted decode path."""
+        return self.backend.jit_stats
 
     @property
     def pool_mean_speed(self) -> float:

@@ -104,12 +104,22 @@ class PlatformProfile:
     recycle_lifetime_ms: float | None = 7 * 60 * 1000.0
     bill_cold_start: bool = True
     requeue_overhead_ms: float = 30.0
+    # self-contention of concurrent requests on one instance: a request
+    # sharing its instance with load-1 others runs load**alpha slower
+    # (0.0 = the idealized free-concurrency model; DESIGN.md §9 load model)
+    load_slowdown_alpha: float = 0.0
+    # gate judges cold-start probes at the pool's current mean occupancy
+    gate_load_aware: bool = False
 
     def __post_init__(self) -> None:
-        if self.warm_pool_order not in ("lifo", "fifo"):
-            raise ValueError(f"warm_pool_order must be 'lifo' or 'fifo', got {self.warm_pool_order!r}")
+        if self.warm_pool_order not in ("lifo", "fifo", "spread"):
+            raise ValueError(
+                f"warm_pool_order must be 'lifo', 'fifo' or 'spread', "
+                f"got {self.warm_pool_order!r}")
         if self.per_instance_concurrency < 1:
             raise ValueError("per_instance_concurrency must be >= 1")
+        if self.load_slowdown_alpha < 0.0:
+            raise ValueError("load_slowdown_alpha must be >= 0")
 
     def knobs(self, max_pool: Optional[int] = None) -> SubstrateKnobs:
         """The substrate's view of this profile."""
@@ -123,6 +133,8 @@ class PlatformProfile:
             warm_pool_order=self.warm_pool_order,
             per_instance_concurrency=self.per_instance_concurrency,
             max_pool=max_pool,
+            load_slowdown_alpha=self.load_slowdown_alpha,
+            gate_load_aware=self.gate_load_aware,
         )
 
     @staticmethod
@@ -152,6 +164,27 @@ class PlatformProfile:
             cold_start_ms=400.0,
             recycle_lifetime_ms=90_000.0,
             bill_cold_start=False,
+        )
+
+    @staticmethod
+    def gcf_gen2_loaded(
+        memory_mb: int = 1024, concurrency: int = 4, alpha: float = 0.6,
+    ) -> "PlatformProfile":
+        """gen2 with self-contention made real: concurrent requests on one
+        instance slow each other down (load**alpha) and the gate judges
+        probes at the pool's live occupancy. The idealized ``gcf_gen2``
+        preset (alpha=0, free concurrency) is what this arm is compared
+        against in the load-aware sweeps (EXPERIMENTS.md)."""
+        return PlatformProfile(
+            name="gcf-gen2-loaded",
+            pricing=Pricing.gcf(memory_mb),
+            warm_pool_order="spread",
+            per_instance_concurrency=concurrency,
+            cold_start_ms=400.0,
+            recycle_lifetime_ms=90_000.0,
+            bill_cold_start=False,
+            load_slowdown_alpha=alpha,
+            gate_load_aware=True,
         )
 
     @staticmethod
@@ -205,8 +238,15 @@ class SimFunctionBackend:
         return bench
 
     def body(
-        self, payload: Any, inst: FunctionInstance, rng: np.random.RandomState
+        self,
+        payload: Any,
+        inst: FunctionInstance,
+        rng: np.random.RandomState,
+        *,
+        load: int = 1,
     ) -> tuple[float, Any]:
+        # load is accounted by the engine's load-slowdown curve; a sampled
+        # duration has nothing batched to compute, so it is unused here
         analysis = (
             self.spec.body_ms * sample_jitter(rng, self.spec.body_jitter)
             / inst.speed_factor

@@ -279,6 +279,19 @@ class WorkflowEngine:
         """Items waiting at ``stage_name``'s admission bound."""
         return len(self._admission[stage_name])
 
+    def stage_pool_load(self, stage_name: str) -> float:
+        """Mean in-flight requests per live instance of the stage's pool
+        (>= 1.0) — the occupancy the load-slowdown model charges and the
+        load-aware gate judges at (DESIGN.md §9 load model). The hook for
+        queue-depth-aware dynamic admission (ROADMAP)."""
+        return self.platforms[stage_name].pool.mean_load()
+
+    def stage_queue_depth(self, stage_name: str) -> int:
+        """Invocations waiting on the stage's own queue (requeues included) —
+        distinct from the admission queue, which holds not-yet-admitted
+        items."""
+        return len(self.platforms[stage_name].queue)
+
     def _submit_stage(self, state: _ItemState, name: str) -> None:
         stage = self.dag.stages[name]
         if (stage.max_in_flight is not None

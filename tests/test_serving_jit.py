@@ -1,0 +1,111 @@
+"""The jitted serving decode path (ROADMAP: "JIT the serving decode path").
+
+The contract: jitting is a pure performance change — tokens are identical
+to the eager per-step loop, regardless of shape bucketing (decode-length
+padding) or stream batching (batch padding). Plus the compile-count
+bookkeeping the CI guard relies on.
+"""
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.core.cost import Pricing
+from repro.core.policy import MinosPolicy
+from repro.serving.backend import ModelServingBackend, ServeRequest, _bucket
+
+
+@pytest.fixture(scope="module")
+def dense_backend():
+    return ModelServingBackend(get_smoke_config("llama3.2-1b"), seed=0)
+
+
+def test_bucket_rounding():
+    assert [_bucket(n) for n in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+    assert _bucket(3, base=8) == 8
+    with pytest.raises(ValueError):
+        _bucket(0)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "whisper-small"])
+def test_jit_tokens_equal_eager_tokens(arch):
+    be = ModelServingBackend(get_smoke_config(arch), seed=0)
+    req = ServeRequest(prompt=np.arange(1, 6, dtype=np.int32), max_new_tokens=5)
+    eager = be.run_model(req, mode="eager")
+    jit = be.run_model(req, mode="jit")
+    assert np.array_equal(eager, jit)
+    assert jit.dtype == np.int32 and jit.shape == (5,)
+
+
+def test_batched_streams_do_not_change_tokens(dense_backend):
+    """load > 1 pads the batch with replicas of the stream; row 0 must be
+    byte-identical to the unbatched result (the pipeline sweep's
+    outputs-identical-across-arms invariant depends on this)."""
+    req = ServeRequest(prompt=np.arange(1, 5, dtype=np.int32), max_new_tokens=4)
+    solo = dense_backend.run_model(req, load=1)
+    for load in (2, 3, 4):
+        assert np.array_equal(solo, dense_backend.run_model(req, load=load))
+
+
+def test_decode_bucket_padding_preserves_prefix(dense_backend):
+    """Extra scan steps from decode-length bucketing only append tokens
+    past the requested prefix."""
+    prompt = np.arange(1, 5, dtype=np.int32)
+    long = dense_backend.run_model(
+        ServeRequest(prompt=prompt, max_new_tokens=8))
+    for t in (2, 5, 7):
+        short = dense_backend.run_model(
+            ServeRequest(prompt=prompt, max_new_tokens=t))
+        assert np.array_equal(short, long[:t])
+
+
+def test_jit_stats_count_compiles_and_guard_eager():
+    be = ModelServingBackend(get_smoke_config("llama3.2-1b"), seed=0)
+    req = ServeRequest(prompt=np.arange(4, dtype=np.int32), max_new_tokens=4)
+    be.run_model(req)
+    assert be.jit_stats == {"jit_calls": 1, "eager_calls": 0,
+                            "bucket_compiles": 1}
+    be.run_model(req)                       # same bucket: no new compile
+    assert be.jit_stats["bucket_compiles"] == 1
+    be.run_model(req, load=2)               # new batch bucket
+    assert be.jit_stats["bucket_compiles"] == 2
+    be.run_model(req, mode="eager")
+    assert be.jit_stats["eager_calls"] == 1
+
+
+def test_body_duration_is_work_over_speed(dense_backend):
+    from repro.core.lifecycle import FunctionInstance
+
+    inst = FunctionInstance(speed_factor=2.0)
+    req = ServeRequest(prompt=np.arange(6, dtype=np.int32), max_new_tokens=4)
+    dur, toks = dense_backend.body(req, inst, np.random.RandomState(0), load=2)
+    work = dense_backend.c_prefill * 6 + dense_backend.c_decode * 4
+    assert dur == pytest.approx(work / 2.0)   # load handled by the engine
+    assert len(toks) == 4
+
+
+def test_serving_engine_serves_on_jitted_path():
+    from repro.serving.engine import MinosServingEngine
+
+    eng = MinosServingEngine(
+        get_smoke_config("llama3.2-1b"),
+        MinosPolicy(elysium_threshold=float("inf"), enabled=False),
+        Pricing.tpu_chip_seconds(4), seed=1, max_pool=2)
+    reqs = [ServeRequest(prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=3, request_id=i) for i in range(4)]
+    res = eng.serve(reqs)
+    assert len(res) == 4
+    assert eng.jit_stats["eager_calls"] == 0
+    assert eng.jit_stats["jit_calls"] == 4
+
+
+def test_calibrate_load_slowdown_fits_nonnegative_exponent(dense_backend):
+    alpha = dense_backend.calibrate_load_slowdown(
+        loads=(1, 2), max_new_tokens=4, repeats=1)
+    assert isinstance(alpha, float)
+    assert alpha >= 0.0
+
+
+def test_decode_mode_validated():
+    with pytest.raises(ValueError, match="decode_mode"):
+        ModelServingBackend(get_smoke_config("llama3.2-1b"), seed=0,
+                            decode_mode="magic")
