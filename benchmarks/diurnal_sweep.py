@@ -21,6 +21,11 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.control import (
+    ClassicMinosController,
+    PassFractionController,
+    ReprobeController,
+)
 from repro.core.elysium import pretest_threshold
 from repro.core.policy import AdaptiveMinosPolicy, MinosPolicy
 from repro.sim import (
@@ -166,17 +171,101 @@ def diurnal_sweep(quick: bool = False, *, hours: float | None = None,
     return rows, headline
 
 
+def controller_sweep(quick: bool = False, *, hours: float | None = None,
+                     n_vus: int | None = None, seed: int = 42):
+    """The ``--controllers`` arm (EXPERIMENTS.md §Controller sweep): the two
+    drift-facing control-plane controllers against the static baseline they
+    generalize, on the diurnal drift scenario. One row per arm:
+
+    * ``disabled`` — no gate (the improvement denominator);
+    * ``adaptive`` — §IV online threshold at the STATIC pass fraction 0.4
+      (the pre-control-plane best; both controllers must beat it);
+    * ``passfrac`` — :class:`~repro.core.control.PassFractionController`:
+      pass fraction re-solved online from live Welford reuse/probe/body
+      estimates (ROADMAP: adaptive pass fraction);
+    * ``reprobe`` — :class:`~repro.core.control.ReprobeController` around
+      the classic adaptive stack: warm re-benchmark every drift half-life
+      (ROADMAP: re-probing under drift).
+
+    Each row carries the per-decision-point handler summary, so the
+    one-command harness shows exactly which controller answered what.
+    Fully deterministic per seed — CI runs the smoke config twice and
+    diffs the outputs (the control plane must not introduce any
+    unseeded state).
+    """
+    hours = hours if hours is not None else (8.0 if quick else 24.0)
+    n_vus = n_vus if n_vus is not None else (6 if quick else 10)
+    vm = VariationModel(sigma=0.15, diurnal_amplitude=DIURNAL_AMPLITUDE)
+    half_life = ReprobeController.half_life_uses(SPEC.contention_rho)
+
+    def arms():
+        yield "disabled", MinosPolicy(elysium_threshold=float("inf"),
+                                      enabled=False), None
+        yield "adaptive", AdaptiveMinosPolicy(PASS_FRACTION, max_retries=5), None
+        yield "passfrac", None, PassFractionController(PASS_FRACTION,
+                                                       max_retries=5)
+        yield "reprobe", None, ReprobeController(
+            ClassicMinosController(AdaptiveMinosPolicy(PASS_FRACTION,
+                                                       max_retries=5)),
+            max_uses_since_probe=half_life,
+        )
+
+    rows = []
+    mean_ms: dict[str, float] = {}
+    for arm, policy, controller in arms():
+        plat = FaaSPlatform(SPEC, vm, policy, PAPER_PRICING, seed=seed,
+                            controller=controller)
+        res = run_closed_loop(plat, n_vus=n_vus, duration_ms=hours * HOUR_MS)
+        mean_ms[arm] = float(np.mean([r.analysis_ms for r in res]))
+        ctrl = plat.controller
+        pf = getattr(ctrl, "pass_fraction", None)
+        rows.append({
+            "arm": arm,
+            "requests": len(res),
+            "mean_analysis_ms": round(mean_ms[arm], 1),
+            "improvement_pct": 0.0,  # filled once 'disabled' is known
+            "cost_per_m_req": round(
+                plat.cost.total / max(1, len(res)) * 1e6, 2),
+            "terminated": plat.instances_terminated,
+            "retired": plat.instances_retired,
+            "reprobes": plat.reprobes,
+            "final_pass_fraction": round(pf, 3) if pf is not None else "",
+            "decisions": ctrl.decision_summary(),
+        })
+    for r in rows:
+        r["improvement_pct"] = round(
+            improvement(mean_ms["disabled"], mean_ms[r["arm"]]) * 100, 2)
+
+    imp = {r["arm"]: r["improvement_pct"] for r in rows}
+    headline = (
+        f"adaptive={imp['adaptive']:.1f}%_passfrac={imp['passfrac']:.1f}%"
+        f"_reprobe={imp['reprobe']:.1f}%"
+        f"_passfrac_adv={imp['passfrac'] - imp['adaptive']:.1f}pp"
+        f"_reprobe_adv={imp['reprobe'] - imp['adaptive']:.1f}pp"
+    )
+    return rows, headline
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="8 h window, 6 VUs")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI config: 2 h window, 4 VUs")
+    ap.add_argument("--controllers", action="store_true",
+                    help="control-plane arms: passfrac + reprobe vs the "
+                         "static-fraction adaptive baseline")
     args = ap.parse_args()
-    if args.smoke:
+    if args.controllers:
+        kw = dict(quick=True, hours=2.0, n_vus=4) if args.smoke else \
+            dict(quick=args.quick)
+        rows, headline = controller_sweep(**kw)
+        print(f"diurnal_controller_sweep,{headline}")
+    elif args.smoke:
         rows, headline = diurnal_sweep(quick=True, hours=2.0, n_vus=4)
+        print(f"diurnal_sweep,{headline}")
     else:
         rows, headline = diurnal_sweep(quick=args.quick)
-    print(f"diurnal_sweep,{headline}")
+        print(f"diurnal_sweep,{headline}")
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

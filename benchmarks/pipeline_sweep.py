@@ -30,6 +30,7 @@ from repro.serving.pipeline import (
     PipelineSpec,
     build_asr_llm_pipeline,
     pipeline_arm_factory,
+    pipeline_controller_factory,
     pipeline_pricing,
 )
 from repro.serving.backend import ServeRequest
@@ -143,6 +144,100 @@ def load_aware_sweep(smoke: bool = False):
     return rows, headline
 
 
+def admission_sweep(quick: bool = False, *, smoke: bool = False,
+                    n_items: int | None = None, seed: int = 3,
+                    headroom: float = 1.0):
+    """The ``--controllers`` arm (EXPERIMENTS.md §Controller sweep):
+    static vs queue-aware per-stage admission on the load-aware pipeline.
+
+    Both arms gate identically (adaptive §IV policy through the classic
+    controller); they differ only in who answers ``on_admit``:
+
+    * ``static`` — ``Stage.max_in_flight`` (here: unbounded, the PR 2/3
+      default) via the classic controller;
+    * ``queue-aware`` — :class:`~repro.core.control.
+      QueueAwareAdmissionController`: items wait at admission while the
+      stage's in-flight + queued demand exceeds ``headroom ×`` its
+      certified capacity (replica budget × streams).
+
+    Under pressure (30 ms inter-arrival, tiny replica budget) the elastic
+    cold-start supply makes overload show up as replica churn, not queue
+    depth: the static arm spawns instances far past the pool cap, pays a
+    probe + gate decision for each and despawns them at release. The
+    dynamic bound keeps the work on the certified pool: the headline is
+    the replica-churn and cost-per-item reduction; mean item latency
+    RISES (deferred items wait) — the honest trade-off, recorded in
+    EXPERIMENTS.md. Asserts the cost/churn win so CI catches regressions.
+
+    Protocol note: the spec pins SHORT decodes (3/4 tokens) at every
+    scale — the churn-dominated regime where admission is the right
+    lever. With long decodes the trade inverts: concentrating load on
+    fewer replicas inflates every body via ``load**alpha`` by more than
+    the spawn churn it saves (measured in EXPERIMENTS.md §Controller
+    sweep) — admission control is a churn tool, not a universal win.
+    """
+    spec = PipelineSpec(
+        per_instance_concurrency=4,
+        load_slowdown_alpha=0.6,
+        gate_load_aware=True,
+        transcript_tokens=3, answer_tokens=4, max_pool=3,
+    )
+    n_items = n_items if n_items is not None else \
+        (120 if smoke else (160 if quick else 240))
+    vm = VariationModel(sigma=spec.speed_sigma)
+    dag, backends = build_asr_llm_pipeline(spec, seed=0)
+
+    rows = []
+    agg: dict[str, dict[str, float]] = {}
+    for arm in ("static", "queue-aware"):
+        eng = WorkflowEngine(
+            dag, vm,
+            controller_factory=pipeline_controller_factory(
+                arm, headroom=headroom),
+            pricing=pipeline_pricing(), seed=seed)
+        run = run_workflow_batch(eng, n_items=n_items, inter_arrival_ms=30.0,
+                                 payload_fn=lambda i: {"audio_id": i})
+        defers = sum(getattr(p.controller, "deferred", 0)
+                     for p in eng.platforms.values())
+        agg[arm] = {
+            "latency_ms": run.mean_item_latency_ms,
+            "cost_per_item": run.cost.total / max(1, run.n_items),
+            "started": eng.instances_started,
+            "terminated": eng.instances_terminated,
+        }
+        rows.append({
+            "arm": arm,
+            "items": run.n_items,
+            "mean_item_ms": round(run.mean_item_latency_ms, 1),
+            "mean_body_ms": round(run.mean_item_analysis_ms, 1),
+            "cost_per_item_usd": round(agg[arm]["cost_per_item"], 6),
+            "replicas_started": eng.instances_started,
+            "terminated": eng.instances_terminated,
+            "admission_defers": defers,
+            "decisions": ";".join(
+                f"{n}:{p.controller.decision_summary()}"
+                for n, p in eng.platforms.items()),
+        })
+
+    s, q = agg["static"], agg["queue-aware"]
+    # CI guards: the dynamic bound must actually engage and must win on
+    # selection churn and cost per item (its headline metrics)
+    assert rows[1]["admission_defers"] > 0, "queue-aware arm never deferred"
+    assert q["started"] < s["started"], (
+        f"queue-aware must reduce replica churn "
+        f"({q['started']} vs {s['started']})")
+    assert q["cost_per_item"] < s["cost_per_item"], (
+        f"queue-aware must reduce cost per item "
+        f"({q['cost_per_item']:.6f} vs {s['cost_per_item']:.6f})")
+    headline = (
+        f"cost_ratio={q['cost_per_item'] / s['cost_per_item']:.3f}"
+        f"_replicas_started={s['started']}->{q['started']}"
+        f"_terminated={s['terminated']}->{q['terminated']}"
+        f"_latency_ratio={q['latency_ms'] / s['latency_ms']:.2f}"
+    )
+    return rows, headline
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer items/seeds")
@@ -151,8 +246,14 @@ def main() -> None:
     ap.add_argument("--load-aware", action="store_true",
                     help="load-model arm: concurrency-4 replicas, "
                          "load**0.6 slowdown, load-aware gate, 200+ items")
+    ap.add_argument("--controllers", action="store_true",
+                    help="admission-policy arms: static vs queue-aware "
+                         "per-stage admission on the load-aware scenario")
     args = ap.parse_args()
-    if args.load_aware:
+    if args.controllers:
+        rows, headline = admission_sweep(quick=args.quick, smoke=args.smoke)
+        print(f"pipeline_admission_sweep,{headline}")
+    elif args.load_aware:
         rows, headline = load_aware_sweep(smoke=args.smoke)
         print(f"pipeline_sweep_load_aware,{headline}")
     elif args.smoke:

@@ -22,6 +22,10 @@ def main() -> None:
         "workflow_sweep": workflow_sweep.workflow_sweep,
         "pipeline_sweep": pipeline_sweep.pipeline_sweep,
         "diurnal_sweep": diurnal_sweep.diurnal_sweep,
+        # control-plane arms (DESIGN.md §10): rows carry a `decisions`
+        # column naming which controller handled each decision point
+        "diurnal_controllers": diurnal_sweep.controller_sweep,
+        "pipeline_admission": pipeline_sweep.admission_sweep,
         "fig4_regression_duration": figs.fig4_regression_duration,
         "fig5_successful_requests": figs.fig5_successful_requests,
         "fig6_cost_per_day": figs.fig6_cost_per_day,

@@ -11,8 +11,14 @@ selection waste) amortize. Three arms per cell:
 
 Speedup is the relative reduction of mean end-to-end item latency vs the
 same platform's ``disabled`` arm, averaged over seeds.
+
+Usage: PYTHONPATH=src python benchmarks/workflow_sweep.py [--quick|--smoke]
+(--smoke: 1-/3-stage chains on gcf-gen1 only, one seed, 3-min windows —
+the CI entry-point guard; the full sweep is the EXPERIMENTS.md protocol.)
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -40,15 +46,20 @@ def _profiles():
     }
 
 
-def workflow_sweep(quick=False):
-    seeds = (42, 43, 44) if quick else (42, 43, 44, 45, 46)
-    duration_ms = (8 if quick else 15) * 60 * 1000.0
+def workflow_sweep(quick=False, *, smoke=False):
+    if smoke:
+        seeds, duration_ms = (42,), 3 * 60 * 1000.0
+        stage_counts, profiles = (1, 3), {"gcf-gen1": PlatformProfile.gcf_gen1()}
+    else:
+        seeds = (42, 43, 44) if quick else (42, 43, 44, 45, 46)
+        duration_ms = (8 if quick else 15) * 60 * 1000.0
+        stage_counts, profiles = STAGE_COUNTS, _profiles()
     vm = VariationModel(sigma=SWEEP_SIGMA)
 
     rows = []
     speedups: dict[tuple[str, int, str], float] = {}
-    for prof_name, prof in _profiles().items():
-        for n in STAGE_COUNTS:
+    for prof_name, prof in profiles.items():
+        for n in stage_counts:
             dag = etl_chain(n)
             per_arm: dict[str, list[WorkflowSummary]] = {a: [] for a in ARMS}
             for seed in seeds:
@@ -79,7 +90,7 @@ def workflow_sweep(quick=False):
                     "terminated": round(term, 1),
                 })
 
-    gen1 = [speedups[("gcf-gen1", n, "fixed")] for n in STAGE_COUNTS]
+    gen1 = [speedups[("gcf-gen1", n, "fixed")] for n in stage_counts]
     monotone = all(b > a for a, b in zip(gen1, gen1[1:]))
     # adaptive-vs-pretested convergence, averaged over workflow lengths —
     # per-length ratios are dominated by seed noise (EXPERIMENTS.md
@@ -87,10 +98,29 @@ def workflow_sweep(quick=False):
     # the warm-up's unselected instances in the pools)
     mean_fixed = float(np.mean(gen1))
     mean_adaptive = float(np.mean(
-        [speedups[("gcf-gen1", n, "adaptive")] for n in STAGE_COUNTS]))
+        [speedups[("gcf-gen1", n, "adaptive")] for n in stage_counts]))
     ratio = mean_adaptive / mean_fixed if mean_fixed > 0 else float("nan")
     headline = (
         f"gen1_fixed_speedups={'/'.join(f'{s*100:.1f}%' for s in gen1)}"
         f"_monotone={monotone}_adaptive_vs_pretest_ratio={ratio:.2f}"
     )
     return rows, headline
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="3 seeds, 8-min windows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI config: gen1 only, 1-/3-stage, one seed")
+    args = ap.parse_args()
+    rows, headline = workflow_sweep(quick=args.quick, smoke=args.smoke)
+    print(f"workflow_sweep,{headline}")
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

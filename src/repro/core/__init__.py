@@ -1,5 +1,18 @@
 """Minos core: instance selection via benchmark-gated self-termination."""
 from .benchmark import CallableProbe, MatmulProbe, effective_cold_start_overhead_ms, overlap_fraction
+from .control import (
+    AdmitDecision,
+    ClassicMinosController,
+    Controller,
+    ControllerBase,
+    PassFractionController,
+    ProbeDecision,
+    QueueAwareAdmissionController,
+    ReprobeController,
+    ReuseDecision,
+    Telemetry,
+    lognormal_pool_speedup,
+)
 from .cost import Pricing, WorkflowCost, total_cost
 from .elysium import (
     OnlineElysiumController,
@@ -45,6 +58,9 @@ from .substrate import (
 
 __all__ = [
     "CallableProbe", "MatmulProbe", "effective_cold_start_overhead_ms", "overlap_fraction",
+    "AdmitDecision", "ClassicMinosController", "Controller", "ControllerBase",
+    "PassFractionController", "ProbeDecision", "QueueAwareAdmissionController",
+    "ReprobeController", "ReuseDecision", "Telemetry", "lognormal_pool_speedup",
     "Pricing", "WorkflowCost", "total_cost",
     "OnlineElysiumController", "PretestReport", "optimal_pass_fraction",
     "pretest_threshold", "run_pretest",

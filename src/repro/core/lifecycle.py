@@ -48,6 +48,12 @@ class FunctionInstance:
     verdict: Optional[Verdict] = None
     invocations_served: int = 0
     last_used_ms: float = 0.0
+    # certification age, read by the control plane's on_reuse decision
+    # (ReprobeController): when the instance was last benchmarked (None =
+    # never, e.g. forced pass) and how many serves it has since absorbed —
+    # the unit the per-serve AR(1) drift model decays in.
+    last_probe_ms: Optional[float] = None
+    serves_since_probe: int = 0
 
     def run_benchmark(self, work_ms_at_unit_speed: float) -> float:
         """Execute the probe: observed duration = work / speed."""
@@ -79,6 +85,7 @@ class FunctionInstance:
         if self.state is not InstanceState.WARM:
             raise LifecycleError(f"serve only allowed from WARM, got {self.state}")
         self.invocations_served += 1
+        self.serves_since_probe += 1
         self.last_used_ms = now_ms
 
     def maybe_expire(self, now_ms: float) -> bool:

@@ -7,13 +7,20 @@ One copy of the machinery that used to exist twice — once in
 * :class:`InstancePool` — the warm pool: LIFO/FIFO reuse order,
   per-instance request concurrency, idle-timeout reclaim, and
   platform-initiated recycling;
-* :class:`ElysiumGate` — the Minos pass/terminate decision point: records
-  every cold-start probe observation, feeds it to an online controller or
-  an :class:`~repro.core.policy.AdaptiveMinosPolicy` (the §IV wiring), and
-  judges the instance against the effective threshold;
 * :class:`SubstrateEngine` — the generic invocation-processing loop
   (queue → dispatch → warm reuse | gated cold start → complete/requeue)
   with the Fig-3 cost accounting.
+
+Every *decision* in that loop — probe or not, pass or terminate, keep /
+re-probe / retire a warm instance, admit an item to a stage — is delegated
+to a single :class:`~repro.core.control.Controller` (DESIGN.md §10). The
+default :class:`~repro.core.control.ClassicMinosController` wraps the
+:class:`~repro.core.control.ElysiumGate` + policy stack and is pinned
+bit-identical to the pre-control-plane engine by the seeded golden digests
+in tests/test_unified_substrate.py; the engine hands every decision point a
+read-only :class:`~repro.core.control.Telemetry` view (pool load, queue
+depth, clock, Welford reuse/probe/body estimates) and owns all side effects
+itself (lifecycle transitions, billing, requeues).
 
 What *differs* between the simulator and the model-serving engine is
 isolated behind the :class:`Backend` protocol: where fresh-instance speeds
@@ -36,7 +43,19 @@ from typing import Any, Callable, Optional, Protocol
 
 import numpy as np
 
+from .control import (
+    ClassicMinosController,
+    ColdStartContext,
+    ElysiumGate,  # noqa: F401 — re-exported; the gate now lives in control.py
+    ProbeContext,
+    ProbeDecision,
+    ReleaseContext,
+    ReuseContext,
+    ReuseDecision,
+    Telemetry,
+)
 from .cost import Pricing, WorkflowCost
+from .estimators import Welford
 from .lifecycle import FunctionInstance, InstanceState
 from .policy import Verdict
 from .queue import Invocation, InvocationQueue
@@ -222,6 +241,20 @@ class InstancePool:
         """A terminated (gate-failed) instance leaves without serving."""
         self._active.pop(inst.instance_id, None)
 
+    def retire(self, inst: FunctionInstance) -> None:
+        """Remove ``inst`` from the pool entirely — controller-initiated
+        retirement (:class:`~repro.core.control.ReuseDecision` RETIRE, or a
+        failed warm re-probe). The caller must ensure no *other* requests
+        are in flight on it (the engine only offers reuse decisions at
+        instance load 1, preserving the never-kill-under-live-work
+        invariant)."""
+        self._active.pop(inst.instance_id, None)
+        self._recycle_deadline.pop(inst.instance_id, None)
+        try:
+            self.available.remove(inst)
+        except ValueError:
+            pass  # at capacity (or never readmitted): not in the list
+
     def _recycled(self, inst: FunctionInstance, now: float) -> bool:
         deadline = self._recycle_deadline.get(inst.instance_id)
         if deadline is not None and now >= deadline:
@@ -263,84 +296,6 @@ class InstancePool:
 
     def __len__(self) -> int:
         return len(self.available)
-
-
-# ---------------------------------------------------------------------------
-# Gate
-# ---------------------------------------------------------------------------
-
-
-class ElysiumGate:
-    """The Minos decision point, shared by both backends.
-
-    Owns the probe-observation stream: every cold-start probe result is
-    recorded and — before judging — reported to the online controller
-    (§IV: passing AND failing probes, otherwise the estimate is
-    survivor-biased) or to an :class:`~repro.core.policy.AdaptiveMinosPolicy`
-    (anything with a ``report`` method — the policy IS the controller,
-    DESIGN.md §6). The instance then judges itself against the latest
-    published threshold.
-    """
-
-    def __init__(self, policy, online_controller=None) -> None:
-        if online_controller is not None and not dataclasses.is_dataclass(policy):
-            # judging with a separate controller rebinds the policy's
-            # threshold via dataclasses.replace — impossible for a mutable
-            # policy like AdaptiveMinosPolicy, which IS its own controller.
-            raise TypeError(
-                "online_controller requires a dataclass policy (e.g. "
-                f"MinosPolicy); got {type(policy).__name__}. An adaptive "
-                "policy already maintains its threshold online — pass it "
-                "alone, without a separate controller."
-            )
-        self.policy = policy
-        self.online_controller = online_controller
-        self.observations: list[float] = []
-
-    def should_probe(self, retry_count: int, *, is_cold_start: bool = True) -> bool:
-        return self.policy.should_benchmark(retry_count, is_cold_start=is_cold_start)
-
-    def judge(
-        self,
-        inst: FunctionInstance,
-        observed_ms: float,
-        retry_count: int,
-        *,
-        load_factor: float = 1.0,
-    ) -> Verdict:
-        """Judge ``inst`` on its probe result.
-
-        ``load_factor`` > 1 folds the pool's current occupancy into the
-        decision (ROADMAP: concurrency-aware gating): the instance is
-        judged on the *effective* duration ``observed × load_factor`` —
-        the speed a request will actually see under the load-slowdown
-        model — not the unloaded cold-start probe speed, so certification
-        reflects what the replica can sustain at the occupancy it is about
-        to serve. At load 1 this is exactly the paper's gate. The raw
-        observation is what is recorded and reported to the controller, so
-        threshold estimation stays in unloaded-probe units. The trade-off
-        is measured in EXPERIMENTS.md: under frozen certified speeds
-        (§Load-aware pipeline sweep) effective-speed gating preserves the
-        body-latency gains under real self-contention; under per-serve
-        contention drift with a long-lived concurrent pool (§Diurnal
-        sweep, load arms) the extra selectivity cannot pay for its churn.
-        """
-        self.observations.append(observed_ms)
-        policy = self.policy
-        if self.online_controller is not None:
-            self.online_controller.report(observed_ms)
-            policy = dataclasses.replace(
-                self.policy, elysium_threshold=self.online_controller.threshold
-            )
-        elif hasattr(self.policy, "report"):
-            self.policy.report(observed_ms)
-        if load_factor != 1.0:
-            # durations inflate under load; throughput-style metrics deflate
-            if getattr(policy, "higher_is_better", False):
-                inst.benchmark_result = observed_ms / load_factor
-            else:
-                inst.benchmark_result = observed_ms * load_factor
-        return inst.judge(policy, retry_count)
 
 
 # ---------------------------------------------------------------------------
@@ -402,6 +357,12 @@ class Backend(Protocol):
         a termination (e.g. KV-cache re-prefill for attention families)."""
         ...
 
+    # Optional hook (the engine probes for it with getattr):
+    #   reprobe(inst, rng) -> float
+    # Re-benchmark a WARM instance in place (no lifecycle transition) and
+    # return the observed duration — what ReuseDecision.REPROBE runs. A
+    # backend without it opts out: REPROBE quietly degrades to KEEP.
+
 
 @dataclasses.dataclass
 class RequestResult:
@@ -461,27 +422,47 @@ class SubstrateEngine:
     """The unified invocation-processing loop.
 
     On a cold start the probe runs concurrently with the backend's
-    prepare phase (paper Fig 2); the instance judges itself at the
-    :class:`ElysiumGate` and either proceeds (body starts once BOTH
-    prepare and probe are done) or re-queues the invocation and crashes.
-    Warm instances are reused without re-benchmarking (paper §II-B).
+    prepare phase (paper Fig 2); the instance is judged at the
+    controller's ``on_probe`` decision point and either proceeds (body
+    starts once BOTH prepare and probe are done) or re-queues the
+    invocation and crashes. Warm reuse consults ``on_reuse``: KEEP is the
+    paper's §II-B no-re-benchmarking default, REPROBE re-certifies a
+    drifted instance (probe hidden under the prepare phase; a failure
+    retires the instance and requeues the request), RETIRE despawns it
+    and cold-starts instead.
+
+    All decisions flow through ``self.controller``
+    (:class:`~repro.core.control.Controller`); the legacy
+    ``policy``/``online_controller`` arguments build the default
+    :class:`~repro.core.control.ClassicMinosController`.
     """
 
     def __init__(
         self,
         backend: Backend,
-        policy,
-        pricing: Pricing,
+        policy=None,
+        pricing: Pricing = None,
         *,
         knobs: SubstrateKnobs = SubstrateKnobs(),
         seed: int = 0,
         online_controller=None,
         clock: Optional[SimClock] = None,
         rng: Optional[np.random.RandomState] = None,
+        controller=None,
     ) -> None:
+        if controller is None:
+            if policy is None:
+                raise TypeError("need a policy (classic stack) or a controller")
+            controller = ClassicMinosController(policy, online_controller)
+        elif policy is not None or online_controller is not None:
+            raise TypeError(
+                "pass either a controller or a policy/online_controller "
+                "stack, not both — wrap the policy in a "
+                "ClassicMinosController if you need both surfaces")
         self.backend = backend
         self.knobs = knobs
-        self.gate = ElysiumGate(policy, online_controller)
+        self.controller = controller
+        self.gate = getattr(controller, "gate", None)  # classic-stack view
         self.pricing = pricing
         self.rng = rng if rng is not None else np.random.RandomState(seed)
         self.loop = clock if clock is not None else SimClock()
@@ -497,20 +478,34 @@ class SubstrateEngine:
         self.results: list[RequestResult] = []
         self.instances_started = 0
         self.instances_terminated = 0
+        self.instances_retired = 0    # controller RETIREs + failed re-probes
+        self.reprobes = 0             # warm re-benchmarks run
         self.termination_events: list[tuple[float, float]] = []  # (t_ms, billed_ms)
+        # Welford estimates exposed through Telemetry (control plane inputs)
+        self.probe_stats = Welford()      # cold probe durations (ms)
+        self.log_probe_stats = Welford()  # log of the same (lognormal fit)
+        self.body_stats = Welford()       # observed body durations (ms)
+        self.reuse_stats = Welford()      # 1.0 warm-served / 0.0 cold-served
+        self.telemetry = Telemetry(self)
+
+    def _decide(self, point: str):
+        """Count the decision-point call on the controller (sweep summaries)."""
+        d = getattr(self.controller, "decisions", None)
+        if d is not None:
+            d[point] = d.get(point, 0) + 1
 
     # -- compatibility views -------------------------------------------
     @property
     def policy(self):
-        return self.gate.policy
+        return getattr(self.controller, "policy", None)
 
     @property
     def online_controller(self):
-        return self.gate.online_controller
+        return getattr(self.controller, "online_controller", None)
 
     @property
     def benchmark_observations(self) -> list[float]:
-        return self.gate.observations
+        return getattr(self.controller, "observations", [])
 
     @property
     def warm_pool_speeds(self) -> list[float]:
@@ -538,6 +533,67 @@ class SubstrateEngine:
     def _run_on_warm(self, inv: Invocation, inst: FunctionInstance) -> None:
         t0 = self.loop.now
         self.backend.reuse_drift(inst, self.rng, t0)
+
+        # Reuse decisions are only offered for a solo request (instance
+        # load 1): REPROBE/RETIRE end the instance, which must never happen
+        # under other live work (pool invariant). KEEP draws no RNG, so the
+        # default controller's stream is bit-identical to the old engine.
+        decision = ReuseDecision.KEEP
+        if self.pool.load(inst) == 1:
+            self._decide("on_reuse")
+            decision = self.controller.on_reuse(ReuseContext(
+                telemetry=self.telemetry,
+                instance=inst,
+                retry_count=inv.retry_count,
+                age_ms=t0 - inst.created_at_ms,
+                uses_since_probe=inst.serves_since_probe,
+                ms_since_probe=(None if inst.last_probe_ms is None
+                                else t0 - inst.last_probe_ms),
+            ))
+
+        if decision is ReuseDecision.RETIRE:
+            # graceful despawn: nothing billed (idle-reclaim analog); the
+            # request that wanted the instance cold-starts instead
+            inst.state = InstanceState.EXPIRED
+            self.pool.retire(inst)
+            self.instances_retired += 1
+            self._cold_start(inv)
+            return
+
+        bench: Optional[float] = None
+        if decision is ReuseDecision.REPROBE:
+            reprobe = getattr(self.backend, "reprobe", None)
+            if reprobe is not None:
+                bench = float(reprobe(inst, self.rng))
+                self.reprobes += 1
+                inst.last_probe_ms = t0
+                inst.serves_since_probe = 0
+                self._decide("on_probe")
+                verdict = self.controller.on_probe(ProbeContext(
+                    telemetry=self.telemetry, instance=inst,
+                    observed_ms=bench, retry_count=inv.retry_count,
+                    is_cold=False,
+                ))
+                if verdict is Verdict.TERMINATE:
+                    # drifted below the bar: retire, requeue the request.
+                    # Billed: the re-probe wall time (the instance was busy
+                    # measuring itself instead of serving).
+                    self.instances_retired += 1
+                    inst.state = InstanceState.TERMINATED
+                    self.pool.retire(inst)
+                    billed = bench
+                    delay = self.knobs.requeue_overhead_ms + \
+                        self.backend.requeue_penalty_ms(inv.payload["user"])
+
+                    def _retire_crash() -> None:
+                        self.cost.record_terminated(billed)
+                        self.termination_events.append((self.loop.now, billed))
+                        self.queue.requeue(inv, self.loop.now)
+                        self.loop.after(delay, self._dispatch)
+
+                    self.loop.after(bench, _retire_crash)
+                    return
+
         download = self.backend.prepare_ms(self.rng)
         load = self.pool.load(inst)  # in-flight count incl. this request
         analysis, output = self.backend.body(
@@ -546,14 +602,17 @@ class SubstrateEngine:
         mult = self.knobs.load_multiplier(load)
         if mult != 1.0:
             analysis *= mult
-        duration = download + analysis
+        # a re-probe runs concurrently with the prepare phase (paper Fig 2
+        # applied to warm reuse): body starts once both are done
+        ready = download if bench is None else max(download, bench)
+        duration = ready + analysis
 
         def _complete() -> None:
             inst.serve(self.loop.now)
             self.cost.record_reused(duration)
             self.pool.release(inst, self.loop.now)
             self._finish(inv, t0, download, analysis, served_by_cold=False,
-                         speed=inst.speed_factor, bench=None, output=output)
+                         speed=inst.speed_factor, bench=bench, output=output)
             self._dispatch()
 
         self.loop.after(duration, _complete)
@@ -577,7 +636,10 @@ class SubstrateEngine:
         load = self.pool.load(inst)  # 1 unless warm takes landed mid-start
         mult = self.knobs.load_multiplier(load)
 
-        if not self.gate.should_probe(inv.retry_count, is_cold_start=True):
+        self._decide("on_cold_start")
+        probe_decision = self.controller.on_cold_start(ColdStartContext(
+            telemetry=self.telemetry, retry_count=inv.retry_count))
+        if probe_decision is ProbeDecision.SKIP:
             # baseline arm, or emergency exit: run the body directly
             inst.accept_without_benchmark()  # FORCED_PASS / baseline accept
             analysis, output = self.backend.body(
@@ -600,13 +662,19 @@ class SubstrateEngine:
 
         # Minos path: probe runs in parallel with the prepare phase.
         bench = self.backend.probe(inst, self.rng)
-        load_factor = 1.0
-        if knobs.gate_load_aware:
-            # judge at the pool's current occupancy: the certified speed
-            # must hold up under the load the replica will actually serve
-            load_factor = knobs.load_multiplier(self.pool.mean_load())
-        verdict = self.gate.judge(inst, bench, inv.retry_count,
-                                  load_factor=load_factor)
+        inst.last_probe_ms = t0
+        inst.serves_since_probe = 0
+        self.probe_stats.update(bench)
+        self.log_probe_stats.update(math.log(bench))
+        self._decide("on_probe")
+        verdict = self.controller.on_probe(ProbeContext(
+            telemetry=self.telemetry, instance=inst, observed_ms=bench,
+            retry_count=inv.retry_count, is_cold=True))
+        if inst.state is InstanceState.BENCHMARKING:
+            # a pure-decision controller (no gate) left lifecycle to us
+            inst.verdict = verdict
+            inst.state = (InstanceState.TERMINATED if verdict is Verdict.TERMINATE
+                          else InstanceState.WARM)
         if verdict is Verdict.TERMINATE:
             # judged as soon as the probe finishes; requeue + crash.
             # Billed: startup + probe wall time (prepare is torn down with
@@ -666,6 +734,12 @@ class SubstrateEngine:
             output=output,
         )
         self.results.append(res)
+        # control-plane estimator feed (Telemetry reads these Welfords)
+        self.reuse_stats.update(0.0 if served_by_cold else 1.0)
+        self.body_stats.update(analysis)
+        self._decide("on_release")
+        self.controller.on_release(ReleaseContext(
+            telemetry=self.telemetry, result=res))
         cb = inv.payload.get("on_complete")
         if cb is not None:
             cb(res)

@@ -165,6 +165,15 @@ class ModelServingBackend:
         inst.benchmark_result = obs
         return obs
 
+    def reprobe(self, inst: FunctionInstance, rng: np.random.RandomState) -> float:
+        """Warm re-benchmark of a pooled replica (control plane,
+        ReuseDecision.REPROBE): the same matmul probe, measured at the
+        replica's current (contention-drifted) speed, no lifecycle
+        transition. Cheap by construction — probe work, not model work —
+        and it hides under the prepare phase like the cold probe does."""
+        return (self.probe_work_ms / inst.speed_factor) * sample_jitter(
+            rng, self.probe_noise)
+
     def body(
         self,
         payload: Any,

@@ -84,6 +84,7 @@ class MinosServingEngine(SubstrateEngine):
         load_slowdown_alpha: float = 0.0,
         gate_load_aware: bool = False,
         decode_mode: str = "jit",
+        controller=None,
     ) -> None:
         backend = ModelServingBackend(
             cfg,
@@ -109,6 +110,7 @@ class MinosServingEngine(SubstrateEngine):
         super().__init__(
             backend, policy, pricing,
             knobs=knobs, seed=seed, online_controller=online_controller,
+            controller=controller,
         )
         self.cfg = cfg
         self.model = backend.model

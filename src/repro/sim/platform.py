@@ -237,6 +237,15 @@ class SimFunctionBackend:
         inst.benchmark_result = bench
         return bench
 
+    def reprobe(self, inst: FunctionInstance, rng: np.random.RandomState) -> float:
+        """Warm re-benchmark (control plane, ReuseDecision.REPROBE): same
+        work and observation noise as the cold probe, but measured at the
+        instance's *current* (drifted) speed and without the COLD-only
+        lifecycle transition."""
+        return (self.spec.benchmark_ms / inst.speed_factor) * sample_jitter(
+            rng, self.spec.benchmark_noise
+        )
+
     def body(
         self,
         payload: Any,
@@ -271,6 +280,7 @@ class FaaSPlatform(SubstrateEngine):
         seed: int = 0,
         online_controller=None,
         profile: Optional[PlatformProfile] = None,
+        controller=None,
     ) -> None:
         """online_controller: an OnlineElysiumController (paper §IV future
         work, implemented here): every cold-start probe result is reported
@@ -284,7 +294,11 @@ class FaaSPlatform(SubstrateEngine):
         profile: platform-level overrides (pool order, concurrency, cold
         start, recycling, billing). Without one, those knobs come from the
         spec and the platform behaves exactly like GCF gen1 (LIFO pool, one
-        request per instance)."""
+        request per instance).
+
+        controller: a :class:`~repro.core.control.Controller` that replaces
+        the whole policy stack (pass ``policy=None`` then); the legacy
+        arguments build the default ClassicMinosController."""
         if pricing is None:
             if profile is None:
                 raise ValueError("pricing is required when no profile is given")
@@ -305,6 +319,7 @@ class FaaSPlatform(SubstrateEngine):
         super().__init__(
             SimFunctionBackend(spec, variation), policy, pricing,
             knobs=knobs, seed=seed, online_controller=online_controller,
+            controller=controller,
         )
         self.spec = spec
         self.variation = variation

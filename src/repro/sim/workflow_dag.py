@@ -34,6 +34,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.core.control import AdmitContext, AdmitDecision
 from repro.core.cost import Pricing, WorkflowCost
 from repro.core.substrate import SubstrateEngine
 from .platform import FaaSPlatform, FunctionSpec, PlatformProfile, RequestResult
@@ -204,20 +205,36 @@ class WorkflowEngine:
     units of the stage's own probe duration and must never be shared across
     stages with different ``benchmark_ms``. It receives the :class:`Stage`
     so it can honor per-stage ``max_retries``.
+
+    ``controller_factory`` instead builds one
+    :class:`~repro.core.control.Controller` per stage — the control-plane
+    surface (DESIGN.md §10); it supersedes ``policy_factory`` (pass None).
+    Item admission to a stage flows through the stage controller's
+    ``on_admit`` decision point: the static ``Stage.max_in_flight`` bound
+    is the default controller's answer, and a
+    :class:`~repro.core.control.QueueAwareAdmissionController` turns it
+    into a dynamic bound driven by the stage's live queue depth and pool
+    occupancy. Deferred items are re-offered on every completion of that
+    stage (a deferral always has work in flight or queued, so progress is
+    guaranteed).
     """
 
     def __init__(
         self,
         dag: WorkflowDAG,
         variation: VariationModel,
-        policy_factory: Callable[[Stage], object],
+        policy_factory: Optional[Callable[[Stage], object]] = None,
         *,
         profile: Optional[PlatformProfile] = None,
         pricing: Optional[Pricing] = None,
         seed: int = 0,
+        controller_factory: Optional[Callable[[Stage], object]] = None,
     ) -> None:
         if profile is None and pricing is None:
             raise ValueError("need a PlatformProfile or an explicit Pricing")
+        if (policy_factory is None) == (controller_factory is None):
+            raise ValueError(
+                "need exactly one of policy_factory= or controller_factory=")
         self.dag = dag
         self.variation = variation
         self.profile = profile
@@ -231,10 +248,13 @@ class WorkflowEngine:
         loop = None
         for i, name in enumerate(dag.order):
             stage = dag.stages[name]
+            policy = policy_factory(stage) if policy_factory is not None else None
+            ctrl = controller_factory(stage) if controller_factory is not None else None
             if stage.spec is not None:
                 plat: SubstrateEngine = FaaSPlatform(
-                    stage.spec, variation, policy_factory(stage),
+                    stage.spec, variation, policy,
                     pricing=pricing, seed=seed + 97 * i, profile=profile,
+                    controller=ctrl,
                 )
             else:
                 # a profile overrides hosting knobs but must not silently
@@ -245,9 +265,9 @@ class WorkflowEngine:
                     else stage.backend.default_knobs()
                 )
                 plat = SubstrateEngine(
-                    stage.backend, policy_factory(stage),
+                    stage.backend, policy,
                     pricing if pricing is not None else profile.pricing,
-                    knobs=knobs, seed=seed + 97 * i,
+                    knobs=knobs, seed=seed + 97 * i, controller=ctrl,
                 )
             if loop is None:
                 loop = plat.loop
@@ -292,10 +312,23 @@ class WorkflowEngine:
         items."""
         return len(self.platforms[stage_name].queue)
 
-    def _submit_stage(self, state: _ItemState, name: str) -> None:
+    def _admission_allows(self, name: str) -> bool:
+        """Ask the stage controller's on_admit decision point. The default
+        (classic) controller answers with the static ``Stage.max_in_flight``
+        bound; queue-aware controllers read the live telemetry."""
         stage = self.dag.stages[name]
-        if (stage.max_in_flight is not None
-                and self._in_flight[name] >= stage.max_in_flight):
+        plat = self.platforms[name]
+        plat._decide("on_admit")
+        decision = plat.controller.on_admit(AdmitContext(
+            telemetry=plat.telemetry,
+            in_flight=self._in_flight[name],
+            bound=stage.max_in_flight,
+            admission_queue_depth=len(self._admission[name]),
+        ))
+        return decision is AdmitDecision.ADMIT
+
+    def _submit_stage(self, state: _ItemState, name: str) -> None:
+        if not self._admission_allows(name):
             self._admission[name].append(state)  # back-pressure at admission
             return
         self._admit(state, name)
@@ -312,7 +345,10 @@ class WorkflowEngine:
 
         def done(res: RequestResult) -> None:
             self._in_flight[name] -= 1
-            if self._admission[name]:  # a completion frees one admission slot
+            # a completion may free admission capacity: re-offer deferred
+            # items until the controller defers again (the static bound
+            # admits exactly one per completion, as before)
+            while self._admission[name] and self._admission_allows(name):
                 self._admit(self._admission[name].popleft(), name)
             state.results[name] = res
             for child in self.dag.children[name]:

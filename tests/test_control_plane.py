@@ -1,0 +1,523 @@
+"""The control-plane API (core/control.py; DESIGN.md §10).
+
+* ``optimal_pass_fraction`` matches an independent brute-force sweep over
+  candidate pass fractions (hypothesis property test);
+* ``Telemetry`` is read-only and its views agree with
+  ``InstancePool.load`` / ``total_in_flight`` / queue depth MID-RUN (an
+  instrumented controller cross-checks at every decision point);
+* the default ClassicMinosController path equals the policy-only engine
+  bit-for-bit, and controller= / policy= are mutually exclusive;
+* ReprobeController re-certifies drifted instances (retires slow ones,
+  keeps fast ones) and never violates the solo-request invariant;
+* QueueAwareAdmissionController defers under pressure, loses no items,
+  and reduces replica churn on a pressured pipeline;
+* PassFractionController adapts its fraction and lognormal threshold math
+  is self-consistent;
+* the deprecated ``ElysiumGate(online_controller=...)`` kwarg warns once.
+"""
+import math
+import warnings
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # optional dev dependency (pyproject [dev] extra)
+    from _hypothesis_stub import hypothesis, st
+import numpy as np
+import pytest
+
+import repro.core.control as control
+from repro.core.control import (
+    AdmitContext,
+    AdmitDecision,
+    ClassicMinosController,
+    ControllerBase,
+    DelegatingController,
+    ElysiumGate,
+    PassFractionController,
+    ProbeDecision,
+    QueueAwareAdmissionController,
+    ReprobeController,
+    ReuseDecision,
+    Telemetry,
+    _norm_cdf,
+    _norm_ppf,
+    lognormal_pool_speedup,
+)
+from repro.core.cost import Pricing
+from repro.core.elysium import OnlineElysiumController, optimal_pass_fraction
+from repro.core.lifecycle import InstanceState
+from repro.core.policy import AdaptiveMinosPolicy, MinosPolicy, Verdict
+from repro.sim import (
+    FaaSPlatform,
+    FunctionSpec,
+    Stage,
+    VariationModel,
+    WorkflowDAG,
+    WorkflowEngine,
+    run_workflow_batch,
+)
+from repro.sim.workload import run_closed_loop
+
+PRICING = Pricing.gcf(256)
+
+
+def _spec(**kw):
+    base = dict(
+        name="cp", prepare_ms=200.0, prepare_jitter=0.0, body_ms=900.0,
+        body_jitter=0.0, benchmark_ms=150.0, benchmark_noise=0.0,
+        cold_start_ms=50.0, cold_start_jitter=0.0,
+        recycle_lifetime_ms=None, contention_rho=1.0,
+    )
+    base.update(kw)
+    return FunctionSpec(**base)
+
+
+# ---------------------------------------------------------------------------
+# optimal_pass_fraction vs brute force (property test)
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(
+    benchmark_ms=st.floats(min_value=10.0, max_value=2000.0),
+    body_ms=st.floats(min_value=10.0, max_value=50000.0),
+    expected_reuses=st.floats(min_value=0.0, max_value=200.0),
+    sigma=st.floats(min_value=0.01, max_value=0.8),
+)
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_optimal_pass_fraction_matches_brute_force(
+        benchmark_ms, body_ms, expected_reuses, sigma):
+    """The §II-A cost model, evaluated independently at every candidate
+    fraction, must agree with optimal_pass_fraction's argmin."""
+    fractions = tuple(float(f) for f in np.linspace(0.05, 0.95, 19))
+
+    def speedup(f):
+        return lognormal_pool_speedup(f, sigma)
+
+    got = optimal_pass_fraction(
+        benchmark_ms=benchmark_ms, body_ms=body_ms,
+        expected_reuses=expected_reuses, speedup_at_fraction=speedup,
+        fractions=fractions)
+
+    costs = {
+        f: benchmark_ms / f + (1.0 + expected_reuses) * body_ms / speedup(f)
+        for f in fractions
+    }
+    brute = min(costs, key=costs.get)
+    assert got == brute
+
+
+def test_optimal_fraction_monotone_in_reuse():
+    """More reuse amortizes selection waste ⇒ the optimal fraction can only
+    get more selective (non-increasing) as expected reuses grow."""
+    fs = [
+        optimal_pass_fraction(
+            benchmark_ms=300.0, body_ms=2000.0, expected_reuses=r,
+            speedup_at_fraction=lambda f: lognormal_pool_speedup(f, 0.2))
+        for r in (0.0, 2.0, 10.0, 50.0)
+    ]
+    assert all(b <= a for a, b in zip(fs, fs[1:]))
+    assert fs[-1] < fs[0]  # and it actually moves on this range
+
+
+# ---------------------------------------------------------------------------
+# Lognormal helpers
+# ---------------------------------------------------------------------------
+
+
+@hypothesis.given(p=st.floats(min_value=1e-4, max_value=1.0 - 1e-4))
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_norm_ppf_inverts_cdf(p):
+    assert _norm_cdf(_norm_ppf(p)) == pytest.approx(p, abs=1e-9)
+
+
+def test_lognormal_pool_speedup_against_monte_carlo():
+    rng = np.random.RandomState(0)
+    sigma = 0.3
+    d = np.exp(rng.normal(0.0, sigma, size=200_000))
+    for f in (0.2, 0.4, 0.7):
+        q = np.quantile(d, f)
+        emp = d.mean() / d[d <= q].mean()
+        assert lognormal_pool_speedup(f, sigma) == pytest.approx(emp, rel=0.02)
+
+
+def test_lognormal_pool_speedup_limits():
+    assert lognormal_pool_speedup(0.4, 0.0) == 1.0
+    assert lognormal_pool_speedup(0.999, 0.3) == pytest.approx(1.0, abs=0.01)
+    assert lognormal_pool_speedup(0.2, 0.4) > lognormal_pool_speedup(0.2, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: read-only, and consistent with the pool mid-run
+# ---------------------------------------------------------------------------
+
+
+def test_telemetry_is_read_only():
+    plat = FaaSPlatform(_spec(), VariationModel(sigma=0.1),
+                        MinosPolicy(elysium_threshold=1e9), PRICING, seed=0)
+    t = plat.telemetry
+    with pytest.raises(AttributeError):
+        t.now_ms = 5.0
+    with pytest.raises(AttributeError):
+        t.queue_depth = 3
+    with pytest.raises(AttributeError):
+        del t.now_ms
+    with pytest.raises(AttributeError):
+        t.anything_else = object()
+
+
+class _ConsistencyChecker(DelegatingController):
+    """Cross-checks, at every decision point, that the Telemetry view
+    agrees with the engine's pool/queue ground truth at that instant."""
+
+    def __init__(self, inner):
+        super().__init__(inner)
+        self.engine = None
+        self.checks = 0
+
+    def _check(self, t: Telemetry):
+        eng = self.engine
+        assert t.total_in_flight == eng.pool.total_in_flight
+        assert t.pool_available == len(eng.pool)
+        assert t.pool_instances == eng.pool.n_instances
+        assert t.mean_load == eng.pool.mean_load()
+        assert t.queue_depth == len(eng.queue)
+        assert t.now_ms == eng.loop.now
+        assert t.n_probes == eng.probe_stats.count
+        if eng.reuse_stats.count:
+            assert 0.0 <= t.reuse_rate <= 1.0
+        self.checks += 1
+
+    def on_cold_start(self, ctx):
+        self._check(ctx.telemetry)
+        return self.inner.on_cold_start(ctx)
+
+    def on_probe(self, ctx):
+        self._check(ctx.telemetry)
+        assert ctx.telemetry.instance_load(ctx.instance) >= 1
+        return self.inner.on_probe(ctx)
+
+    def on_reuse(self, ctx):
+        self._check(ctx.telemetry)
+        # reuse decisions are only offered for solo requests
+        assert ctx.telemetry.instance_load(ctx.instance) == 1
+        return self.inner.on_reuse(ctx)
+
+    def on_release(self, ctx):
+        self._check(ctx.telemetry)
+        return self.inner.on_release(ctx)
+
+
+def test_telemetry_consistent_with_pool_mid_run():
+    checker = _ConsistencyChecker(
+        ClassicMinosController(AdaptiveMinosPolicy(0.4, max_retries=4)))
+    plat = FaaSPlatform(
+        _spec(benchmark_noise=0.05, recycle_lifetime_ms=20_000.0,
+              contention_rho=0.97),
+        VariationModel(sigma=0.2), None, PRICING, seed=5, controller=checker)
+    checker.engine = plat
+    res = run_closed_loop(plat, n_vus=4, duration_ms=60_000.0)
+    assert len(res) > 50
+    assert checker.checks > 200  # every decision point cross-checked
+
+
+# ---------------------------------------------------------------------------
+# Engine construction and classic parity
+# ---------------------------------------------------------------------------
+
+
+def test_explicit_classic_controller_matches_policy_path():
+    """Passing ClassicMinosController(policy) must be bit-identical to
+    passing the policy (the engine builds the same controller itself)."""
+    spec = _spec(benchmark_noise=0.05, recycle_lifetime_ms=20_000.0,
+                 contention_rho=0.96, prepare_jitter=0.1, body_jitter=0.02,
+                 cold_start_jitter=0.2)
+    vm = VariationModel(sigma=0.2)
+
+    def digest(**kw):
+        plat = FaaSPlatform(spec, vm, kw.get("policy"), PRICING, seed=11,
+                            controller=kw.get("controller"))
+        res = run_closed_loop(plat, n_vus=5, duration_ms=90_000.0)
+        return ([round(r.latency_ms, 9) for r in res],
+                plat.instances_started, plat.instances_terminated,
+                round(plat.cost.total, 12))
+
+    a = digest(policy=MinosPolicy(elysium_threshold=170.0, max_retries=4))
+    b = digest(controller=ClassicMinosController(
+        MinosPolicy(elysium_threshold=170.0, max_retries=4)))
+    assert a == b
+
+
+def test_engine_rejects_policy_and_controller_together():
+    with pytest.raises(TypeError, match="not both"):
+        FaaSPlatform(_spec(), VariationModel(sigma=0.1),
+                     MinosPolicy(elysium_threshold=1.0), PRICING,
+                     controller=ControllerBase())
+    with pytest.raises(TypeError, match="policy"):
+        FaaSPlatform(_spec(), VariationModel(sigma=0.1), None, PRICING)
+
+
+def test_workflow_engine_rejects_both_factories():
+    dag = WorkflowDAG([Stage(_spec())])
+    with pytest.raises(ValueError, match="exactly one"):
+        WorkflowEngine(dag, VariationModel(sigma=0.1),
+                       lambda s: MinosPolicy(elysium_threshold=1.0),
+                       pricing=PRICING,
+                       controller_factory=lambda s: ControllerBase())
+    with pytest.raises(ValueError, match="exactly one"):
+        WorkflowEngine(dag, VariationModel(sigma=0.1), pricing=PRICING)
+
+
+# ---------------------------------------------------------------------------
+# ReprobeController
+# ---------------------------------------------------------------------------
+
+
+def test_reprobe_retires_drifted_instance_and_keeps_fast_one():
+    """Deterministic drift: an instance certified fast whose speed then
+    collapses must be re-probed at the trigger and retired; without drift
+    the re-probe passes and the instance keeps serving."""
+
+    class Collapse:
+        """Variation stub: first instance fast; replacements nominal."""
+
+        def __init__(self):
+            self.n = 0
+
+        def sample_speed(self, rng, t_ms=0.0):
+            self.n += 1
+            return 2.0 if self.n == 1 else 1.0
+
+    spec = _spec()
+    vm = VariationModel(sigma=0.0)
+    ctrl = ReprobeController(
+        ClassicMinosController(MinosPolicy(elysium_threshold=200.0,
+                                           max_retries=3)),
+        max_uses_since_probe=4)
+    plat = FaaSPlatform(spec, vm, None, PRICING, seed=0, controller=ctrl)
+    # monkey-wire deterministic speeds + a mid-run collapse
+    collapse = Collapse()
+    plat.backend.sample_speed = collapse.sample_speed
+    plat.backend.reuse_drift = lambda inst, rng, t: None
+
+    done = []
+    for i in range(4):  # cold + 3 warm serves → next reuse triggers re-probe
+        plat.submit({"i": i}, done.append)
+        plat.loop.run_all()
+    assert plat.reprobes == 0
+    inst = plat.pool.available[0]
+    assert inst.serves_since_probe == 4
+    # collapse the certified speed; the trigger re-probe must catch it
+    inst.speed_factor = 0.2  # probe now takes 150/0.2 = 750ms > 200ms bar
+    plat.submit({"i": 99}, done.append)
+    plat.loop.run_all()
+    assert plat.reprobes == 1
+    assert plat.instances_retired == 1
+    assert inst.state is InstanceState.TERMINATED
+    assert len(done) == 5                      # the request still completed
+    assert done[-1].retries == 1               # ...after one migration
+    assert done[-1].instance_speed == 1.0      # ...on a fresh instance
+    # the fresh instance passed a cold probe; serving continues
+    assert plat.pool.n_instances == 1
+
+
+def test_reprobe_passes_and_refreshes_certification_age():
+    ctrl = ReprobeController(
+        ClassicMinosController(MinosPolicy(elysium_threshold=200.0,
+                                           max_retries=3)),
+        max_uses_since_probe=2)
+    plat = FaaSPlatform(_spec(), VariationModel(sigma=0.0), None, PRICING,
+                        seed=0, controller=ctrl)
+    done = []
+    for i in range(6):
+        plat.submit({"i": i}, done.append)
+        plat.loop.run_all()
+    # serves 1,2 → reprobe on 3rd reuse; passes; counter resets and repeats
+    assert plat.reprobes == 2
+    assert plat.instances_retired == 0
+    assert plat.instances_started == 1
+    assert len(done) == 6
+    inst = plat.pool.available[0]
+    assert inst.last_probe_ms is not None
+
+
+def test_reprobe_requires_a_trigger():
+    inner = ClassicMinosController(MinosPolicy(elysium_threshold=1.0))
+    with pytest.raises(ValueError, match="max_uses_since_probe"):
+        ReprobeController(inner)
+    assert ReprobeController.half_life_uses(0.95) == 14
+    with pytest.raises(ValueError):
+        ReprobeController.half_life_uses(1.0)
+
+
+class _NoReprobeProxy:
+    """Backend proxy that hides the optional ``reprobe`` hook."""
+
+    def __init__(self, inner):
+        self._inner = inner
+
+    def __getattr__(self, name):
+        if name == "reprobe":
+            raise AttributeError(name)
+        return getattr(self._inner, name)
+
+
+def test_backend_without_reprobe_degrades_to_keep():
+    """A backend lacking the optional reprobe hook must serve normally
+    (REPROBE quietly becomes KEEP) — third-party backends keep working."""
+    ctrl = ReprobeController(
+        ClassicMinosController(MinosPolicy(elysium_threshold=200.0)),
+        max_uses_since_probe=1)
+    plat = FaaSPlatform(_spec(), VariationModel(sigma=0.0), None, PRICING,
+                        seed=0, controller=ctrl)
+    plat.backend = _NoReprobeProxy(plat.backend)
+    done = []
+    for i in range(3):
+        plat.submit({"i": i}, done.append)
+        plat.loop.run_all()
+    assert len(done) == 3
+    assert plat.reprobes == 0
+
+
+# ---------------------------------------------------------------------------
+# QueueAwareAdmissionController
+# ---------------------------------------------------------------------------
+
+
+def test_queue_aware_admission_defers_and_loses_nothing():
+    """Under a burst far beyond capacity, the dynamic bound defers items at
+    admission, every item still completes, and fewer instances are
+    started than under static (unbounded) admission."""
+    spec = _spec(body_ms=400.0, recycle_lifetime_ms=None)
+    vm = VariationModel(sigma=0.0)
+
+    def run(arm):
+        def factory(stage):
+            inner = ClassicMinosController(
+                MinosPolicy(elysium_threshold=1e9, max_retries=3))
+            if arm == "queue-aware":
+                return QueueAwareAdmissionController(inner, headroom=1.0,
+                                                     min_slots=2)
+            return inner
+        dag = WorkflowDAG([Stage(spec)], name=arm)
+        eng = WorkflowEngine(dag, vm, controller_factory=factory,
+                             pricing=PRICING, seed=0)
+        res = run_workflow_batch(eng, n_items=30, inter_arrival_ms=0.0)
+        return eng, res
+
+    eng_s, res_s = run("static")
+    eng_q, res_q = run("queue-aware")
+    assert res_s.n_items == res_q.n_items == 30
+    assert eng_q.admission_queue_depth("cp") == 0   # fully drained
+    ctrl = eng_q.platforms["cp"].controller
+    assert ctrl.deferred > 0
+    assert eng_q.instances_started < eng_s.instances_started
+
+
+def test_queue_aware_respects_static_bound_first():
+    inner = ClassicMinosController(MinosPolicy(elysium_threshold=1.0))
+    ctrl = QueueAwareAdmissionController(inner, headroom=100.0)
+
+    class _T:
+        pass
+
+    t = _T()
+    t.knobs = type("K", (), {"max_pool": None, "per_instance_concurrency": 1})()
+    t.pool_instances = 1
+    t.total_in_flight = 0
+    t.queue_depth = 0
+    ctx = AdmitContext(telemetry=t, in_flight=5, bound=5,
+                       admission_queue_depth=0)
+    assert ctrl.on_admit(ctx) is AdmitDecision.DEFER  # static bound wins
+    ctx2 = AdmitContext(telemetry=t, in_flight=4, bound=5,
+                        admission_queue_depth=0)
+    assert ctrl.on_admit(ctx2) is AdmitDecision.ADMIT
+
+
+# ---------------------------------------------------------------------------
+# PassFractionController
+# ---------------------------------------------------------------------------
+
+
+def test_pass_fraction_controller_adapts_and_gates():
+    ctrl = PassFractionController(0.4, update_every=4, warmup_reports=5)
+    plat = FaaSPlatform(
+        _spec(benchmark_noise=0.05, recycle_lifetime_ms=10_000.0,
+              contention_rho=0.97),
+        VariationModel(sigma=0.2), None, PRICING, seed=7, controller=ctrl)
+    res = run_closed_loop(plat, n_vus=6, duration_ms=5 * 60_000.0)
+    assert len(res) > 100
+    assert ctrl.threshold is not None
+    assert len(ctrl.fraction_history) > 0
+    assert 0.05 <= ctrl.pass_fraction <= 0.95
+    assert plat.instances_terminated > 0        # the gate actually engaged
+    # high reuse on this workload pushes the fraction below the 0.4 start
+    assert ctrl.pass_fraction < 0.4
+    # telemetry estimates the controller consumed are live and sane
+    t = plat.telemetry
+    assert t.n_probes == len(ctrl.observations)
+    assert 0.0 < t.reuse_rate < 1.0
+    assert math.isfinite(t.probe_log_std) and t.probe_log_std > 0.0
+
+
+def test_pass_fraction_controller_warmup_passes_everything():
+    ctrl = PassFractionController(0.4, warmup_reports=5)
+    plat = FaaSPlatform(_spec(), VariationModel(sigma=0.3), None, PRICING,
+                        seed=1, controller=ctrl)
+    done = []
+    for i in range(3):  # fewer than warmup_reports cold starts
+        plat.submit({"i": i}, done.append)
+        plat.loop.run_all()
+    assert plat.instances_terminated == 0
+    assert ctrl.threshold is None
+
+
+def test_pass_fraction_controller_validation():
+    with pytest.raises(ValueError):
+        PassFractionController(0.0)
+    with pytest.raises(ValueError):
+        PassFractionController(0.4, update_every=0)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation + decision accounting
+# ---------------------------------------------------------------------------
+
+
+def test_elysium_gate_online_controller_kwarg_warns_once():
+    control._gate_kwarg_warned = False  # reset the once-guard
+    ctl = OnlineElysiumController(initial_threshold=100.0)
+    with pytest.warns(DeprecationWarning, match="ClassicMinosController"):
+        ElysiumGate(MinosPolicy(elysium_threshold=1.0), online_controller=ctl)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second construction must NOT warn
+        ElysiumGate(MinosPolicy(elysium_threshold=1.0), online_controller=ctl)
+    # the engine-internal path (ClassicMinosController) never warns
+    control._gate_kwarg_warned = False
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ClassicMinosController(MinosPolicy(elysium_threshold=1.0),
+                               online_controller=ctl)
+    control._gate_kwarg_warned = True
+
+
+def test_decision_summary_names_every_handler():
+    """Wrapper stacks attribute each decision point to the controller that
+    actually answers it."""
+    inner = ClassicMinosController(AdaptiveMinosPolicy(0.4, max_retries=4))
+    ctrl = QueueAwareAdmissionController(
+        ReprobeController(inner, max_uses_since_probe=2), headroom=1.0)
+    assert ctrl.handler_name("on_admit") == "queue-admission"
+    assert ctrl.handler_name("on_reuse") == "reprobe"
+    assert ctrl.handler_name("on_probe").startswith("classic")
+    plat = FaaSPlatform(_spec(benchmark_noise=0.05),
+                        VariationModel(sigma=0.2), None, PRICING, seed=3,
+                        controller=ctrl)
+    done = []
+    for i in range(8):
+        plat.submit({"i": i}, done.append)
+        plat.loop.run_all()
+    summary = plat.controller.decision_summary()
+    assert "on_cold_start=classic" in summary
+    assert "on_reuse=reprobe" in summary
+    assert "on_release=classic" in summary
