@@ -1,22 +1,69 @@
 """Benchmark harness: one entry per paper figure/table + kernel micro +
-roofline aggregation. Prints ``name,us_per_call,derived`` CSV rows per the
-repo convention, then detailed per-figure tables.
+roofline aggregation + the vectorized grid sweep. Prints
+``name,us_per_call,derived`` CSV rows per the repo convention, then
+detailed per-figure tables.
+
+Every run also persists machine-readable timings to
+``benchmarks/BENCH_substrate.json`` (per-sweep wall-clock, plus the grid
+sweep's events/sec + arms/sec), so the repo carries a perf trajectory
+across PRs; when a previous file exists a one-line delta is printed.
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig4,...]
 """
 import argparse
+import json
+import os
 import sys
 import time
+
+_BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _bench_json_path(quick: bool) -> str:
+    """Quick runs use shorter windows, so their wall-clocks are not
+    comparable to full runs — each mode keeps its own baseline file (the
+    committed perf trajectory is the full one)."""
+    name = "BENCH_substrate.quick.json" if quick else "BENCH_substrate.json"
+    return os.path.join(_BENCH_DIR, name)
+
+
+def _load_previous(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, ValueError):
+        return {}
+
+
+def _print_delta(prev: dict, cur: dict) -> None:
+    """One line comparing this run to the previous BENCH_substrate.json."""
+    prev_r, cur_r = prev.get("results", {}), cur.get("results", {})
+    common = [n for n in cur_r if n in prev_r]
+    if not common:
+        return
+    old = sum(prev_r[n]["wall_clock_s"] for n in common)
+    new = sum(cur_r[n]["wall_clock_s"] for n in common)
+    parts = [f"total {old:.1f}s->{new:.1f}s ({(new - old) / old * 100:+.0f}%)"
+             if old > 0 else f"total {new:.1f}s"]
+    g_old = prev_r.get("grid_sweep", {}).get("arms_per_sec")
+    g_new = cur_r.get("grid_sweep", {}).get("arms_per_sec")
+    if g_old and g_new:
+        parts.append(f"grid {g_old:.0f}->{g_new:.0f} arms/s "
+                     f"({(g_new - g_old) / g_old * 100:+.0f}%)")
+    print(f"BENCH delta vs previous ({len(common)} sweeps): "
+          + ", ".join(parts))
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="shorter sim windows")
     ap.add_argument("--only", default="", help="comma-separated benchmark names")
+    ap.add_argument("--no-bench-json", action="store_true",
+                    help="skip writing benchmarks/BENCH_substrate.json")
     args = ap.parse_args()
 
-    from . import (diurnal_sweep, figs, kernels_micro, pipeline_sweep,
-                   roofline_table, workflow_sweep)
+    from . import (diurnal_sweep, figs, grid_sweep, kernels_micro,
+                   pipeline_sweep, roofline_table, workflow_sweep)
 
     benches = {
         "workflow_sweep": workflow_sweep.workflow_sweep,
@@ -26,6 +73,8 @@ def main() -> None:
         # column naming which controller handled each decision point
         "diurnal_controllers": diurnal_sweep.controller_sweep,
         "pipeline_admission": pipeline_sweep.admission_sweep,
+        # vectorized Monte-Carlo fast path (DESIGN.md §11)
+        "grid_sweep": grid_sweep.grid_sweep,
         "fig4_regression_duration": figs.fig4_regression_duration,
         "fig5_successful_requests": figs.fig5_successful_requests,
         "fig6_cost_per_day": figs.fig6_cost_per_day,
@@ -44,15 +93,20 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     details = []
+    bench_results = {}
     failures = 0
     for name in selected:
         fn = benches[name]
         t0 = time.perf_counter()
         try:
-            rows, headline, *_ = fn(quick=args.quick)
-            us = (time.perf_counter() - t0) * 1e6
-            print(f"{name},{us:.0f},{headline}")
+            rows, headline, *extra = fn(quick=args.quick)
+            wall = time.perf_counter() - t0
+            print(f"{name},{wall * 1e6:.0f},{headline}")
             details.append((name, rows))
+            record = {"wall_clock_s": round(wall, 3), "headline": headline}
+            if extra and isinstance(extra[0], dict):
+                record.update(extra[0])  # grid_sweep perf numbers
+            bench_results[name] = record
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{name},0,FAILED:{type(e).__name__}:{e}")
@@ -63,6 +117,25 @@ def main() -> None:
             print(",".join(cols))
             for r in rows:
                 print(",".join(str(r[c]) for c in cols))
+
+    if bench_results and not args.no_bench_json:
+        path = _bench_json_path(args.quick)
+        prev = _load_previous(path)
+        cur = {
+            "schema": 1,
+            "quick": bool(args.quick),
+            "results": bench_results,
+        }
+        _print_delta(prev, cur)
+        # merge: a --only (or partially failed) run must not wipe the
+        # baselines of sweeps it did not execute
+        merged = dict(prev.get("results", {}))
+        merged.update(bench_results)
+        cur["results"] = merged
+        with open(path, "w") as f:
+            json.dump(cur, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {path}")
     sys.exit(1 if failures else 0)
 
 

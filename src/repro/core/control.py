@@ -140,7 +140,19 @@ class Telemetry:
 
     @property
     def pool_speeds(self) -> tuple[float, ...]:
-        return tuple(self._engine.pool.speeds)
+        """Certified speeds of pooled instances — the pool's cached
+        immutable view (no per-read list rebuild; PR 5)."""
+        return self._engine.pool.speeds_view()
+
+    @property
+    def pool_warm(self) -> int:
+        """Pooled WARM instances (len of :attr:`pool_speeds`, O(1))."""
+        return self._engine.pool.n_warm
+
+    def pool_speed_quantile(self, q: float) -> float:
+        """q-quantile of the pooled certified speeds (nan when empty) —
+        what a gate needs instead of the full speeds list."""
+        return self._engine.pool.certified_speed_quantile(q)
 
     def instance_load(self, inst: FunctionInstance) -> int:
         return self._engine.pool.load(inst)

@@ -83,8 +83,11 @@ class WelfordState(NamedTuple):
     m2: jax.Array
 
 
-def welford_init(dtype=jnp.float32) -> WelfordState:
-    z = jnp.zeros((), dtype)
+def welford_init(shape=(), dtype=jnp.float32) -> WelfordState:
+    """Welford pytree state; ``shape`` non-() folds several independent
+    streams elementwise in one state (e.g. (3,) for body/latency/reuse —
+    one fused update instead of three in a jitted hot loop)."""
+    z = jnp.zeros(shape, dtype)
     return WelfordState(count=z, mean=z, m2=z)
 
 
@@ -93,6 +96,21 @@ def welford_update(state: WelfordState, x: jax.Array) -> WelfordState:
     delta = x - state.mean
     mean = state.mean + delta / count
     m2 = state.m2 + delta * (x - mean)
+    return WelfordState(count=count, mean=mean, m2=m2)
+
+
+def welford_update_masked(
+    state: WelfordState, x: jax.Array, mask: jax.Array
+) -> WelfordState:
+    """:func:`welford_update` where ``mask`` is truthy, identity where not —
+    fused (arithmetic masking), so a vectorized simulator can fold a
+    conditional observation without materializing both states and
+    selecting (tested equivalent in tests/test_estimators.py)."""
+    m = jnp.asarray(mask, state.count.dtype)
+    count = state.count + m
+    delta = x - state.mean
+    mean = state.mean + m * delta / jnp.maximum(count, 1.0)
+    m2 = state.m2 + m * delta * (x - mean)
     return WelfordState(count=count, mean=mean, m2=m2)
 
 
@@ -262,15 +280,24 @@ def p2_update(state: P2State, x: jax.Array) -> P2State:
                 + (n_ip - n_i - s_) * (q[i] - q[i - 1]) / denom_lo
             )
             ok = (q[i - 1] < q_par) & (q_par < q[i + 1])
-            j = i + jnp.asarray(s_, jnp.int32)
-            denom_lin = jnp.where(pos[j] - n_i == 0, 1.0, pos[j] - n_i)
-            q_lin = q[i] + s_ * (q[j] - q[i]) / denom_lin
+            # j = i ± 1 with the sign data-dependent: evaluate both static
+            # neighbors and select, so the whole update stays gather-free
+            q_j = jnp.where(move_up, q[i + 1], q[i - 1])
+            pos_j = jnp.where(move_up, pos[i + 1], pos[i - 1])
+            denom_lin = jnp.where(pos_j - n_i == 0, 1.0, pos_j - n_i)
+            q_lin = q[i] + s_ * (q_j - q[i]) / denom_lin
             q_new = jnp.where(ok, q_par, q_lin)
             q = q.at[i].set(jnp.where(do, q_new, q[i]))
             pos = pos.at[i].set(jnp.where(do, n_i + s_, n_i))
             return (q, pos)
 
-        q, pos = jax.lax.fori_loop(1, 4, adjust, (q, pos))
+        # Python-unrolled (markers 1..3): static indices lower to cheap
+        # slices instead of per-iteration dynamic gathers — same math as
+        # the fori_loop form, pinned by tests/test_estimators.py
+        carry = (q, pos)
+        for i in range(1, 4):
+            carry = adjust(i, carry)
+        q, pos = carry
         return s._replace(n_obs=s.n_obs + 1, heights=q, positions=pos, desired=des)
 
     return jax.lax.cond(state.n_obs < 5, warmup, steady, state)

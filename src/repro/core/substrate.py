@@ -146,6 +146,18 @@ class InstancePool:
     with requests in flight is never reclaimed; every pooled instance is
     WARM, i.e. passed the gate (or was force-accepted) on its first
     invocation.
+
+    Hot-path aggregates (PR 5): ``total_in_flight``/``n_instances``/
+    ``mean_load`` are O(1) incremental counters (they are read per gate
+    judgment under ``gate_load_aware``); :meth:`take` skips the
+    available-list rebuild entirely while no pooled idle instance can have
+    reached its idle/recycle deadline (``_next_deadline`` lower bound);
+    ``order="spread"`` keeps a lazily-invalidated min-load heap instead of
+    an O(n) argmin scan per take; :meth:`speeds_view` is a cached tuple.
+    Equivalence with the plain O(n) scans is property-tested
+    (tests/test_pool_fastpath.py). All mutation must go through the pool's
+    methods — external code seeds instances with :meth:`add_warm`, never by
+    appending to ``available`` directly.
     """
 
     def __init__(
@@ -169,42 +181,87 @@ class InstancePool:
         self.available: list[FunctionInstance] = []
         self._active: dict[int, int] = {}  # instance_id -> in-flight requests
         self._recycle_deadline: dict[int, float] = {}
+        # -- incremental aggregates (kept equal to the O(n) recomputes) --
+        self._in_flight = 0                       # sum(_active.values())
+        self._live_ids: set[int] = set()          # avail ids | _active keys
+        self._avail_seq: dict[int, int] = {}      # id -> stable position seq
+        self._pos_seq = itertools.count()         # grows with each append
+        # earliest idle/recycle deadline among *idle* pooled instances — a
+        # lower bound: removals leave it stale-low (spurious sweep, never a
+        # missed one)
+        self._next_deadline = math.inf
+        # (load, seq, push_id, inst) entries; only an instance's LATEST
+        # push is ever valid (plus load/seq currency), so duplicates from
+        # repeated take/release cycles go stale and pop lazily instead of
+        # accumulating as equally-valid twins — keeps the heap bounded
+        self._spread_heap: list[tuple[int, int, int, FunctionInstance]] = []
+        self._spread_push = itertools.count()
+        self._spread_latest: dict[int, int] = {}  # iid -> latest push id
+        self._version = 0                         # bumped on any mutation
+        self._speeds_cache: tuple[float, ...] = ()
+        self._speeds_version = -1
 
     # -- lifecycle entry points ----------------------------------------
     def admit_cold(self, inst: FunctionInstance, now: float) -> None:
         """Register a freshly started instance with one request in flight
         (it is serving the invocation that caused the cold start)."""
         self._active[inst.instance_id] = 1
+        self._in_flight += 1
+        self._live_ids.add(inst.instance_id)
+        self._version += 1
         if self.recycle_lifetime_ms is not None:
             assert self._rng is not None, "recycling requires an rng"
             self._recycle_deadline[inst.instance_id] = now + float(
                 self._rng.exponential(self.recycle_lifetime_ms)
             )
 
+    def add_warm(self, inst: FunctionInstance, *, in_flight: int = 0) -> None:
+        """Admit an externally built WARM instance (tests, pool seeding) at
+        ``in_flight`` requests. The instance joins ``available`` unless it
+        is already at capacity — the state a normal admit+take sequence
+        would have produced."""
+        iid = inst.instance_id
+        if in_flight:
+            self._active[iid] = in_flight
+            self._in_flight += in_flight
+        self._version += 1
+        if in_flight < self.concurrency:
+            self._append_available(inst)
+        self._sync_live(iid)
+
     def take(self, now: float) -> Optional[FunctionInstance]:
         """Reserve one request slot on a warm instance, or None."""
         # reclaim idle-expired and platform-recycled instances (never ones
-        # with requests in flight)
-        self.available = [
-            i for i in self.available
-            if self._active.get(i.instance_id, 0) > 0
-            or (not i.maybe_expire(now) and not self._recycled(i, now))
-        ]
+        # with requests in flight). Skipped — O(1) — while no pooled idle
+        # instance can have reached a deadline yet.
+        if self.available and now >= self._next_deadline:
+            self._sweep(now)
         if not self.available:
             return None
         if self.order == "lifo":
             idx = len(self.available) - 1
+            inst = self.available[idx]
         elif self.order == "spread":
-            idx = min(range(len(self.available)),
-                      key=lambda i: self._active.get(
-                          self.available[i].instance_id, 0))
+            inst = self._spread_min()
+            idx = None  # resolved only if the instance must leave the list
         else:
             idx = 0
-        inst = self.available[idx]
-        n = self._active.get(inst.instance_id, 0) + 1
-        self._active[inst.instance_id] = n
+            inst = self.available[idx]
+        iid = inst.instance_id
+        n = self._active.get(iid, 0) + 1
+        self._active[iid] = n
+        self._in_flight += 1
+        self._live_ids.add(iid)
+        self._version += 1
         if n >= self.concurrency:  # at capacity: no longer available
-            self.available.pop(idx)
+            if idx is None:
+                self.available.remove(inst)
+            else:
+                self.available.pop(idx)
+            del self._avail_seq[iid]
+            self._spread_latest.pop(iid, None)
+        elif self.order == "spread":
+            self._spread_push_entry(inst, n)
         return inst
 
     def release(self, inst: FunctionInstance, now: Optional[float] = None) -> None:
@@ -217,15 +274,22 @@ class InstancePool:
         pool views (``speeds``/``len``) until the next ``take`` swept it.
         ``now=None`` (pool used standalone) skips the time-based checks.
         """
-        n = self._active.get(inst.instance_id, 0) - 1
+        iid = inst.instance_id
+        had = self._active.get(iid, 0)
+        n = had - 1
         if n <= 0:
-            self._active.pop(inst.instance_id, None)
+            self._active.pop(iid, None)
         else:
-            self._active[inst.instance_id] = n
-        if inst.state is InstanceState.WARM and inst not in self.available:
+            self._active[iid] = n
+        if had > 0:
+            self._in_flight -= 1
+        self._version += 1
+        in_avail = iid in self._avail_seq
+        if inst.state is InstanceState.WARM and not in_avail:
             if n <= 0 and now is not None and (
                 inst.maybe_expire(now) or self._recycled(inst, now)
             ):
+                self._sync_live(iid)
                 return  # past its deadline while serving: reclaim, not readmit
             if self.max_size is not None and len(self.available) >= self.max_size:
                 if n <= 0:
@@ -234,12 +298,25 @@ class InstancePool:
                 # killed under live work (same invariant as take's reclaim);
                 # it stays out of the available list and is re-offered when
                 # its last request completes
+                self._sync_live(iid)
                 return
-            self.available.append(inst)
+            self._append_available(inst)
+        elif in_avail:
+            # still pooled: refresh its min-load entry; once it drains to
+            # idle, its deadline starts gating the take fast path
+            if self.order == "spread":
+                self._spread_push_entry(inst, max(n, 0))
+            if n <= 0:
+                self._fold_deadline(inst)
+        self._sync_live(iid)
 
     def drop(self, inst: FunctionInstance) -> None:
         """A terminated (gate-failed) instance leaves without serving."""
-        self._active.pop(inst.instance_id, None)
+        had = self._active.pop(inst.instance_id, None)
+        if had:
+            self._in_flight -= had
+        self._version += 1
+        self._sync_live(inst.instance_id)
 
     def retire(self, inst: FunctionInstance) -> None:
         """Remove ``inst`` from the pool entirely — controller-initiated
@@ -248,12 +325,118 @@ class InstancePool:
         are in flight on it (the engine only offers reuse decisions at
         instance load 1, preserving the never-kill-under-live-work
         invariant)."""
-        self._active.pop(inst.instance_id, None)
-        self._recycle_deadline.pop(inst.instance_id, None)
-        try:
+        iid = inst.instance_id
+        had = self._active.pop(iid, None)
+        if had:
+            self._in_flight -= had
+        self._recycle_deadline.pop(iid, None)
+        if iid in self._avail_seq:
             self.available.remove(inst)
-        except ValueError:
-            pass  # at capacity (or never readmitted): not in the list
+            del self._avail_seq[iid]
+        self._spread_latest.pop(iid, None)
+        self._version += 1
+        self._sync_live(iid)
+
+    # -- internal bookkeeping -------------------------------------------
+    def _sync_live(self, iid: int) -> None:
+        if iid in self._active or iid in self._avail_seq:
+            self._live_ids.add(iid)
+        else:
+            self._live_ids.discard(iid)
+
+    def _append_available(self, inst: FunctionInstance) -> None:
+        iid = inst.instance_id
+        seq = next(self._pos_seq)
+        self._avail_seq[iid] = seq
+        self.available.append(inst)
+        load = self._active.get(iid, 0)
+        if self.order == "spread":
+            self._spread_push_entry(inst, load)
+        if load == 0:
+            self._fold_deadline(inst)
+        self._live_ids.add(iid)
+
+    def _spread_push_entry(self, inst: FunctionInstance, load: int) -> None:
+        pid = next(self._spread_push)
+        self._spread_latest[inst.instance_id] = pid
+        heapq.heappush(
+            self._spread_heap,
+            (load, self._avail_seq[inst.instance_id], pid, inst))
+        # stale entries ABOVE the current min never surface to be popped
+        # lazily, so compact once the heap outgrows the live set — O(n)
+        # at a geometric trigger = amortized O(1) per operation
+        if len(self._spread_heap) > 4 * len(self.available) + 8:
+            self._spread_heap = [
+                (self._active.get(i.instance_id, 0),
+                 self._avail_seq[i.instance_id],
+                 self._spread_latest[i.instance_id], i)
+                for i in self.available]
+            heapq.heapify(self._spread_heap)
+
+    def _fold_deadline(self, inst: FunctionInstance) -> None:
+        """Fold an idle pooled instance's reclaim deadline into the take
+        fast-path bound. ``maybe_expire`` fires strictly after
+        last_used + idle_timeout, so sweeping at >= the bound never misses."""
+        d = inst.last_used_ms + inst.idle_timeout_ms
+        rd = self._recycle_deadline.get(inst.instance_id)
+        if rd is not None and rd < d:
+            d = rd
+        if d < self._next_deadline:
+            self._next_deadline = d
+
+    def _sweep(self, now: float) -> None:
+        """The old per-take reclaim filter, now run only when a deadline
+        may actually have passed. Bit-identical membership/mutation order:
+        busy instances are protected (and not state-checked), idle ones
+        run maybe_expire then _recycled."""
+        kept: list[FunctionInstance] = []
+        next_deadline = math.inf
+        removed = False
+        for inst in self.available:
+            iid = inst.instance_id
+            if self._active.get(iid, 0) > 0:
+                kept.append(inst)  # in-flight: protected, drains via release
+            elif not inst.maybe_expire(now) and not self._recycled(inst, now):
+                kept.append(inst)
+                d = inst.last_used_ms + inst.idle_timeout_ms
+                rd = self._recycle_deadline.get(iid)
+                if rd is not None and rd < d:
+                    d = rd
+                if d < next_deadline:
+                    next_deadline = d
+            else:
+                removed = True
+                del self._avail_seq[iid]
+                self._spread_latest.pop(iid, None)
+                self._sync_live(iid)
+        if removed:
+            self.available = kept
+            self._version += 1
+        self._next_deadline = next_deadline
+
+    def _spread_min(self) -> FunctionInstance:
+        """Current least-loaded available instance, FIFO among ties —
+        identical choice to ``min(range(len(available)), key=load)`` since
+        position seqs grow in list order. Amortized O(log n): stale heap
+        entries (load or membership changed since push) pop lazily."""
+        h = self._spread_heap
+        while True:
+            while h:
+                load, seq, pid, inst = h[0]
+                iid = inst.instance_id
+                if self._avail_seq.get(iid) == seq \
+                        and self._active.get(iid, 0) == load \
+                        and self._spread_latest.get(iid) == pid:
+                    return inst
+                heapq.heappop(h)
+            # heap drained (never populated for this membership): rebuild.
+            # Entries pushed here are valid by construction, so the outer
+            # loop terminates on the next pass.
+            for inst in self.available:
+                iid = inst.instance_id
+                if iid not in self._avail_seq:  # seeded out-of-band
+                    self._avail_seq[iid] = next(self._pos_seq)
+                self._spread_push_entry(inst, self._active.get(iid, 0))
 
     def _recycled(self, inst: FunctionInstance, now: float) -> bool:
         deadline = self._recycle_deadline.get(inst.instance_id)
@@ -263,9 +446,36 @@ class InstancePool:
         return False
 
     # -- views ----------------------------------------------------------
+    def speeds_view(self) -> tuple[float, ...]:
+        """Certified speeds of pooled instances, as a cached immutable
+        tuple — safe to hand to controllers/telemetry without a per-read
+        list rebuild. The cache keys on the pool's mutation version;
+        ``speed_factor`` drift always follows a ``take`` (backends drift on
+        reuse), so a bumped version covers it."""
+        if self._speeds_version != self._version:
+            self._speeds_cache = tuple(
+                i.speed_factor for i in self.available
+                if i.state is InstanceState.WARM)
+            self._speeds_version = self._version
+        return self._speeds_cache
+
     @property
     def speeds(self) -> list[float]:
-        return [i.speed_factor for i in self.available if i.state is InstanceState.WARM]
+        """Mutable copy of :meth:`speeds_view` (compat; hot readers use the
+        cached view so a caller mutating this list cannot corrupt it)."""
+        return list(self.speeds_view())
+
+    @property
+    def n_warm(self) -> int:
+        """Pooled WARM instances — the count the gate actually needs."""
+        return len(self.speeds_view())
+
+    def certified_speed_quantile(self, q: float) -> float:
+        """q-quantile of the pooled certified speeds (nan when empty)."""
+        view = self.speeds_view()
+        if not view:
+            return float("nan")
+        return float(np.quantile(np.asarray(view), q))
 
     def load(self, inst: FunctionInstance) -> int:
         """Requests currently in flight on ``inst`` (0 if idle)."""
@@ -273,26 +483,25 @@ class InstancePool:
 
     @property
     def total_in_flight(self) -> int:
-        """Requests in flight across every instance of this pool."""
-        return sum(self._active.values())
+        """Requests in flight across every instance of this pool. O(1)."""
+        return self._in_flight
 
     @property
     def n_instances(self) -> int:
-        """Live instances: available + at-capacity ones serving requests."""
-        ids = {i.instance_id for i in self.available}
-        ids.update(self._active)
-        return len(ids)
+        """Live instances: available + at-capacity ones serving requests.
+        O(1) (was an O(pool) set rebuild per Telemetry read)."""
+        return len(self._live_ids)
 
     def mean_load(self) -> float:
         """Mean in-flight requests per live instance, floored at 1.0 — the
         occupancy a new request should expect; the gate uses it to judge
         *effective* speed under the load-slowdown model (ROADMAP:
         concurrency-aware gating). An idle pool reports 1.0: a request never
-        runs at less than single occupancy."""
-        n = self.n_instances
+        runs at less than single occupancy. O(1) per gate judgment."""
+        n = len(self._live_ids)
         if n == 0:
             return 1.0
-        return max(1.0, self.total_in_flight / n)
+        return max(1.0, self._in_flight / n)
 
     def __len__(self) -> int:
         return len(self.available)
@@ -508,8 +717,8 @@ class SubstrateEngine:
         return getattr(self.controller, "observations", [])
 
     @property
-    def warm_pool_speeds(self) -> list[float]:
-        return self.pool.speeds
+    def warm_pool_speeds(self) -> tuple[float, ...]:
+        return self.pool.speeds_view()
 
     # ------------------------------------------------------------------
     def submit(self, payload: Any, on_complete: Callable[[RequestResult], None] | None = None) -> None:

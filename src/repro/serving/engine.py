@@ -168,7 +168,7 @@ class MinosServingEngine(SubstrateEngine):
 
     @property
     def pool_mean_speed(self) -> float:
-        speeds = self.pool.speeds
+        speeds = self.pool.speeds_view()  # cached: no per-read rebuild
         if not speeds:
             return float("nan")
         return float(np.mean(speeds))

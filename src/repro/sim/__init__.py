@@ -21,6 +21,14 @@ from .platform import (
     SimFunctionBackend,
 )
 from .variation import VariationModel, paper_week
+from .vectorized import (
+    ArmParams,
+    VecResult,
+    arm_from_spec,
+    run_event_chain,
+    simulate_arms,
+    stack_arms,
+)
 from .workflow_dag import (
     ItemResult,
     Stage,
@@ -42,6 +50,8 @@ __all__ = [
     "FaaSPlatform", "FunctionSpec", "PlatformProfile", "RequestResult",
     "SimFunctionBackend",
     "VariationModel", "paper_week",
+    "ArmParams", "VecResult", "arm_from_spec", "run_event_chain",
+    "simulate_arms", "stack_arms",
     "ItemResult", "Stage", "WorkflowDAG", "WorkflowEngine",
     "WorkflowRunResult", "etl_chain", "etl_suite",
     "run_workflow_batch", "run_workflow_closed_loop",

@@ -33,7 +33,7 @@ class ArmSummary:
         download = np.array([r.download_ms for r in results]) if results else np.array([np.nan])
         latency = np.array([r.latency_ms for r in results]) if results else np.array([np.nan])
         retries = np.array([r.retries for r in results]) if results else np.array([0.0])
-        pool = platform.warm_pool_speeds
+        pool = platform.warm_pool_speeds  # cached immutable view — not ours to mutate
         return ArmSummary(
             name=name,
             n_successful=len(results),

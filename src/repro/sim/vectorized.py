@@ -1,0 +1,770 @@
+"""Vectorized Monte-Carlo fast path for the single-stage Minos model
+(DESIGN.md §11).
+
+Every headline number in this repo comes from Monte-Carlo sweeps over the
+pure-Python event engine, which runs seeds one at a time through a
+heapq-callback loop — wide grids (pass-fraction × σ × platform × gate) are
+unaffordable there. This module expresses the paper's *single-stage* loop —
+cold start → probe → elysium gate → requeue-with-penalty → warm reuse with
+AR(1) contention drift and diurnal speed, Fig-3 billing — as one
+``lax.scan`` over invocation steps, ``vmap``-ed over (arms × seeds), so
+thousands of parameter arms run as a single XLA program
+(``benchmarks/grid_sweep.py`` measures the speedup; the parity bounds live
+in tests/test_vectorized_parity.py).
+
+Model scope — what the fast path deliberately is:
+
+* a **closed-loop single request stream** (the event engine at
+  ``n_vus=1``): each scan step is one invocation driven to completion,
+  think time between steps. Per-instance request concurrency, the
+  load-slowdown curve, and load-aware gating therefore never engage.
+* the classic decision stack only: gate off (baseline), a fixed elysium
+  threshold, or the §IV adaptive policy (P² quantile + EMA republish,
+  the exact :class:`~repro.core.policy.AdaptiveMinosPolicy` estimator,
+  running on-device via :class:`~repro.core.estimators.P2State`).
+  Workflows, serving bodies, admission control, re-probing and the other
+  control-plane handlers stay on the event engine.
+* a fixed-capacity array pool: LIFO/FIFO/spread reuse orders are gather
+  indices over (validity-masked) slot arrays; idle-timeout and exponential
+  recycle deadlines reclaim slots exactly where the event pool would.
+
+On-device estimates reuse the JAX estimator states from
+:mod:`repro.core.estimators`: :class:`WelfordState` folds probe /
+log-probe / body / latency streams inside the scan (what
+``SubstrateEngine`` maintains for Telemetry), and :class:`P2State` + EMA
+maintain the adaptive threshold.
+
+Everything is float32; latencies are accumulated as durations (never as
+differences of large absolute times), so precision holds over long
+horizons. Deterministic per (seed, arm index).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cost import Pricing
+from repro.core.estimators import (
+    P2State,
+    WelfordState,
+    p2_init,
+    p2_update,
+    p2_value,
+    welford_init,
+    welford_merge,
+    welford_std,
+    welford_update,
+    welford_update_masked,
+)
+
+GATE_OFF = 0        # baseline arm: every instance accepted unjudged
+GATE_FIXED = 1      # pre-tested elysium threshold (paper §III-A)
+GATE_ADAPTIVE = 2   # §IV online threshold: P² quantile + EMA republish
+
+ORDER_CODES = {"lifo": 0, "fifo": 1, "spread": 2}
+
+
+class ArmParams(NamedTuple):
+    """One parameter arm — every leaf a float32 scalar (stack arms along
+    axis 0 with :func:`stack_arms` for the vmapped grid)."""
+
+    # variation model
+    sigma: Any
+    day_factor: Any
+    diurnal_amplitude: Any
+    diurnal_phase_h: Any
+    # function spec (unit-speed durations + noise scales)
+    prepare_ms: Any
+    prepare_jitter: Any
+    body_ms: Any
+    body_jitter: Any
+    benchmark_ms: Any
+    benchmark_noise: Any
+    contention_rho: Any
+    # hosting knobs
+    cold_start_ms: Any
+    cold_start_jitter: Any
+    idle_timeout_ms: Any
+    recycle_lifetime_ms: Any   # inf = never recycled
+    bill_cold_start: Any       # 0.0 / 1.0
+    requeue_overhead_ms: Any
+    requeue_penalty_ms: Any    # backend migration penalty (sim backend: 0)
+    order: Any                 # 0 lifo / 1 fifo / 2 spread (int32)
+    # gate
+    gate_mode: Any             # GATE_OFF / GATE_FIXED / GATE_ADAPTIVE (int32)
+    threshold: Any             # fixed elysium threshold (GATE_FIXED)
+    pass_fraction: Any         # adaptive quantile (GATE_ADAPTIVE)
+    max_retries: Any           # emergency-exit bound (int32)
+    warmup_reports: Any        # adaptive warm-up (int32)
+    republish_every: Any       # adaptive EMA republish cadence (int32)
+    smoothing_alpha: Any       # adaptive EMA smoothing
+    # workload + pricing
+    think_time_ms: Any
+    cost_per_invocation: Any
+    cost_per_ms: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Static (compile-time) shape of one vectorized run."""
+
+    n_steps: int
+    # One slot is exact for the single-stream model: a cold start only
+    # happens when NO pooled instance is valid (so every slot is dead and
+    # placement reuses slot 0), and a warm serve rewrites its own slot —
+    # the pool can never hold two live instances. K>1 is kept for future
+    # multi-stream extensions.
+    pool_size: int = 1
+    max_attempts: int = 6      # must exceed every arm's max_retries
+    collect_requests: bool = False
+    adaptive: bool = True      # False: no arm uses GATE_ADAPTIVE — skip P²
+    diurnal: bool = True       # False: every arm has amplitude 0 — skip cos
+
+
+class _ColdResult(NamedTuple):
+    """Outcome of the cold retry chain for one step (scalars per lane)."""
+
+    elapsed: Any      # ms burned by failed attempts (cold+probe+requeue)
+    retries: Any      # failed attempts (i32)
+    log_speed: Any    # accepted instance's hidden speed (log)
+    cold_ms: Any      # accepted attempt's cold-start duration
+    ready_ms: Any     # max(prepare, probe) — body start offset
+    analysis_ms: Any  # accepted attempt's body duration
+    place_rel: Any    # accepted instance's placement time (rel. to step start)
+    n_term: Any
+    d_term: Any
+    probe_w: WelfordState      # probe durations
+    log_probe_w: WelfordState  # log probe durations (lognormal fit)
+    p2: Any                    # P2State | None
+    ema: Any
+    ema_init: Any
+    since_publish: Any
+    n_probes: Any
+
+
+class _Pool(NamedTuple):
+    """Fixed-capacity warm pool as K tuples of per-lane scalars.
+
+    Tuple-of-scalars instead of (K,) arrays: every pool operation
+    (validity, reuse-order tournament, placement) is then an unrolled
+    chain of elementwise selects, which XLA fuses into the surrounding
+    step kernel — batched gathers/argmax/scatter over a (K,) axis each
+    cost a separate kernel pass on CPU, and the profiler showed those
+    passes dominating the sweep wall-clock."""
+
+    log_speed: tuple   # log-space: AR(1) drift needs no log/exp
+    last_used: tuple
+    recycle: tuple     # absolute deadline (inf = never)
+    alive: tuple
+
+
+class VecState(NamedTuple):
+    t: Any                       # absolute sim time (ms)
+    pool: _Pool
+    probe_w: WelfordState        # cold probe durations
+    log_probe_w: WelfordState    # log of the same (lognormal fit)
+    body_w: WelfordState         # observed body durations
+    latency_w: WelfordState      # request latencies
+    reuse_w: WelfordState        # 1.0 warm-served / 0.0 cold-served
+    p2: Any                      # P2State | None (pruned when not adaptive)
+    ema: Any
+    ema_init: Any
+    since_publish: Any
+    n_probes: Any
+    n_started: Any
+    n_terminated: Any
+    nb_term: Any                 # Fig-3 billing terms, six scalars
+    nb_pass: Any
+    nb_reuse: Any
+    db_term: Any
+    db_pass: Any
+    db_reuse: Any
+
+
+def _diurnal(t_ms, amplitude, phase_h):
+    hour = (t_ms / 3.6e6) % 24.0
+    return 1.0 + amplitude * jnp.cos(2.0 * jnp.pi * (hour - phase_h) / 24.0)
+
+
+def _wsel(mask, new, old):
+    return jax.tree_util.tree_map(
+        lambda a, b: jnp.where(mask, a, b), new, old)
+
+
+def _attempt_values(params: ArmParams, consts, su, J, day_mean, log_day, i):
+    """Attempt ``i``'s sampled quantities from the pre-scaled draw row.
+
+    Draw layout per attempt (base b=3+5i): z0 instance speed, z1 cold
+    start, z2 prepare, z3 probe observation noise, z4 body. ``J=exp(su)``
+    was computed in one vectorized exp, so everything here is
+    multiply/add: speed = exp(σz0)·day_mean, probe = B·exp(bn·z3)/speed,
+    body = body_ms·exp(bj·z4)/speed."""
+    b = 3 + 5 * i
+    cold = params.cold_start_ms * J[b + 1]
+    download = params.prepare_ms * J[b + 2]
+    inv_speed_rel = J[b + 3] / J[b]
+    bench = (params.benchmark_ms / day_mean) * inv_speed_rel
+    log_bench = consts["log_bench_ms"] + su[b + 3] - su[b] - log_day
+    analysis = (params.body_ms / day_mean) * (J[b + 4] / J[b])
+    log_speed = su[b] + log_day
+    return cold, download, bench, log_bench, analysis, log_speed
+
+
+def _cold_chain_fixed(params, cfg, consts, su, J, day_mean, log_day,
+                      served_cold, state) -> _ColdResult:
+    """The retry chain for attempt-invariant gates (off / fixed
+    threshold): an unrolled chain of scalar selects — no P², no
+    sequential estimator feedback — the grid sweep's hot path."""
+    f32 = jnp.float32
+    z = jnp.zeros((), f32)
+    pending = served_cold
+    thr = jnp.where(params.gate_mode == GATE_FIXED, params.threshold, jnp.inf)
+    elapsed = z
+    retries = jnp.zeros((), jnp.int32)
+    n_term = z
+    d_term = z
+    cb = z
+    s_b = z
+    s_b2 = z
+    s_lb = z
+    s_lb2 = z
+    acc_cold = z
+    acc_ready = z
+    acc_body = z
+    acc_logsp = z
+    acc_place = z
+    for i in range(cfg.max_attempts):
+        cold, download, bench, log_bench, analysis, log_speed = \
+            _attempt_values(params, consts, su, J, day_mean, log_day, i)
+        probed = (params.gate_mode > 0) & (i < params.max_retries)
+        passes = (~probed) | (bench <= thr)
+        feed = jnp.asarray(pending & probed, f32)
+        accept = pending & passes
+        fail = jnp.asarray(pending & ~passes, f32)
+        # batched Welford moments of this step's probe stream (merged
+        # below via Chan — exact up to FP association order)
+        cb = cb + feed
+        s_b = s_b + feed * bench
+        s_b2 = s_b2 + feed * bench * bench
+        s_lb = s_lb + feed * log_bench
+        s_lb2 = s_lb2 + feed * log_bench * log_bench
+        ready = jnp.where(probed, jnp.maximum(download, bench), download)
+        acc_cold = jnp.where(accept, cold, acc_cold)
+        acc_ready = jnp.where(accept, ready, acc_ready)
+        acc_body = jnp.where(accept, analysis, acc_body)
+        acc_logsp = jnp.where(accept, log_speed, acc_logsp)
+        acc_place = jnp.where(accept, elapsed, acc_place)
+        n_term = n_term + fail
+        d_term = d_term + fail * (params.bill_cold_start * cold + bench)
+        elapsed = elapsed + fail * (cold + bench + params.requeue_overhead_ms
+                                    + params.requeue_penalty_ms)
+        retries = retries + jnp.asarray(pending & ~passes, jnp.int32)
+        pending = pending & ~passes
+
+    def merged(w: WelfordState, s, s2) -> WelfordState:
+        mean_b = s / jnp.maximum(cb, 1.0)
+        m2_b = jnp.maximum(s2 - cb * mean_b * mean_b, 0.0)
+        return welford_merge(w, WelfordState(count=cb, mean=mean_b, m2=m2_b))
+
+    return _ColdResult(
+        elapsed=elapsed, retries=retries, log_speed=acc_logsp,
+        cold_ms=acc_cold, ready_ms=acc_ready, analysis_ms=acc_body,
+        place_rel=acc_place, n_term=n_term, d_term=d_term,
+        probe_w=merged(state.probe_w, s_b, s_b2),
+        log_probe_w=merged(state.log_probe_w, s_lb, s_lb2),
+        p2=state.p2, ema=state.ema, ema_init=state.ema_init,
+        since_publish=state.since_publish,
+        n_probes=state.n_probes + cb.astype(jnp.int32),
+    )
+
+
+def _cold_chain_adaptive(params, cfg, consts, su, J, day_mean, log_day,
+                         served_cold, state) -> _ColdResult:
+    """The retry chain when the §IV adaptive threshold is live: every
+    probed attempt reports to the on-device P² quantile + EMA republish
+    (the exact :class:`~repro.core.policy.AdaptiveMinosPolicy` estimator)
+    BEFORE being judged, so attempts are sequential within the step."""
+    f32 = jnp.float32
+    z = jnp.zeros((), f32)
+    c = _ColdResult(
+        elapsed=z, retries=jnp.zeros((), jnp.int32), log_speed=z,
+        cold_ms=z, ready_ms=z, analysis_ms=z, place_rel=z,
+        n_term=z, d_term=z,
+        probe_w=state.probe_w, log_probe_w=state.log_probe_w,
+        p2=state.p2, ema=state.ema, ema_init=state.ema_init,
+        since_publish=state.since_publish, n_probes=state.n_probes,
+    )
+    pending = served_cold
+    for i in range(cfg.max_attempts):
+        cold, download, bench, log_bench, analysis, log_speed = \
+            _attempt_values(params, consts, su, J, day_mean, log_day, i)
+        probed = (params.gate_mode > 0) & (i < params.max_retries)
+        feed = pending & probed
+        probe_w = welford_update_masked(c.probe_w, bench, feed)
+        log_probe_w = welford_update_masked(c.log_probe_w, log_bench, feed)
+        n_probes = c.n_probes + jnp.asarray(feed, jnp.int32)
+        p2 = _wsel(feed, p2_update(c.p2, bench), c.p2)
+        since = c.since_publish + jnp.asarray(feed, jnp.int32)
+        publish = feed & (since >= params.republish_every)
+        p2v = p2_value(p2)
+        ema = jnp.where(
+            publish,
+            jnp.where(c.ema_init,
+                      params.smoothing_alpha * p2v
+                      + (1.0 - params.smoothing_alpha) * c.ema,
+                      p2v),
+            c.ema)
+        ema_init = c.ema_init | publish
+        since = jnp.where(publish, 0, since)
+        thr_adaptive = jnp.where(
+            n_probes >= params.warmup_reports,
+            jnp.where(ema_init, ema, p2v), jnp.inf)
+        thr = jnp.where(params.gate_mode == GATE_FIXED, params.threshold,
+                        jnp.where(params.gate_mode == GATE_ADAPTIVE,
+                                  thr_adaptive, jnp.inf))
+        passes = (~probed) | (bench <= thr)
+        accept = pending & passes
+        fail = pending & ~passes
+        failf = jnp.asarray(fail, f32)
+        ready = jnp.where(probed, jnp.maximum(download, bench), download)
+        c = _ColdResult(
+            elapsed=c.elapsed + failf * (cold + bench
+                                         + params.requeue_overhead_ms
+                                         + params.requeue_penalty_ms),
+            retries=c.retries + jnp.asarray(fail, jnp.int32),
+            log_speed=jnp.where(accept, log_speed, c.log_speed),
+            cold_ms=jnp.where(accept, cold, c.cold_ms),
+            ready_ms=jnp.where(accept, ready, c.ready_ms),
+            analysis_ms=jnp.where(accept, analysis, c.analysis_ms),
+            place_rel=jnp.where(accept, c.elapsed, c.place_rel),
+            n_term=c.n_term + failf,
+            d_term=c.d_term + failf * (params.bill_cold_start * cold + bench),
+            probe_w=probe_w, log_probe_w=log_probe_w,
+            p2=p2, ema=ema, ema_init=ema_init, since_publish=since,
+            n_probes=n_probes,
+        )
+        pending = pending & ~passes
+    return c
+
+
+def _step(params: ArmParams, cfg: SimConfig, consts: dict,
+          state: VecState, draws):
+    f32 = jnp.float32
+    K = cfg.pool_size
+    u, ex = draws
+    # one vectorized exp covers every lognormal factor of the step
+    # (scale<=0 gives exactly exp(0)=1, preserving sample_jitter's
+    # disabled-noise contract)
+    su = u * consts["scale_vec"]
+    J = jnp.exp(su)
+    t0 = state.t
+    if cfg.diurnal:
+        dv = _diurnal(t0, params.diurnal_amplitude, params.diurnal_phase_h)
+        day_mean = params.day_factor * dv
+        log_day = consts["log_df"] + jnp.log(dv)
+    else:
+        day_mean = params.day_factor
+        log_day = consts["log_df"]
+
+    # ---- warm take: unrolled validity + reuse-order tournament ---------
+    pool = state.pool
+    valid = [pool.alive[k]
+             & ((t0 - pool.last_used[k]) <= params.idle_timeout_ms)
+             & (t0 < pool.recycle[k])
+             for k in range(K)]
+    any_warm = valid[0]
+    for k in range(1, K):
+        any_warm = any_warm | valid[k]
+    served_cold = ~any_warm
+    # lifo takes the most recently used valid slot, fifo/spread the
+    # oldest (single-stream: pooled loads are all 0, so spread's
+    # least-loaded order degenerates to fifo) — maximize a signed score
+    sign = jnp.where(params.order == 0, 1.0, -1.0)
+    ninf = jnp.asarray(-jnp.inf, f32)
+    score = [jnp.where(valid[k], sign * pool.last_used[k], ninf)
+             for k in range(K)]
+    oh = [None] * K
+    oh[0] = score[0] >= ninf  # True; same dtype/shape as the other flags
+    best = score[0]
+    for k in range(1, K):
+        take = score[k] > best
+        best = jnp.where(take, score[k], best)
+        for j in range(k):
+            oh[j] = oh[j] & ~take
+        oh[k] = take
+    log_i = pool.log_speed[0]
+    rc_i = pool.recycle[0]
+    for k in range(1, K):
+        log_i = jnp.where(oh[k], pool.log_speed[k], log_i)
+        rc_i = jnp.where(oh[k], pool.recycle[k], rc_i)
+
+    # ---- warm path: AR(1) drift (pure log-space arithmetic) ------------
+    rho = params.contention_rho
+    log_drifted = jnp.where(
+        rho >= 1.0, log_i,
+        log_day + rho * (log_i - log_day)
+        + jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0)) * su[0])
+    download_w = params.prepare_ms * J[1]
+    analysis_w = params.body_ms * J[2] * jnp.exp(-log_drifted)
+    dur_w = download_w + analysis_w
+
+    # ---- cold path -----------------------------------------------------
+    chain = _cold_chain_adaptive if cfg.adaptive else _cold_chain_fixed
+    c = chain(params, cfg, consts, su, J, day_mean, log_day,
+              served_cold, state)
+
+    # ---- merge warm/cold outcomes --------------------------------------
+    analysis = jnp.where(served_cold, c.analysis_ms, analysis_w)
+    latency = jnp.where(
+        served_cold, c.elapsed + c.cold_ms + c.ready_ms + c.analysis_ms, dur_w)
+    billed_final = jnp.where(
+        served_cold,
+        params.bill_cold_start * c.cold_ms + c.ready_ms + c.analysis_ms,
+        dur_w)
+    t_end = t0 + latency
+    log_speed_served = jnp.where(served_cold, c.log_speed, log_drifted)
+
+    # ---- pool update (unrolled one-hot blend) --------------------------
+    # A cold start implies every slot failed validity (all dead), so cold
+    # placement always lands in slot 0; a warm serve rewrites its own slot.
+    # inf lifetime (no platform recycling) must stay inf even when the
+    # exponential draw is exactly 0.0 (0·inf = NaN would kill the slot)
+    recycle_new = (t0 + c.place_rel) + jnp.where(
+        jnp.isinf(params.recycle_lifetime_ms), jnp.inf,
+        ex * params.recycle_lifetime_ms)
+    recycle_upd = jnp.where(served_cold, recycle_new, rc_i)
+    upd = [served_cold | oh[0]] + [~served_cold & oh[k] for k in range(1, K)]
+    new_pool = _Pool(
+        log_speed=tuple(
+            jnp.where(upd[k], log_speed_served, pool.log_speed[k])
+            for k in range(K)),
+        last_used=tuple(
+            jnp.where(upd[k], t_end, pool.last_used[k]) for k in range(K)),
+        recycle=tuple(
+            jnp.where(upd[k], recycle_upd, pool.recycle[k])
+            for k in range(K)),
+        alive=tuple(valid[k] | upd[k] for k in range(K)),
+    )
+
+    # ---- Fig-3 billing + telemetry estimators --------------------------
+    coldf = jnp.asarray(served_cold, f32)
+    warmf = jnp.asarray(any_warm, f32)
+    new_state = VecState(
+        t=t_end + params.think_time_ms,
+        pool=new_pool,
+        probe_w=c.probe_w, log_probe_w=c.log_probe_w,
+        body_w=welford_update(state.body_w, analysis),
+        latency_w=welford_update(state.latency_w, latency),
+        reuse_w=welford_update(state.reuse_w, warmf),
+        p2=c.p2, ema=c.ema, ema_init=c.ema_init,
+        since_publish=c.since_publish, n_probes=c.n_probes,
+        n_started=state.n_started + coldf * (
+            jnp.asarray(c.retries, f32) + 1.0),
+        n_terminated=state.n_terminated + c.n_term,
+        nb_term=state.nb_term + c.n_term,
+        nb_pass=state.nb_pass + coldf,
+        nb_reuse=state.nb_reuse + warmf,
+        db_term=state.db_term + c.d_term,
+        db_pass=state.db_pass + coldf * billed_final,
+        db_reuse=state.db_reuse + warmf * billed_final,
+    )
+    if cfg.collect_requests:
+        out = {
+            "latency_ms": latency,
+            "analysis_ms": analysis,
+            "billed_ms": coldf * c.d_term + billed_final,
+            "served_by_cold": served_cold,
+            "retries": jnp.where(served_cold, c.retries, 0),
+            "instance_speed": jnp.exp(log_speed_served),
+        }
+    else:
+        out = None
+    return new_state, out
+
+
+def _simulate_chain(params: ArmParams, key, cfg: SimConfig):
+    f32 = jnp.float32
+    K = cfg.pool_size
+    ma = cfg.max_attempts
+    k_normal, k_exp = jax.random.split(key)
+    u_all = jax.random.normal(k_normal, (cfg.n_steps, 3 + 5 * ma), f32)
+    ex_all = jax.random.exponential(k_exp, (cfg.n_steps,), f32)
+    # Draw layout: u[0] warm drift, u[1] warm prepare, u[2] warm body;
+    # attempt i at base 3+5i: z0 speed, z1 cold, z2 prepare, z3 probe
+    # noise, z4 body — scale_vec turns the whole row into log-factors.
+    pj, bj = params.prepare_jitter, params.body_jitter
+    cj, bn, sg = params.cold_start_jitter, params.benchmark_noise, params.sigma
+    consts = {
+        "scale_vec": jnp.stack([sg, pj, bj] + [sg, cj, pj, bn, bj] * ma),
+        "log_df": jnp.log(params.day_factor),
+        "log_bench_ms": jnp.log(params.benchmark_ms),
+    }
+    z = jnp.zeros((), f32)
+    state = VecState(
+        t=z,
+        pool=_Pool(
+            log_speed=(z,) * K,
+            last_used=(z,) * K,
+            recycle=(jnp.asarray(jnp.inf, f32),) * K,
+            alive=(jnp.zeros((), bool),) * K,
+        ),
+        probe_w=welford_init(), log_probe_w=welford_init(),
+        body_w=welford_init(), latency_w=welford_init(),
+        reuse_w=welford_init(),
+        # None prunes the adaptive estimator from the scan carry entirely
+        # when no arm needs it (pytree None = empty subtree)
+        p2=p2_init(params.pass_fraction) if cfg.adaptive else None,
+        ema=z if cfg.adaptive else None,
+        ema_init=jnp.zeros((), bool) if cfg.adaptive else None,
+        since_publish=jnp.zeros((), jnp.int32) if cfg.adaptive else None,
+        n_probes=jnp.zeros((), jnp.int32),
+        n_started=z, n_terminated=z,
+        nb_term=z, nb_pass=z, nb_reuse=z,
+        db_term=z, db_pass=z, db_reuse=z,
+    )
+    final, requests = jax.lax.scan(
+        lambda s, x: _step(params, cfg, consts, s, x), state,
+        (u_all, ex_all), unroll=1 if cfg.adaptive else 4)
+    cost = params.cost_per_ms * (final.db_term + final.db_pass
+                                 + final.db_reuse) \
+        + params.cost_per_invocation * (final.nb_term + final.nb_pass
+                                        + final.nb_reuse)
+    summary = {
+        "n_requests": jnp.asarray(cfg.n_steps, f32),
+        "n_started": final.n_started,
+        "n_terminated": final.n_terminated,
+        "n_probes": jnp.asarray(final.n_probes, f32),
+        "reuse_rate": final.reuse_w.mean,
+        "mean_analysis_ms": final.body_w.mean,
+        "std_analysis_ms": welford_std(final.body_w),
+        "mean_latency_ms": final.latency_w.mean,
+        "probe_mean_ms": final.probe_w.mean,
+        "probe_log_mean": final.log_probe_w.mean,
+        "probe_log_std": welford_std(final.log_probe_w),
+        "pass_rate": 1.0 - final.n_terminated
+        / jnp.maximum(jnp.asarray(final.n_probes, f32), 1.0),
+        "bill_n": jnp.stack([final.nb_term, final.nb_pass, final.nb_reuse]),
+        "bill_d": jnp.stack([final.db_term, final.db_pass, final.db_reuse]),
+        "cost": cost,
+        "horizon_ms": final.t,
+    }
+    return summary, requests
+# ---------------------------------------------------------------------------
+# Host entry points
+# ---------------------------------------------------------------------------
+
+#: compile/call accounting, so sweeps and CI can assert the jit cache hits
+#: on the second arm-batch (same shapes → no recompile).
+jit_stats = {"compiles": 0, "calls": 0}
+
+_JIT_CACHE: dict = {}
+
+
+def _get_sim_fn(cfg: SimConfig, batch_shape: tuple):
+    cache_key = (cfg, batch_shape)
+    if cache_key not in _JIT_CACHE:
+        jit_stats["compiles"] += 1
+
+        def run(params, seeds, arm_ids):
+            def lane(p, seed, arm):
+                key = jax.random.fold_in(jax.random.PRNGKey(seed), arm)
+                return _simulate_chain(p, key, cfg)
+
+            per_seed = jax.vmap(lane, in_axes=(None, 0, None))
+            return jax.vmap(per_seed, in_axes=(0, None, 0))(
+                params, seeds, arm_ids)
+
+        _JIT_CACHE[cache_key] = jax.jit(run)
+    return _JIT_CACHE[cache_key]
+
+
+@dataclasses.dataclass
+class VecResult:
+    """Grid results as numpy arrays: summary leaves have shape
+    (n_arms, n_seeds); per-request leaves (n_arms, n_seeds, n_steps)."""
+
+    summary: dict
+    requests: Optional[dict]
+    n_arms: int
+    n_seeds: int
+    n_steps: int
+
+    def mean_over_seeds(self, name: str) -> np.ndarray:
+        return np.asarray(self.summary[name]).mean(axis=1)
+
+
+def simulate_arms(
+    arms: ArmParams,
+    *,
+    seeds,
+    n_steps: int,
+    pool_size: int = 1,
+    max_attempts: Optional[int] = None,
+    collect_requests: bool = False,
+) -> VecResult:
+    """Run every arm × seed lane through the jitted scan; returns numpy."""
+    leaves = [np.atleast_1d(np.asarray(x)) for x in arms]
+    n_arms = max(leaf.shape[0] for leaf in leaves)
+    stacked = ArmParams(*[
+        jnp.asarray(np.broadcast_to(leaf, (n_arms,)),
+                    jnp.int32 if leaf.dtype.kind in "iu" else jnp.float32)
+        for leaf in leaves])
+    seeds = np.atleast_1d(np.asarray(seeds, np.uint32))
+    max_r = int(np.max(np.asarray(arms.max_retries)))
+    if max_attempts is None:
+        max_attempts = max_r + 1
+    if max_attempts < max_r + 1:
+        raise ValueError(
+            f"max_attempts={max_attempts} cannot cover max_retries={max_r}")
+    adaptive = bool(np.any(np.asarray(arms.gate_mode) == GATE_ADAPTIVE))
+    diurnal = bool(np.any(np.asarray(arms.diurnal_amplitude) != 0.0))
+    cfg = SimConfig(n_steps=int(n_steps), pool_size=int(pool_size),
+                    max_attempts=int(max_attempts),
+                    collect_requests=bool(collect_requests),
+                    adaptive=adaptive, diurnal=diurnal)
+    fn = _get_sim_fn(cfg, (n_arms, len(seeds)))
+    jit_stats["calls"] += 1
+    summary, requests = fn(stacked, jnp.asarray(seeds),
+                           jnp.arange(n_arms, dtype=jnp.uint32))
+    summary = {k: np.asarray(v) for k, v in summary.items()}
+    if requests is not None:
+        # vmap axes lead, scan's step axis last → (arms, seeds, steps)
+        requests = {k: np.asarray(v) for k, v in requests.items()}
+    return VecResult(summary=summary, requests=requests, n_arms=n_arms,
+                     n_seeds=len(seeds), n_steps=int(n_steps))
+
+
+# ---------------------------------------------------------------------------
+# Arm builders (mirror FaaSPlatform's spec/profile knob resolution)
+# ---------------------------------------------------------------------------
+
+
+def arm_from_spec(
+    spec,
+    variation,
+    *,
+    profile=None,
+    pricing: Optional[Pricing] = None,
+    gate: str = "fixed",
+    threshold: float = math.inf,
+    pass_fraction: float = 0.4,
+    max_retries: int = 5,
+    warmup_reports: int = 5,
+    republish_every: int = 4,
+    smoothing_alpha: float = 0.7,
+    think_time_ms: float = 1000.0,
+) -> ArmParams:
+    """Build one arm from the event engine's own config objects
+    (:class:`~repro.sim.platform.FunctionSpec`,
+    :class:`~repro.sim.platform.PlatformProfile`,
+    :class:`~repro.sim.variation.VariationModel`) so a parity test or grid
+    sweep describes *one* scenario for both engines. ``gate`` is "off"
+    (baseline arm), "fixed" (pre-tested ``threshold``) or "adaptive"
+    (:class:`~repro.core.policy.AdaptiveMinosPolicy` defaults)."""
+    gate_mode = {"off": GATE_OFF, "fixed": GATE_FIXED,
+                 "adaptive": GATE_ADAPTIVE}[gate]
+    if gate_mode == GATE_FIXED and not math.isfinite(threshold):
+        raise ValueError("gate='fixed' needs a finite threshold")
+    if profile is not None:
+        knobs = profile.knobs()
+        if pricing is None:
+            pricing = profile.pricing
+    else:
+        from repro.core.substrate import SubstrateKnobs
+        knobs = SubstrateKnobs(
+            cold_start_ms=spec.cold_start_ms,
+            cold_start_jitter=spec.cold_start_jitter,
+            idle_timeout_ms=spec.idle_timeout_ms,
+            recycle_lifetime_ms=spec.recycle_lifetime_ms,
+            bill_cold_start=spec.bill_cold_start,
+            requeue_overhead_ms=spec.requeue_overhead_ms,
+        )
+    if pricing is None:
+        raise ValueError("pricing is required when no profile is given")
+    return ArmParams(
+        sigma=float(variation.sigma),
+        day_factor=float(variation.day_factor),
+        diurnal_amplitude=float(variation.diurnal_amplitude),
+        diurnal_phase_h=float(variation.diurnal_phase_h),
+        prepare_ms=float(spec.prepare_ms),
+        prepare_jitter=float(spec.prepare_jitter),
+        body_ms=float(spec.body_ms),
+        body_jitter=float(spec.body_jitter),
+        benchmark_ms=float(spec.benchmark_ms),
+        benchmark_noise=float(spec.benchmark_noise),
+        contention_rho=float(spec.contention_rho),
+        cold_start_ms=float(knobs.cold_start_ms),
+        cold_start_jitter=float(knobs.cold_start_jitter),
+        idle_timeout_ms=float(knobs.idle_timeout_ms),
+        recycle_lifetime_ms=(
+            math.inf if knobs.recycle_lifetime_ms is None
+            else float(knobs.recycle_lifetime_ms)),
+        bill_cold_start=1.0 if knobs.bill_cold_start else 0.0,
+        requeue_overhead_ms=float(knobs.requeue_overhead_ms),
+        requeue_penalty_ms=0.0,
+        order=int(ORDER_CODES[knobs.warm_pool_order]),
+        gate_mode=int(gate_mode),
+        threshold=float(threshold),
+        pass_fraction=float(pass_fraction),
+        max_retries=int(max_retries),
+        warmup_reports=int(warmup_reports),
+        republish_every=int(republish_every),
+        smoothing_alpha=float(smoothing_alpha),
+        think_time_ms=float(think_time_ms),
+        cost_per_invocation=float(pricing.cost_per_invocation),
+        cost_per_ms=float(pricing.cost_per_ms),
+    )
+
+
+def stack_arms(arms: list) -> ArmParams:
+    """Stack a list of scalar :class:`ArmParams` into one batched pytree."""
+    if not arms:
+        raise ValueError("need at least one arm")
+    return ArmParams(*[
+        np.asarray([getattr(a, f) for a in arms]) for f in ArmParams._fields])
+
+
+# ---------------------------------------------------------------------------
+# Event-engine reference chain (the exact scenario the fast path models)
+# ---------------------------------------------------------------------------
+
+
+def run_event_chain(platform, n_requests: int,
+                    think_time_ms: float = 1000.0) -> list:
+    """Drive a :class:`~repro.sim.platform.FaaSPlatform` with ONE
+    closed-loop virtual user for exactly ``n_requests`` completions — the
+    event-engine scenario :func:`simulate_arms` vectorizes. Used by the
+    parity tests and as grid_sweep's per-arm timing reference."""
+    results: list = []
+
+    def on_complete(res) -> None:
+        results.append(res)
+        if len(results) < n_requests:
+            platform.loop.after(
+                think_time_ms, lambda: platform.submit(None, on_complete))
+
+    platform.submit(None, on_complete)
+    platform.loop.run_all()
+    assert len(results) == n_requests
+    return results
+
+
+__all__ = [
+    "ArmParams",
+    "GATE_ADAPTIVE",
+    "GATE_FIXED",
+    "GATE_OFF",
+    "ORDER_CODES",
+    "SimConfig",
+    "VecResult",
+    "arm_from_spec",
+    "jit_stats",
+    "run_event_chain",
+    "simulate_arms",
+    "stack_arms",
+]

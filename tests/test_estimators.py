@@ -116,3 +116,30 @@ def test_p2_rejects_bad_quantile():
         P2Quantile(0.0)
     with pytest.raises(ValueError):
         P2Quantile(1.0)
+
+
+def test_welford_update_masked_equals_filtered_updates():
+    """welford_update_masked(state, x, mask) must equal applying the plain
+    update to exactly the mask-selected observations (identity when the
+    mask is false) — the contract the vectorized simulator's fused probe
+    accounting relies on."""
+    from repro.core.estimators import welford_update_masked
+
+    rng = np.random.RandomState(3)
+    xs = rng.lognormal(0.0, 0.5, 200).astype(np.float32)
+    mask = rng.rand(200) < 0.4
+    st_m = welford_init()
+    st_ref = welford_init()
+    for x, m in zip(xs, mask):
+        st_m = welford_update_masked(st_m, jnp.float32(x), jnp.asarray(bool(m)))
+        if m:
+            st_ref = welford_update(st_ref, jnp.float32(x))
+    assert int(st_m.count) == int(mask.sum()) == int(st_ref.count)
+    np.testing.assert_allclose(float(st_m.mean), float(st_ref.mean), rtol=1e-6)
+    np.testing.assert_allclose(float(welford_std(st_m)),
+                               float(welford_std(st_ref)), rtol=1e-5)
+    # all-false mask: exact identity, including the empty state
+    st0 = welford_update_masked(welford_init(), jnp.float32(5.0),
+                                jnp.asarray(False))
+    assert float(st0.count) == 0.0 and float(st0.mean) == 0.0 \
+        and float(st0.m2) == 0.0

@@ -57,7 +57,7 @@ def test_release_never_readmits_idle_expired_instance():
     pool = InstancePool()
     inst = _warm(idle=50.0)
     inst.last_used_ms = 0.0
-    pool._active[inst.instance_id] = 1
+    pool.add_warm(inst, in_flight=1)
     pool.release(inst, now=1000.0)  # idle deadline long gone
     assert pool.available == []
     assert inst.state is InstanceState.EXPIRED
@@ -68,7 +68,7 @@ def test_release_without_now_keeps_standalone_behavior():
     pool = InstancePool()
     inst = _warm(idle=50.0)
     inst.last_used_ms = 0.0
-    pool._active[inst.instance_id] = 1
+    pool.add_warm(inst, in_flight=1)
     pool.release(inst)
     assert pool.available == [inst]
 
@@ -79,8 +79,8 @@ def test_release_on_full_pool_never_kills_inflight_instance():
     under its remaining in-flight work (latent until load became real)."""
     pool = InstancePool(concurrency=2, max_size=1)
     busy, other = _warm(), _warm()
-    pool.available.append(other)
-    pool._active[busy.instance_id] = 2
+    pool.add_warm(other)
+    pool.add_warm(busy, in_flight=2)
     pool.release(busy, now=0.0)          # 1 request still in flight
     assert busy.state is InstanceState.WARM
     assert pool.available == [other]     # stays out of the full list ...
@@ -116,9 +116,7 @@ def test_spread_order_picks_least_loaded():
     pool = InstancePool(order="spread", concurrency=4)
     a, b, c = _warm(speed=1.0), _warm(speed=2.0), _warm(speed=3.0)
     for inst, load in ((a, 2), (b, 0), (c, 1)):
-        pool.available.append(inst)
-        if load:
-            pool._active[inst.instance_id] = load
+        pool.add_warm(inst, in_flight=load)
     assert pool.take(0.0) is b      # load 0 beats 1 and 2
     assert pool.take(0.0) is b      # b now at 1, ties with c: first wins
     assert pool.take(0.0) is c      # b at 2 ties a; c at 1 is least

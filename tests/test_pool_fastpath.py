@@ -1,0 +1,218 @@
+"""InstancePool hot-path aggregates (PR 5).
+
+The pool keeps incremental aggregates — ``total_in_flight`` /
+``n_instances`` / ``mean_load`` counters, a min-load heap for
+``order="spread"``, the ``_next_deadline`` take fast path, and the cached
+``speeds_view`` — that must stay *equal* to the O(n) scans they replaced.
+These tests drive random (but seeded) engine-shaped operation sequences
+through a pool and compare every aggregate against the direct recompute
+after each operation; hypothesis widens the sequence space when the dev
+extra is installed.
+"""
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # pragma: no cover - dev extra absent
+    from _hypothesis_stub import hypothesis, st
+
+from repro.core.lifecycle import FunctionInstance, InstanceState
+from repro.core.substrate import InstancePool
+
+
+def _assert_aggregates_match(pool: InstancePool) -> None:
+    """Every incremental aggregate equals its O(n) reference scan."""
+    ref_in_flight = sum(pool._active.values())
+    ids = {i.instance_id for i in pool.available}
+    ids.update(pool._active)
+    ref_speeds = [i.speed_factor for i in pool.available
+                  if i.state is InstanceState.WARM]
+    assert pool.total_in_flight == ref_in_flight
+    assert pool.n_instances == len(ids)
+    assert pool.speeds == ref_speeds
+    assert tuple(ref_speeds) == pool.speeds_view()
+    ref_mean = 1.0 if not ids else max(1.0, ref_in_flight / len(ids))
+    assert pool.mean_load() == pytest.approx(ref_mean)
+    # every pooled instance is WARM and registered
+    for inst in pool.available:
+        assert inst.state is InstanceState.WARM
+        assert inst.instance_id in pool._avail_seq
+
+
+def _spread_reference(pool: InstancePool):
+    """The original O(n) argmin: least loaded, first list position wins."""
+    if not pool.available:
+        return None
+    idx = min(range(len(pool.available)),
+              key=lambda i: pool._active.get(
+                  pool.available[i].instance_id, 0))
+    return pool.available[idx]
+
+
+def _drive(pool: InstancePool, ops, *, check_spread: bool = False) -> None:
+    """Replay an engine-shaped op sequence: dispatch (warm take | cold
+    start | gate termination), release, retire-at-load<=1, time advance."""
+    now = 0.0
+    counts: dict[int, int] = {}           # instance_id -> our in-flight view
+    by_id: dict[int, FunctionInstance] = {}
+    for code, x in ops:
+        if code == 0:  # dispatch
+            if check_spread and pool.order == "spread":
+                pool._sweep(now)  # pin membership, then compare choices
+                expect = _spread_reference(pool)
+                got = pool.take(now)
+                assert got is expect
+            else:
+                got = pool.take(now)
+            if got is None:
+                inst = FunctionInstance(
+                    speed_factor=0.5 + x, created_at_ms=now,
+                    idle_timeout_ms=60.0)
+                pool.admit_cold(inst, now)
+                if x < 0.25:  # gate-terminated cold start
+                    inst.state = InstanceState.TERMINATED
+                    pool.drop(inst)
+                else:
+                    inst.accept_without_benchmark()
+                    counts[inst.instance_id] = 1
+                    by_id[inst.instance_id] = inst
+            else:
+                counts[got.instance_id] = counts.get(got.instance_id, 0) + 1
+                by_id[got.instance_id] = got
+        elif code == 1 and counts:  # one request completes
+            iid = sorted(counts)[int(x * len(counts)) % len(counts)]
+            inst = by_id[iid]
+            if inst.state is InstanceState.WARM:
+                inst.serve(now)
+            pool.release(inst, now)
+            counts[iid] -= 1
+            if counts[iid] <= 0:
+                del counts[iid]
+        elif code == 2:  # controller retirement (only ever at load <= 1)
+            cands = [i for i in pool.available if pool.load(i) <= 1]
+            if cands:
+                inst = cands[int(x * len(cands)) % len(cands)]
+                had = pool.load(inst)
+                inst.state = InstanceState.EXPIRED
+                pool.retire(inst)
+                counts.pop(inst.instance_id, None)
+                assert pool.load(inst) == 0 and had <= 1
+        else:  # time passes (idle/recycle deadlines approach)
+            now += x * 45.0
+        _assert_aggregates_match(pool)
+
+
+def _random_ops(seed: int, n: int = 300):
+    rng = np.random.RandomState(seed)
+    return [(int(rng.randint(4)), float(rng.uniform())) for _ in range(n)]
+
+
+@pytest.mark.parametrize("order", ["lifo", "fifo", "spread"])
+@pytest.mark.parametrize("concurrency", [1, 3])
+def test_aggregates_equal_reference_scans_seeded(order, concurrency):
+    for seed in range(4):
+        rng = np.random.RandomState(1000 + seed)
+        pool = InstancePool(order=order, concurrency=concurrency,
+                            recycle_lifetime_ms=200.0, rng=rng)
+        _drive(pool, _random_ops(seed), check_spread=True)
+
+
+@hypothesis.given(
+    ops=st.lists(st.tuples(st.integers(min_value=0, max_value=3),
+                           st.floats(min_value=0.0, max_value=1.0)),
+                 max_size=120),
+    order=st.sampled_from(["lifo", "fifo", "spread"]),
+    concurrency=st.integers(min_value=1, max_value=4),
+)
+@hypothesis.settings(deadline=None, max_examples=60)
+def test_aggregates_equal_reference_scans_property(ops, order, concurrency):
+    pool = InstancePool(order=order, concurrency=concurrency,
+                        recycle_lifetime_ms=150.0,
+                        rng=np.random.RandomState(0))
+    _drive(pool, ops, check_spread=True)
+
+
+def test_take_skips_sweep_until_a_deadline_passes():
+    """The take fast path: while no pooled idle instance can have reached
+    its idle/recycle deadline, take must not rebuild ``available``."""
+    pool = InstancePool(order="fifo", concurrency=2)
+    sweeps = 0
+    orig = pool._sweep
+
+    def counting_sweep(now):
+        nonlocal sweeps
+        sweeps += 1
+        orig(now)
+
+    pool._sweep = counting_sweep
+    for s in (1.0, 2.0):
+        inst = FunctionInstance(speed_factor=s, created_at_ms=0.0,
+                                idle_timeout_ms=1000.0)
+        inst.accept_without_benchmark()
+        pool.add_warm(inst)
+    for t in (10.0, 20.0, 30.0):  # far below the idle deadline
+        got = pool.take(t)
+        assert got is not None
+        got.serve(t)
+        pool.release(got, t)
+    assert sweeps == 0
+    # past the idle deadline the sweep must run and reclaim
+    assert pool.take(5000.0) is None
+    assert sweeps == 1
+    assert len(pool) == 0
+
+
+def test_speeds_view_is_cached_and_invalidated():
+    pool = InstancePool()
+    inst = FunctionInstance(speed_factor=1.5, created_at_ms=0.0)
+    inst.accept_without_benchmark()
+    pool.add_warm(inst)
+    v1 = pool.speeds_view()
+    assert v1 == (1.5,)
+    assert pool.speeds_view() is v1          # cached: same object, no rebuild
+    taken = pool.take(0.0)
+    assert taken is inst
+    assert pool.speeds_view() == ()           # take invalidated the cache
+    # drift-on-reuse happens after take, so the post-take rebuild sees it
+    inst.speed_factor = 2.0
+    inst.serve(1.0)
+    pool.release(inst, 1.0)
+    assert pool.speeds_view() == (2.0,)
+    # the mutable compat copy cannot corrupt the cache
+    pool.speeds.append(99.0)
+    assert pool.speeds_view() == (2.0,)
+    assert pool.n_warm == 1
+    assert pool.certified_speed_quantile(0.5) == pytest.approx(2.0)
+
+
+def test_add_warm_at_capacity_stays_out_of_available():
+    pool = InstancePool(concurrency=2)
+    inst = FunctionInstance(speed_factor=1.0, created_at_ms=0.0)
+    inst.accept_without_benchmark()
+    pool.add_warm(inst, in_flight=2)
+    assert len(pool) == 0
+    assert pool.total_in_flight == 2
+    assert pool.n_instances == 1
+    pool.release(inst, 0.0)                   # one slot frees: available again
+    assert len(pool) == 1
+    assert pool.take(0.0) is inst
+
+
+def test_spread_heap_stays_bounded_under_take_release_cycles():
+    """Regression: repeated take/release on a concurrency>=2 spread pool
+    must not accumulate equally-valid duplicate heap entries (only an
+    instance's latest push is valid, older twins pop lazily)."""
+    pool = InstancePool(order="spread", concurrency=2)
+    inst = FunctionInstance(speed_factor=1.0, created_at_ms=0.0,
+                            idle_timeout_ms=1e12)
+    inst.accept_without_benchmark()
+    pool.add_warm(inst)
+    for t in range(2000):
+        got = pool.take(float(t))
+        assert got is inst
+        got.serve(float(t))
+        pool.release(got, float(t))
+    assert len(pool._spread_heap) < 50, len(pool._spread_heap)
+    assert len(pool._spread_latest) == 1

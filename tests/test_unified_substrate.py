@@ -135,14 +135,14 @@ def test_pool_lifo_vs_fifo_order():
     for order, expect in (("lifo", 3.0), ("fifo", 1.0)):
         pool = InstancePool(order=order)
         for s in (1.0, 2.0, 3.0):
-            pool.available.append(_warm(speed=s))
+            pool.add_warm(_warm(speed=s))
         assert pool.take(0.0).speed_factor == expect
 
 
 def test_pool_concurrency_slots():
     pool = InstancePool(concurrency=2)
     inst = _warm()
-    pool.available.append(inst)
+    pool.add_warm(inst)
     assert pool.take(0.0) is inst       # slot 1: still available
     assert len(pool) == 1
     assert pool.take(0.0) is inst       # slot 2: now at capacity
@@ -156,7 +156,7 @@ def test_pool_concurrency_slots():
 def test_pool_never_reclaims_inflight_instances():
     pool = InstancePool(concurrency=2)
     busy = _warm(idle=10.0)
-    pool.available.append(busy)
+    pool.add_warm(busy)
     assert pool.take(0.0) is busy        # one request in flight, still listed
     # long idle gap: would be idle-expired, but a request holds it — the
     # pool must never reclaim an instance with work in flight
@@ -188,7 +188,7 @@ def test_pool_max_size_expires_overflow():
     pool = InstancePool(max_size=1)
     a, b = _warm(), _warm()
     for inst in (a, b):
-        pool._active[inst.instance_id] = 1
+        pool.add_warm(inst, in_flight=1)
     pool.release(a)
     pool.release(b)
     assert pool.available == [a]
