@@ -1,0 +1,279 @@
+"""Open-loop traffic sweep: rate ladder × burstiness × gate arms
+(EXPERIMENTS.md §Open-loop sweep; DESIGN.md §12).
+
+Every sweep before PR 6 was closed-loop — the next request fired on
+completion, so the system could never be offered more load than it
+finishes. This sweep drives the event engine with *open-loop* arrivals
+(sim/arrivals.py) against a capped instance supply and maps what the
+paper's gate does to tail latency, loss, and cost when traffic, not the
+simulator, sets the pace:
+
+* a **rate ladder** (ρ from comfortable to past saturation) per process
+  shape: Poisson, MMPP on/off bursts (same stationary rate — burstiness
+  isolated from mean load), and a diurnal rate curve;
+* **gate arms**: baseline (off), the fixed Minos gate, and the gate with
+  queue-aware admission stacked on top (defer instead of drop);
+* per cell: completed-only P50/P95/P99, the honest ``wait_p99`` (censored
+  waits folded in — metrics.OpenLoopSummary), drop/defer rates, and cost
+  per 1k completed.
+
+A vectorized leg runs the Poisson cells through the jitted open-loop scan
+(``simulate_open_arms``) and reports per-lane throughput + the speedup
+over the event engine on the same scenario; ``--smoke`` asserts the
+second vec batch reuses the compiled program (zero recompiles).
+
+Timing goes to **stderr** so two ``--smoke`` runs produce byte-identical
+stdout (the CI determinism diff).
+
+Usage: PYTHONPATH=src python benchmarks/openloop_sweep.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import sys
+import time
+
+import numpy as np
+from scipy import stats
+
+from repro.core.control import (
+    ClassicMinosController,
+    QueueAwareAdmissionController,
+)
+from repro.core.policy import MinosPolicy
+from repro.sim import (
+    DiurnalPoissonProcess,
+    FaaSPlatform,
+    FunctionSpec,
+    MMPPProcess,
+    PlatformProfile,
+    PoissonProcess,
+    VariationModel,
+    run_open_loop,
+)
+from repro.sim.experiment import PAPER_PRICING
+from repro.sim.metrics import OpenLoopSummary
+from repro.sim.vectorized import (
+    arm_from_spec,
+    jit_stats,
+    simulate_open_arms,
+    stack_arms,
+)
+
+# PAPER_SPEC shape; churny recycle keeps the gate's probe stream dense
+SPEC = FunctionSpec(
+    name="weather-linreg-open",
+    prepare_ms=600.0,
+    body_ms=1500.0,
+    benchmark_ms=300.0,
+    cold_start_ms=250.0,
+    recycle_lifetime_ms=8_000.0,
+    contention_rho=0.95,
+    benchmark_noise=0.08,
+)
+VM = VariationModel(sigma=0.15)
+PASS_FRACTION = 0.4
+N_SERVERS = 4  # the autoscaling supply cap (SubstrateKnobs.max_instances)
+GATE_ARMS = ("off", "fixed", "fixed+admit")
+
+THRESHOLD = SPEC.benchmark_ms * math.exp(
+    stats.norm.ppf(PASS_FRACTION)
+    * math.sqrt(VM.sigma ** 2 + SPEC.benchmark_noise ** 2))
+
+
+def _profiles():
+    return [
+        dataclasses.replace(p, recycle_lifetime_ms=SPEC.recycle_lifetime_ms,
+                            pricing=PAPER_PRICING)
+        for p in (PlatformProfile.gcf_gen1(), PlatformProfile.aws_lambda())
+    ]
+
+
+def _processes(rate_per_s: float, duration_ms: float):
+    """Three shapes at the SAME stationary rate: mean load is held fixed,
+    so any row-to-row difference is the *shape* of the traffic. The MMPP
+    splits r into base r/2 + bursts at 3r (on 5 s / off 20 s → stationary
+    0.8·r/2 + 0.2·3r = r); the diurnal curve runs one full period over
+    the window."""
+    return [
+        PoissonProcess(rate_per_s),
+        MMPPProcess(base_rate_per_s=rate_per_s / 2.0,
+                    burst_rate_per_s=3.0 * rate_per_s,
+                    mean_off_ms=20_000.0, mean_on_ms=5_000.0),
+        DiurnalPoissonProcess(base_rate_per_s=rate_per_s, amplitude=0.6,
+                              phase_h=0.0, period_ms=duration_ms),
+    ]
+
+
+def _policy(gate: str) -> MinosPolicy:
+    if gate == "off":
+        return MinosPolicy(elysium_threshold=float("inf"), enabled=False)
+    return MinosPolicy(elysium_threshold=THRESHOLD, max_retries=5)
+
+
+def _platform(profile, gate: str, seed: int) -> FaaSPlatform:
+    knobs = dataclasses.replace(profile.knobs(), max_instances=N_SERVERS)
+    if gate == "fixed+admit":
+        ctrl = QueueAwareAdmissionController(
+            ClassicMinosController(_policy("fixed")),
+            headroom=1.25, min_slots=2)
+        return FaaSPlatform(SPEC, VM, None, seed=seed, profile=profile,
+                            knobs=knobs, controller=ctrl)
+    return FaaSPlatform(SPEC, VM, _policy(gate), seed=seed, profile=profile,
+                        knobs=knobs)
+
+
+def _run_cell(profile, process, gate: str, seeds, duration_ms: float):
+    """Seed-pooled OpenLoopSummary for one (profile × process × gate)."""
+    summaries = []
+    for seed in seeds:
+        plat = _platform(profile, gate, seed)
+        run = run_open_loop(
+            plat, process, rng=np.random.RandomState(7_000 + seed),
+            duration_ms=duration_ms, drain_limit_ms=120_000.0)
+        summaries.append(OpenLoopSummary.from_run(gate, plat, run))
+    return summaries
+
+
+def _pool(summaries, field) -> float:
+    return float(np.mean([getattr(s, field) for s in summaries]))
+
+
+def _vec_leg(smoke: bool, seeds, n_steps: int, rate_per_s: float):
+    """The jitted open scan on the Poisson × {off, fixed} cells: wall
+    clock per lane + the zero-recompile guard, mirroring grid_sweep."""
+    max_retries = 3 if smoke else 5  # smoke trims the unrolled retry chain
+    arms = stack_arms([
+        arm_from_spec(SPEC, VM, profile=prof, gate=gate, threshold=THRESHOLD,
+                      max_retries=max_retries)
+        for prof in _profiles() for gate in ("off", "fixed")
+    ])
+    proc = PoissonProcess(rate_per_s)
+    iats = np.stack([proc.iats_ms(np.random.RandomState(9_000 + i), n_steps)
+                     for i in seeds])
+    max_attempts = max_retries + 1
+    t0 = time.perf_counter()
+    simulate_open_arms(arms, seeds=seeds, iats_ms=iats,
+                       n_servers=N_SERVERS, max_attempts=max_attempts)
+    t_first = time.perf_counter() - t0
+    compiles = jit_stats["compiles"]
+    t_cached = math.inf
+    for _ in range(2):
+        t0 = time.perf_counter()
+        simulate_open_arms(arms, seeds=seeds, iats_ms=iats,
+                           n_servers=N_SERVERS, max_attempts=max_attempts)
+        t_cached = min(t_cached, time.perf_counter() - t0)
+    recompiles = jit_stats["compiles"] - compiles
+    lanes = 4 * len(list(seeds))
+    return {
+        "vec_lanes": lanes,
+        "vec_n_steps": n_steps,
+        "vec_wall_clock_s": round(t_cached, 4),
+        "vec_compile_s": round(t_first - t_cached, 4),
+        "vec_arrivals_per_sec": round(lanes * n_steps / t_cached, 1),
+        "jit_recompiles_second_batch": recompiles,
+    }
+
+
+def openloop_sweep(quick: bool = False, *, smoke: bool = False,
+                   report_timing: bool = True):
+    """Returns (rows, headline, perf) — the benchmarks/run.py contract."""
+    if smoke:
+        profiles = _profiles()[:1]
+        rates = (1.2,)
+        seeds = range(2)
+        duration_ms = 120_000.0
+        gates = ("off", "fixed")
+        vec_seeds, vec_steps = range(4), 150
+    elif quick:
+        profiles = _profiles()
+        rates = (0.6, 1.2)
+        seeds = range(2)
+        duration_ms = 240_000.0
+        gates = GATE_ARMS
+        vec_seeds, vec_steps = range(8), 300
+    else:
+        profiles = _profiles()
+        rates = (0.4, 0.8, 1.2, 1.6)
+        seeds = range(3)
+        duration_ms = 600_000.0
+        gates = GATE_ARMS
+        vec_seeds, vec_steps = range(16), 600
+
+    t_sweep = time.perf_counter()
+    rows = []
+    cells = {}
+    for prof in profiles:
+        for rate in rates:
+            for process in _processes(rate, duration_ms):
+                for gate in gates:
+                    summaries = _run_cell(prof, process, gate, seeds,
+                                          duration_ms)
+                    cells[(prof.name, rate, process.name, gate)] = summaries
+                    rows.append({
+                        "platform": prof.name,
+                        "process": process.name,
+                        "rate_per_s": rate,
+                        "gate": gate,
+                        "p50_ms": round(_pool(summaries, "p50_latency_ms"), 1),
+                        "p95_ms": round(_pool(summaries, "p95_latency_ms"), 1),
+                        "p99_ms": round(_pool(summaries, "p99_latency_ms"), 1),
+                        "wait_p99_ms": round(_pool(summaries, "wait_p99_ms"), 1),
+                        "drop_pct": round(100 * _pool(summaries, "drop_rate"), 2),
+                        "defer_pct": round(100 * _pool(summaries, "defer_rate"), 2),
+                        "cost_per_1k": round(_pool(summaries, "cost_per_1k"), 4),
+                    })
+    t_event = time.perf_counter() - t_sweep
+    n_requests = sum(s.n_arrived for ss in cells.values() for s in ss)
+
+    perf = _vec_leg(smoke, vec_seeds, vec_steps, rates[0])
+    perf.update({
+        "n_cells": len(cells),
+        "n_requests": n_requests,
+        "event_wall_clock_s": round(t_event, 3),
+        "event_arrivals_per_sec": round(n_requests / t_event, 1),
+    })
+
+    # headline: burstiness cost at fixed mean load — the MMPP-vs-Poisson
+    # P99 inflation on the first profile's top rate, fixed gate
+    prof0, top = profiles[0].name, max(rates)
+    gate0 = "fixed" if "fixed" in gates else gates[-1]
+    p99_pois = _pool(cells[(prof0, top, "poisson", gate0)], "p99_latency_ms")
+    p99_mmpp = _pool(cells[(prof0, top, "mmpp", gate0)], "p99_latency_ms")
+    headline = (f"cells={len(cells)}_{prof0}_r{top:.1f}_{gate0}"
+                f"_mmpp_p99_inflation={(p99_mmpp / p99_pois - 1) * 100:.0f}%")
+    if report_timing:
+        print(f"openloop_sweep timing: cells={len(cells)} "
+              f"requests={n_requests} event={t_event:.2f}s "
+              f"({n_requests / t_event:.0f} arrivals/s) "
+              f"vec_cached={perf['vec_wall_clock_s']:.2f}s "
+              f"({perf['vec_arrivals_per_sec']:.0f} arrivals/s) "
+              f"recompiles={perf['jit_recompiles_second_batch']}",
+              file=sys.stderr)
+    return rows, headline, perf
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 rates, shorter windows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI cell set; asserts the vec zero-recompile "
+                         "guard; deterministic stdout (timing on stderr)")
+    args = ap.parse_args()
+    rows, headline, perf = openloop_sweep(quick=args.quick, smoke=args.smoke)
+    if args.smoke:
+        assert perf["jit_recompiles_second_batch"] == 0, \
+            f"second vec batch recompiled: {perf}"
+        print("openloop_sweep_smoke_guards,jit_cache_hit=ok", file=sys.stderr)
+    print(f"openloop_sweep,{headline}")
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

@@ -63,7 +63,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (diurnal_sweep, figs, grid_sweep, kernels_micro,
-                   pipeline_sweep, roofline_table, workflow_sweep)
+                   openloop_sweep, pipeline_sweep, roofline_table,
+                   workflow_sweep)
 
     benches = {
         "workflow_sweep": workflow_sweep.workflow_sweep,
@@ -75,6 +76,8 @@ def main() -> None:
         "pipeline_admission": pipeline_sweep.admission_sweep,
         # vectorized Monte-Carlo fast path (DESIGN.md §11)
         "grid_sweep": grid_sweep.grid_sweep,
+        # open-loop arrival traffic: rate × burstiness × gate (DESIGN.md §12)
+        "openloop_sweep": openloop_sweep.openloop_sweep,
         "fig4_regression_duration": figs.fig4_regression_duration,
         "fig5_successful_requests": figs.fig5_successful_requests,
         "fig6_cost_per_day": figs.fig6_cost_per_day,

@@ -163,6 +163,18 @@ class Telemetry:
         """Invocations waiting on the engine's own queue (requeues incl.)."""
         return len(self._engine.queue)
 
+    # -- open-loop pressure (DESIGN.md §12) ------------------------------
+    @property
+    def n_arrived(self) -> int:
+        """Requests submitted to the engine (accepted + dropped)."""
+        return getattr(self._engine, "requests_arrived", 0)
+
+    @property
+    def n_dropped(self) -> int:
+        """Requests refused at submit because the finite queue
+        (``SubstrateKnobs.queue_capacity``) was full."""
+        return getattr(self._engine, "requests_dropped", 0)
+
     # -- streaming estimates (Welford; maintained by the engine) ---------
     @property
     def n_probes(self) -> int:
@@ -737,8 +749,14 @@ class QueueAwareAdmissionController(DelegatingController):
         if self.inner.on_admit(ctx) is AdmitDecision.DEFER:
             return AdmitDecision.DEFER  # static bound still respected
         t = ctx.telemetry
-        budget = t.knobs.max_pool if t.knobs.max_pool is not None \
-            else max(1, t.pool_instances)
+        if t.knobs.max_pool is not None:
+            budget = t.knobs.max_pool
+        elif getattr(t.knobs, "max_instances", None) is not None:
+            # open-loop autoscaling cap (DESIGN.md §12): the supply the
+            # stage can actually spawn, even before instances exist
+            budget = t.knobs.max_instances
+        else:
+            budget = max(1, t.pool_instances)
         capacity = budget * t.knobs.per_instance_concurrency
         bound = max(self.min_slots, math.ceil(self.headroom * capacity))
         if t.total_in_flight + t.queue_depth >= bound:

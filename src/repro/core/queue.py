@@ -32,6 +32,9 @@ class Invocation:
     invocation_id: Optional[int] = None
     # bookkeeping for metrics
     terminations_experienced: int = 0
+    # when the engine first popped this invocation for dispatch — the end of
+    # its queue wait (requeues after a crash do not reset it)
+    first_dispatched_at_ms: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.first_enqueued_at_ms is None:
@@ -73,3 +76,9 @@ class InvocationQueue:
 
     def peek_time(self) -> Optional[float]:
         return self._heap[0][0] if self._heap else None
+
+    def waiting(self) -> list[Invocation]:
+        """The queued invocations, in heap (not pop) order — for end-of-run
+        accounting of censored queue waits (open-loop metrics); callers
+        must not mutate the invocations' queue fields."""
+        return [inv for _, _, inv in self._heap]

@@ -585,6 +585,10 @@ class RequestResult:
     instance_speed: float
     benchmark_ms: Optional[float] = None  # probe duration on serving instance
     output: Any = None                    # backend body output (serving: tokens)
+    # time from submission (arrival / deferred-arrival time) to the FIRST
+    # dispatch attempt — the open-loop queue wait. Closed-loop submits
+    # dispatch immediately, so this stays 0.0 there.
+    queue_wait_ms: float = 0.0
 
     @property
     def latency_ms(self) -> float:
@@ -619,6 +623,19 @@ class SubstrateKnobs:
     # With True, the elysium gate judges a cold-start probe at the pool's
     # current mean occupancy (effective speed), not at single occupancy.
     gate_load_aware: bool = False
+    # -- open-loop traffic knobs (DESIGN.md §12) ----------------------------
+    # Autoscaling supply cap: live instances (busy + pooled) this deployment
+    # may hold at once. None = the elastic-supply model every closed-loop
+    # sweep assumed (a cold start is always possible, so the queue never
+    # builds). With a cap, a dispatch that finds no warm instance AND no
+    # spare instance budget leaves the invocation queued until a release —
+    # this is what makes open-loop queueing (and queue blow-up) real.
+    max_instances: Optional[int] = None
+    # Finite queue buffer: an arrival finding this many invocations already
+    # queued is dropped at submit (counted, never served) — the M/G/c/K
+    # loss model. None = unbounded queue (drops never happen; sustained
+    # overload shows up as unbounded waits instead).
+    queue_capacity: Optional[int] = None
 
     def load_multiplier(self, load: float) -> float:
         """Body-duration multiplier at ``load`` in-flight requests."""
@@ -690,6 +707,11 @@ class SubstrateEngine:
         self.instances_retired = 0    # controller RETIREs + failed re-probes
         self.reprobes = 0             # warm re-benchmarks run
         self.termination_events: list[tuple[float, float]] = []  # (t_ms, billed_ms)
+        # open-loop traffic accounting (conservation: requests_arrived ==
+        # len(results) + requests_dropped + queued + in-flight at any time)
+        self.requests_arrived = 0
+        self.requests_dropped = 0
+        self.drop_events: list[tuple[float, int]] = []  # (t_ms, queue depth)
         # Welford estimates exposed through Telemetry (control plane inputs)
         self.probe_stats = Welford()      # cold probe durations (ms)
         self.log_probe_stats = Welford()  # log of the same (lognormal fit)
@@ -721,18 +743,51 @@ class SubstrateEngine:
         return self.pool.speeds_view()
 
     # ------------------------------------------------------------------
-    def submit(self, payload: Any, on_complete: Callable[[RequestResult], None] | None = None) -> None:
+    def submit(
+        self,
+        payload: Any,
+        on_complete: Callable[[RequestResult], None] | None = None,
+        *,
+        submitted_at_ms: Optional[float] = None,
+    ) -> bool:
+        """Enqueue one invocation; returns False when the finite queue
+        buffer (``SubstrateKnobs.queue_capacity``) rejects it.
+
+        ``submitted_at_ms`` back-dates the request's submission time (and
+        therefore its reported latency/queue wait) — the open-loop driver
+        uses it for items that waited at admission before being submitted.
+        """
+        self.requests_arrived += 1
+        cap = self.knobs.queue_capacity
+        if cap is not None and len(self.queue) >= cap:
+            self.requests_dropped += 1
+            self.drop_events.append((self.loop.now, len(self.queue)))
+            return False
         inv = Invocation(payload={"on_complete": on_complete, "user": payload},
                          enqueued_at_ms=self.loop.now)
-        inv.first_enqueued_at_ms = self.loop.now
+        inv.first_enqueued_at_ms = (
+            self.loop.now if submitted_at_ms is None else submitted_at_ms)
         self.queue.push(inv, self.loop.now)
         self.loop.after(0.0, self._dispatch)
+        return True
+
+    def _at_instance_cap(self) -> bool:
+        """Supply exhausted: no spare instance budget for a cold start."""
+        cap = self.knobs.max_instances
+        return cap is not None and self.pool.n_instances >= cap
 
     def _dispatch(self) -> None:
         if len(self.queue) == 0:
             return
-        inv = self.queue.pop()
         warm = self.pool.take(self.loop.now)
+        if warm is None and self._at_instance_cap():
+            # no warm instance and the autoscaling cap is reached: the
+            # invocation stays queued; every release/retire re-dispatches,
+            # so the queue drains as capacity frees (open-loop queueing)
+            return
+        inv = self.queue.pop()
+        if inv.first_dispatched_at_ms is None:
+            inv.first_dispatched_at_ms = self.loop.now
         if warm is not None:
             self._run_on_warm(inv, warm)
         else:
@@ -941,6 +996,10 @@ class SubstrateEngine:
             instance_speed=speed,
             benchmark_ms=bench,
             output=output,
+            queue_wait_ms=(
+                0.0 if inv.first_dispatched_at_ms is None
+                or inv.first_enqueued_at_ms is None
+                else max(0.0, inv.first_dispatched_at_ms - inv.first_enqueued_at_ms)),
         )
         self.results.append(res)
         # control-plane estimator feed (Telemetry reads these Welfords)

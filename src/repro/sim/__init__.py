@@ -12,7 +12,24 @@ from .experiment import (
     run_week,
     workflow_arm_factory,
 )
-from .metrics import ArmSummary, WorkflowSummary, cost_timeline, improvement
+from .arrivals import (
+    ArrivalProcess,
+    DiurnalPoissonProcess,
+    MMPPProcess,
+    OpenLoopRun,
+    PoissonProcess,
+    QoSClass,
+    TraceProcess,
+    arrival_times_ms,
+    run_open_loop,
+)
+from .metrics import (
+    ArmSummary,
+    OpenLoopSummary,
+    WorkflowSummary,
+    cost_timeline,
+    improvement,
+)
 from .platform import (
     FaaSPlatform,
     FunctionSpec,
@@ -27,6 +44,7 @@ from .vectorized import (
     arm_from_spec,
     run_event_chain,
     simulate_arms,
+    simulate_open_arms,
     stack_arms,
 )
 from .workflow_dag import (
@@ -39,6 +57,7 @@ from .workflow_dag import (
     etl_suite,
     run_workflow_batch,
     run_workflow_closed_loop,
+    run_workflow_open_loop,
 )
 from .workload import WorkflowSpec, make_chain, run_closed_loop, run_workflow
 
@@ -46,14 +65,19 @@ __all__ = [
     "ARMS", "PAPER_PRICING", "PAPER_SPEC", "PASS_FRACTION",
     "DayResult", "WeekResult", "make_arm_policy", "run_day",
     "run_pretest_phase", "run_week", "workflow_arm_factory",
-    "ArmSummary", "WorkflowSummary", "cost_timeline", "improvement",
+    "ArmSummary", "OpenLoopSummary", "WorkflowSummary", "cost_timeline",
+    "improvement",
+    "ArrivalProcess", "DiurnalPoissonProcess", "MMPPProcess", "OpenLoopRun",
+    "PoissonProcess", "QoSClass", "TraceProcess", "arrival_times_ms",
+    "run_open_loop",
     "FaaSPlatform", "FunctionSpec", "PlatformProfile", "RequestResult",
     "SimFunctionBackend",
     "VariationModel", "paper_week",
     "ArmParams", "VecResult", "arm_from_spec", "run_event_chain",
-    "simulate_arms", "stack_arms",
+    "simulate_arms", "simulate_open_arms", "stack_arms",
     "ItemResult", "Stage", "WorkflowDAG", "WorkflowEngine",
     "WorkflowRunResult", "etl_chain", "etl_suite",
     "run_workflow_batch", "run_workflow_closed_loop",
+    "run_workflow_open_loop",
     "WorkflowSpec", "make_chain", "run_closed_loop", "run_workflow",
 ]

@@ -95,6 +95,79 @@ class WorkflowSummary:
         )
 
 
+@dataclasses.dataclass
+class OpenLoopSummary:
+    """One open-loop arm (EXPERIMENTS.md §Open-loop sweep).
+
+    Latency percentiles are over COMPLETED requests — the usual SLO view,
+    and under queue blow-up a survivorship-biased one: requests still
+    stuck in the queue (or parked at admission) when the run ends never
+    reach the completed set, so completed-only P99 can *fall* as overload
+    worsens. ``wait_p99_ms`` is therefore computed over ALL arrived
+    requests' queue waits: completed requests' waits, the censored waits
+    of everything still pending at the end, and 0.0 for each dropped
+    request (a drop is refused instantly; it appears as ``drop_rate``,
+    not as wait). Regression-tested in tests/test_arrivals.py."""
+
+    name: str
+    process: str
+    n_arrived: int
+    n_completed: int
+    n_dropped: int
+    n_deferred: int
+    drop_rate: float
+    defer_rate: float
+    mean_latency_ms: float
+    p50_latency_ms: float
+    p95_latency_ms: float
+    p99_latency_ms: float
+    completed_wait_p99_ms: float   # the survivorship-biased version
+    wait_p99_ms: float             # over ALL arrived requests
+    mean_system_population: float  # time-averaged L (Little's law)
+    total_cost: float
+    cost_per_1k: float
+    n_instance_starts: int
+    n_terminated: int
+
+    @staticmethod
+    def from_run(name: str, engine, run) -> "OpenLoopSummary":
+        """``engine`` is a :class:`~repro.core.substrate.SubstrateEngine`,
+        ``run`` an :class:`~repro.sim.arrivals.OpenLoopRun` (duck-typed,
+        as elsewhere in this module)."""
+        lat = np.asarray([r.latency_ms for r in run.results]) \
+            if run.results else np.asarray([np.nan])
+        completed_waits = np.asarray(
+            [r.queue_wait_ms for r in run.results]) \
+            if run.results else np.asarray([0.0])
+        all_waits = np.concatenate([
+            completed_waits if run.results else np.empty(0),
+            np.asarray(run.censored_waits_ms, float),
+            np.zeros(run.n_dropped),
+        ]) if (run.results or run.censored_waits_ms or run.n_dropped) \
+            else np.asarray([0.0])
+        return OpenLoopSummary(
+            name=name,
+            process=getattr(run, "process_name", "?"),
+            n_arrived=run.n_arrived,
+            n_completed=run.n_completed,
+            n_dropped=run.n_dropped,
+            n_deferred=run.n_deferred_items,
+            drop_rate=run.drop_rate,
+            defer_rate=run.defer_rate,
+            mean_latency_ms=float(lat.mean()),
+            p50_latency_ms=float(np.percentile(lat, 50)),
+            p95_latency_ms=float(np.percentile(lat, 95)),
+            p99_latency_ms=float(np.percentile(lat, 99)),
+            completed_wait_p99_ms=float(np.percentile(completed_waits, 99)),
+            wait_p99_ms=float(np.percentile(all_waits, 99)),
+            mean_system_population=run.mean_system_population(),
+            total_cost=engine.cost.total,
+            cost_per_1k=engine.cost.total / max(run.n_completed, 1) * 1e3,
+            n_instance_starts=engine.instances_started,
+            n_terminated=engine.instances_terminated,
+        )
+
+
 def cost_timeline(
     results: list[RequestResult],
     cost: WorkflowCost,

@@ -281,6 +281,7 @@ class FaaSPlatform(SubstrateEngine):
         online_controller=None,
         profile: Optional[PlatformProfile] = None,
         controller=None,
+        knobs: Optional[SubstrateKnobs] = None,
     ) -> None:
         """online_controller: an OnlineElysiumController (paper §IV future
         work, implemented here): every cold-start probe result is reported
@@ -298,12 +299,19 @@ class FaaSPlatform(SubstrateEngine):
 
         controller: a :class:`~repro.core.control.Controller` that replaces
         the whole policy stack (pass ``policy=None`` then); the legacy
-        arguments build the default ClassicMinosController."""
+        arguments build the default ClassicMinosController.
+
+        knobs: explicit :class:`~repro.core.substrate.SubstrateKnobs`,
+        overriding both profile and spec — how open-loop drivers set the
+        ``max_instances`` / ``queue_capacity`` traffic knobs on top of a
+        profile (``dataclasses.replace(profile.knobs(), ...)``)."""
         if pricing is None:
             if profile is None:
                 raise ValueError("pricing is required when no profile is given")
             pricing = profile.pricing
-        if profile is not None:
+        if knobs is not None:
+            pass  # explicit knobs win
+        elif profile is not None:
             knobs = profile.knobs()
         else:
             knobs = SubstrateKnobs(

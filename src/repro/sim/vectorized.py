@@ -555,6 +555,291 @@ def _simulate_chain(params: ArmParams, key, cfg: SimConfig):
     }
     return summary, requests
 # ---------------------------------------------------------------------------
+# Open-loop (arrival-driven) scan — DESIGN.md §12
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OpenSimConfig:
+    """Static shape of one open-loop vectorized run.
+
+    ``n_servers`` is the autoscaling supply cap (the event engine's
+    ``SubstrateKnobs.max_instances``): K server slots, each carrying its
+    own busy-until horizon. Scope: the scan is drop-free (no finite queue
+    buffer) and processes arrivals in order — each arrival takes the
+    earliest available slot, which IS the FIFO M/G/K queue; drop/defer
+    dynamics stay on the event engine (DESIGN.md §12)."""
+
+    n_steps: int
+    n_servers: int = 4
+    max_attempts: int = 6
+    collect_requests: bool = False
+    adaptive: bool = True
+    diurnal: bool = True
+
+
+class OpenState(NamedTuple):
+    """Scan carry for the open-loop variant. The estimator tail
+    (probe_w … n_probes) duck-types :class:`VecState`, so the cold retry
+    chain helpers run unchanged on either carry."""
+
+    t_arr: Any                   # previous arrival's absolute time
+    busy: tuple                  # per-slot busy-until horizon
+    log_speed: tuple
+    last_used: tuple             # per-slot last completion time
+    recycle: tuple               # absolute recycle deadline (inf = never)
+    alive: tuple
+    probe_w: WelfordState
+    log_probe_w: WelfordState
+    body_w: WelfordState
+    latency_w: WelfordState
+    wait_w: WelfordState         # queue waits (the open-loop metric)
+    reuse_w: WelfordState
+    p2: Any
+    ema: Any
+    ema_init: Any
+    since_publish: Any
+    n_probes: Any
+    n_started: Any
+    n_terminated: Any
+    nb_term: Any
+    nb_pass: Any
+    nb_reuse: Any
+    db_term: Any
+    db_pass: Any
+    db_reuse: Any
+
+
+def _open_step(params: ArmParams, cfg: OpenSimConfig, consts: dict,
+               state: OpenState, draws):
+    f32 = jnp.float32
+    K = cfg.n_servers
+    u, ex, iat = draws
+    su = u * consts["scale_vec"]
+    J = jnp.exp(su)
+    t_arr = state.t_arr + iat
+
+    # ---- slot availability at arrival time -----------------------------
+    free = [state.busy[k] <= t_arr for k in range(K)]
+    valid = [state.alive[k] & free[k]
+             & ((t_arr - state.last_used[k]) <= params.idle_timeout_ms)
+             & (t_arr < state.recycle[k])
+             for k in range(K)]
+    any_valid = valid[0]
+    any_free = free[0]
+    for k in range(1, K):
+        any_valid = any_valid | valid[k]
+        any_free = any_free | free[k]
+
+    # case A — warm now: reuse-order tournament among valid slots
+    # (lifo: most recently used; fifo/spread: oldest — concurrency is 1
+    # per slot here, so spread degenerates to fifo exactly as in _step)
+    sign = jnp.where(params.order == 0, 1.0, -1.0)
+    ninf = jnp.asarray(-jnp.inf, f32)
+    score = [jnp.where(valid[k], sign * state.last_used[k], ninf)
+             for k in range(K)]
+    oh_a = [None] * K
+    oh_a[0] = score[0] >= ninf
+    best_a = score[0]
+    for k in range(1, K):
+        take = score[k] > best_a
+        best_a = jnp.where(take, score[k], best_a)
+        for j in range(k):
+            oh_a[j] = oh_a[j] & ~take
+        oh_a[k] = take
+
+    # case B — no valid warm slot but a free one exists (dead or
+    # idle/recycle-expired): cold start now, into the first free slot
+    oh_b = [None] * K
+    oh_b[0] = free[0]
+    taken = free[0]
+    for k in range(1, K):
+        oh_b[k] = free[k] & ~taken
+        taken = taken | free[k]
+
+    # case C — every slot busy: wait for the earliest completion; the
+    # freed slot serves this arrival (warm unless its recycle deadline
+    # passed while it was busy — idle gap is zero by construction)
+    oh_c = [None] * K
+    oh_c[0] = jnp.ones((), bool)
+    best_c = state.busy[0]
+    for k in range(1, K):
+        take = state.busy[k] < best_c
+        best_c = jnp.where(take, state.busy[k], best_c)
+        for j in range(k):
+            oh_c[j] = oh_c[j] & ~take
+        oh_c[k] = take
+
+    case_a = any_valid
+    case_b = ~any_valid & any_free
+    case_c = ~any_free
+    t_start = jnp.where(case_c, jnp.maximum(best_c, t_arr), t_arr)
+    wait = t_start - t_arr
+
+    # the serving slot's one-hot + the warm-path speed/recycle it carries
+    upd = [(case_a & oh_a[k]) | (case_b & oh_b[k]) | (case_c & oh_c[k])
+           for k in range(K)]
+    log_i = jnp.zeros((), f32)
+    rc_keep = jnp.zeros((), f32)
+    rc_c = jnp.zeros((), f32)
+    for k in range(K):
+        sel_a = case_a & oh_a[k]
+        sel_c = case_c & oh_c[k]
+        log_i = jnp.where(sel_a | sel_c, state.log_speed[k], log_i)
+        rc_keep = jnp.where(sel_a | sel_c, state.recycle[k], rc_keep)
+        rc_c = jnp.where(oh_c[k], state.recycle[k], rc_c)
+    recycled_c = case_c & (t_start >= rc_c)
+    served_cold = case_b | recycled_c
+    any_warm = ~served_cold
+
+    if cfg.diurnal:
+        dv = _diurnal(t_start, params.diurnal_amplitude, params.diurnal_phase_h)
+        day_mean = params.day_factor * dv
+        log_day = consts["log_df"] + jnp.log(dv)
+    else:
+        day_mean = params.day_factor
+        log_day = consts["log_df"]
+
+    # ---- warm path: AR(1) drift, prepare + body ------------------------
+    rho = params.contention_rho
+    log_drifted = jnp.where(
+        rho >= 1.0, log_i,
+        log_day + rho * (log_i - log_day)
+        + jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0)) * su[0])
+    download_w = params.prepare_ms * J[1]
+    analysis_w = params.body_ms * J[2] * jnp.exp(-log_drifted)
+    dur_w = download_w + analysis_w
+
+    # ---- cold path: the shared retry chain -----------------------------
+    chain = _cold_chain_adaptive if cfg.adaptive else _cold_chain_fixed
+    c = chain(params, cfg, consts, su, J, day_mean, log_day,
+              served_cold, state)
+
+    # ---- merge + slot update -------------------------------------------
+    analysis = jnp.where(served_cold, c.analysis_ms, analysis_w)
+    service = jnp.where(
+        served_cold, c.elapsed + c.cold_ms + c.ready_ms + c.analysis_ms, dur_w)
+    latency = wait + service
+    billed_final = jnp.where(
+        served_cold,
+        params.bill_cold_start * c.cold_ms + c.ready_ms + c.analysis_ms,
+        dur_w)
+    t_end = t_start + service
+    log_speed_served = jnp.where(served_cold, c.log_speed, log_drifted)
+    recycle_new = (t_start + c.place_rel) + jnp.where(
+        jnp.isinf(params.recycle_lifetime_ms), jnp.inf,
+        ex * params.recycle_lifetime_ms)
+    recycle_upd = jnp.where(served_cold, recycle_new, rc_keep)
+
+    new_state = OpenState(
+        t_arr=t_arr,
+        busy=tuple(jnp.where(upd[k], t_end, state.busy[k]) for k in range(K)),
+        log_speed=tuple(
+            jnp.where(upd[k], log_speed_served, state.log_speed[k])
+            for k in range(K)),
+        last_used=tuple(
+            jnp.where(upd[k], t_end, state.last_used[k]) for k in range(K)),
+        recycle=tuple(
+            jnp.where(upd[k], recycle_upd, state.recycle[k])
+            for k in range(K)),
+        alive=tuple(state.alive[k] | upd[k] for k in range(K)),
+        probe_w=c.probe_w, log_probe_w=c.log_probe_w,
+        body_w=welford_update(state.body_w, analysis),
+        latency_w=welford_update(state.latency_w, latency),
+        wait_w=welford_update(state.wait_w, wait),
+        reuse_w=welford_update(state.reuse_w, jnp.asarray(any_warm, f32)),
+        p2=c.p2, ema=c.ema, ema_init=c.ema_init,
+        since_publish=c.since_publish, n_probes=c.n_probes,
+        n_started=state.n_started + jnp.asarray(served_cold, f32) * (
+            jnp.asarray(c.retries, f32) + 1.0),
+        n_terminated=state.n_terminated + c.n_term,
+        nb_term=state.nb_term + c.n_term,
+        nb_pass=state.nb_pass + jnp.asarray(served_cold, f32),
+        nb_reuse=state.nb_reuse + jnp.asarray(any_warm, f32),
+        db_term=state.db_term + c.d_term,
+        db_pass=state.db_pass + jnp.asarray(served_cold, f32) * billed_final,
+        db_reuse=state.db_reuse + jnp.asarray(any_warm, f32) * billed_final,
+    )
+    if cfg.collect_requests:
+        out = {
+            "latency_ms": latency,
+            "wait_ms": wait,
+            "analysis_ms": analysis,
+            "billed_ms": jnp.asarray(served_cold, f32) * c.d_term + billed_final,
+            "served_by_cold": served_cold,
+            "retries": jnp.where(served_cold, c.retries, 0),
+            "t_completed_ms": t_end,
+        }
+    else:
+        out = None
+    return new_state, out
+
+
+def _simulate_open_chain(params: ArmParams, key, cfg: OpenSimConfig, iats):
+    f32 = jnp.float32
+    K = cfg.n_servers
+    ma = cfg.max_attempts
+    k_normal, k_exp = jax.random.split(key)
+    u_all = jax.random.normal(k_normal, (cfg.n_steps, 3 + 5 * ma), f32)
+    ex_all = jax.random.exponential(k_exp, (cfg.n_steps,), f32)
+    pj, bj = params.prepare_jitter, params.body_jitter
+    cj, bn, sg = params.cold_start_jitter, params.benchmark_noise, params.sigma
+    consts = {
+        "scale_vec": jnp.stack([sg, pj, bj] + [sg, cj, pj, bn, bj] * ma),
+        "log_df": jnp.log(params.day_factor),
+        "log_bench_ms": jnp.log(params.benchmark_ms),
+    }
+    z = jnp.zeros((), f32)
+    state = OpenState(
+        t_arr=z,
+        busy=(z,) * K,
+        log_speed=(z,) * K,
+        last_used=(z,) * K,
+        recycle=(jnp.asarray(jnp.inf, f32),) * K,
+        alive=(jnp.zeros((), bool),) * K,
+        probe_w=welford_init(), log_probe_w=welford_init(),
+        body_w=welford_init(), latency_w=welford_init(),
+        wait_w=welford_init(), reuse_w=welford_init(),
+        p2=p2_init(params.pass_fraction) if cfg.adaptive else None,
+        ema=z if cfg.adaptive else None,
+        ema_init=jnp.zeros((), bool) if cfg.adaptive else None,
+        since_publish=jnp.zeros((), jnp.int32) if cfg.adaptive else None,
+        n_probes=jnp.zeros((), jnp.int32),
+        n_started=z, n_terminated=z,
+        nb_term=z, nb_pass=z, nb_reuse=z,
+        db_term=z, db_pass=z, db_reuse=z,
+    )
+    final, requests = jax.lax.scan(
+        lambda s, x: _open_step(params, cfg, consts, s, x), state,
+        (u_all, ex_all, jnp.asarray(iats, f32)),
+        unroll=1 if cfg.adaptive else 4)
+    cost = params.cost_per_ms * (final.db_term + final.db_pass
+                                 + final.db_reuse) \
+        + params.cost_per_invocation * (final.nb_term + final.nb_pass
+                                        + final.nb_reuse)
+    summary = {
+        "n_requests": jnp.asarray(cfg.n_steps, f32),
+        "n_started": final.n_started,
+        "n_terminated": final.n_terminated,
+        "n_probes": jnp.asarray(final.n_probes, f32),
+        "reuse_rate": final.reuse_w.mean,
+        "mean_analysis_ms": final.body_w.mean,
+        "mean_latency_ms": final.latency_w.mean,
+        "mean_wait_ms": final.wait_w.mean,
+        "std_wait_ms": welford_std(final.wait_w),
+        "probe_mean_ms": final.probe_w.mean,
+        "probe_log_std": welford_std(final.log_probe_w),
+        "pass_rate": 1.0 - final.n_terminated
+        / jnp.maximum(jnp.asarray(final.n_probes, f32), 1.0),
+        "bill_n": jnp.stack([final.nb_term, final.nb_pass, final.nb_reuse]),
+        "bill_d": jnp.stack([final.db_term, final.db_pass, final.db_reuse]),
+        "cost": cost,
+        "horizon_ms": final.t_arr,
+    }
+    return summary, requests
+
+
+# ---------------------------------------------------------------------------
 # Host entry points
 # ---------------------------------------------------------------------------
 
@@ -637,6 +922,83 @@ def simulate_arms(
         requests = {k: np.asarray(v) for k, v in requests.items()}
     return VecResult(summary=summary, requests=requests, n_arms=n_arms,
                      n_seeds=len(seeds), n_steps=int(n_steps))
+
+
+def _get_open_sim_fn(cfg: OpenSimConfig, batch_shape: tuple):
+    cache_key = (cfg, batch_shape)
+    if cache_key not in _JIT_CACHE:
+        jit_stats["compiles"] += 1
+
+        def run(params, seeds, arm_ids, iats):
+            def lane(p, seed, arm, iat_row):
+                key = jax.random.fold_in(jax.random.PRNGKey(seed), arm)
+                return _simulate_open_chain(p, key, cfg, iat_row)
+
+            # the arrival stream varies per SEED lane (one realization per
+            # seed) and is shared across arms — every arm answers the same
+            # offered traffic, which is what makes arms comparable
+            per_seed = jax.vmap(lane, in_axes=(None, 0, None, 0))
+            return jax.vmap(per_seed, in_axes=(0, None, 0, None))(
+                params, seeds, arm_ids, iats)
+
+        _JIT_CACHE[cache_key] = jax.jit(run)
+    return _JIT_CACHE[cache_key]
+
+
+def simulate_open_arms(
+    arms: ArmParams,
+    *,
+    seeds,
+    iats_ms: np.ndarray,
+    n_servers: int = 4,
+    max_attempts: Optional[int] = None,
+    collect_requests: bool = False,
+) -> VecResult:
+    """Open-loop variant of :func:`simulate_arms`: instead of a think-time
+    loop, the scan consumes ``iats_ms`` — host-generated inter-arrival
+    times, shape ``(n_steps,)`` (shared by every seed lane; bit-exact
+    trace replay) or ``(n_seeds, n_steps)`` (one realization per seed,
+    from :mod:`repro.sim.arrivals`). Each arrival waits for the earliest
+    of ``n_servers`` slots (the FIFO M/G/K queue at an autoscaling cap of
+    ``max_instances = n_servers``); ``ArmParams.think_time_ms`` is ignored.
+    """
+    leaves = [np.atleast_1d(np.asarray(x)) for x in arms]
+    n_arms = max(leaf.shape[0] for leaf in leaves)
+    stacked = ArmParams(*[
+        jnp.asarray(np.broadcast_to(leaf, (n_arms,)),
+                    jnp.int32 if leaf.dtype.kind in "iu" else jnp.float32)
+        for leaf in leaves])
+    seeds = np.atleast_1d(np.asarray(seeds, np.uint32))
+    iats = np.asarray(iats_ms, np.float32)
+    if iats.ndim == 1:
+        iats = np.broadcast_to(iats, (len(seeds), iats.shape[0]))
+    if iats.ndim != 2 or iats.shape[0] != len(seeds):
+        raise ValueError(
+            f"iats_ms must be (n_steps,) or (n_seeds, n_steps); got "
+            f"{np.asarray(iats_ms).shape} for {len(seeds)} seeds")
+    n_steps = int(iats.shape[1])
+    max_r = int(np.max(np.asarray(arms.max_retries)))
+    if max_attempts is None:
+        max_attempts = max_r + 1
+    if max_attempts < max_r + 1:
+        raise ValueError(
+            f"max_attempts={max_attempts} cannot cover max_retries={max_r}")
+    adaptive = bool(np.any(np.asarray(arms.gate_mode) == GATE_ADAPTIVE))
+    diurnal = bool(np.any(np.asarray(arms.diurnal_amplitude) != 0.0))
+    cfg = OpenSimConfig(n_steps=n_steps, n_servers=int(n_servers),
+                        max_attempts=int(max_attempts),
+                        collect_requests=bool(collect_requests),
+                        adaptive=adaptive, diurnal=diurnal)
+    fn = _get_open_sim_fn(cfg, (n_arms, len(seeds)))
+    jit_stats["calls"] += 1
+    summary, requests = fn(stacked, jnp.asarray(seeds),
+                           jnp.arange(n_arms, dtype=jnp.uint32),
+                           jnp.asarray(iats))
+    summary = {k: np.asarray(v) for k, v in summary.items()}
+    if requests is not None:
+        requests = {k: np.asarray(v) for k, v in requests.items()}
+    return VecResult(summary=summary, requests=requests, n_arms=n_arms,
+                     n_seeds=len(seeds), n_steps=n_steps)
 
 
 # ---------------------------------------------------------------------------
@@ -760,11 +1122,13 @@ __all__ = [
     "GATE_FIXED",
     "GATE_OFF",
     "ORDER_CODES",
+    "OpenSimConfig",
     "SimConfig",
     "VecResult",
     "arm_from_spec",
     "jit_stats",
     "run_event_chain",
     "simulate_arms",
+    "simulate_open_arms",
     "stack_arms",
 ]

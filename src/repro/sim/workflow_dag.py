@@ -495,6 +495,36 @@ def run_workflow_batch(
     return WorkflowRunResult(dag=engine.dag, items=list(engine.items), engine=engine)
 
 
+def run_workflow_open_loop(
+    engine: WorkflowEngine,
+    process,
+    *,
+    rng: np.random.RandomState,
+    duration_ms: float,
+    payload_fn: Optional[Callable[[int], Any]] = None,
+    drain_limit_ms: float = 20 * 60 * 1000.0,
+) -> WorkflowRunResult:
+    """Open-loop workflow traffic: item arrivals follow an
+    :class:`~repro.sim.arrivals.ArrivalProcess` realization instead of the
+    fixed rate of :func:`run_workflow_batch` — arrivals are independent of
+    completions, so stage admission (``Stage.max_in_flight`` or a
+    :class:`~repro.core.control.QueueAwareAdmissionController`) is what
+    absorbs bursts. Items arriving within ``duration_ms`` are measured;
+    the run drains up to ``drain_limit_ms`` past the horizon."""
+    from .arrivals import arrival_times_ms  # local: avoid a module cycle
+
+    times = arrival_times_ms(process, rng, duration_ms)
+    for i, t in enumerate(times):
+        payload = payload_fn(i) if payload_fn is not None else None
+        engine.loop.at(
+            float(t),
+            lambda payload=payload: engine.submit_item(None, payload=payload),
+        )
+    engine.loop.run_until(duration_ms)
+    engine.loop.run_all(hard_limit_ms=duration_ms + drain_limit_ms)
+    return WorkflowRunResult(dag=engine.dag, items=list(engine.items), engine=engine)
+
+
 # ---------------------------------------------------------------------------
 # ETL scenario suite (EXPERIMENTS.md §Workflow sweep)
 # ---------------------------------------------------------------------------

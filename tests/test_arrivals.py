@@ -1,0 +1,339 @@
+"""The open-loop arrival layer, pinned by queueing theory
+(sim/arrivals.py; DESIGN.md §12).
+
+Four families of checks:
+
+* the processes themselves — Poisson IATs pass a KS test against the
+  analytic Exponential(λ); MMPP and diurnal long-run rates match their
+  stationary values; traces replay bit-exactly and draw no randomness;
+* the driver obeys conservation — every arrival is accounted for as
+  completed, dropped, or pending, under deferral AND finite-queue loss;
+* Little's law — L = λW on a gate-disabled steady-state arm, with L
+  measured independently (cadence-sampled system population), not
+  derived from the request timestamps it is compared against;
+* the survivorship-bias fix in metrics.OpenLoopSummary — under overload
+  the completed-only wait percentile understates; ``wait_p99_ms`` folds
+  in the censored waits of everything still stuck at the end.
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+from scipy import stats
+
+from repro.core.control import (
+    ClassicMinosController,
+    QueueAwareAdmissionController,
+)
+from repro.core.policy import MinosPolicy
+from repro.sim import (
+    ArrivalProcess,
+    DiurnalPoissonProcess,
+    FaaSPlatform,
+    FunctionSpec,
+    MMPPProcess,
+    PlatformProfile,
+    PoissonProcess,
+    QoSClass,
+    TraceProcess,
+    VariationModel,
+    arrival_times_ms,
+    run_open_loop,
+)
+from repro.sim.arrivals import draw_classes
+from repro.sim.metrics import OpenLoopSummary
+
+SPEC = FunctionSpec(
+    name="openloop", prepare_ms=600.0, body_ms=1500.0, benchmark_ms=300.0,
+    cold_start_ms=250.0, recycle_lifetime_ms=45_000.0, contention_rho=0.95,
+    benchmark_noise=0.08,
+)
+VM = VariationModel(sigma=0.15)
+PROFILE = PlatformProfile.gcf_gen1()
+
+
+def _baseline_policy() -> MinosPolicy:
+    return MinosPolicy(elysium_threshold=float("inf"), enabled=False)
+
+
+def _platform(max_instances, *, seed=0, queue_capacity=None,
+              admission=False) -> FaaSPlatform:
+    knobs = dataclasses.replace(
+        PROFILE.knobs(), max_instances=max_instances,
+        queue_capacity=queue_capacity)
+    if admission:
+        ctrl = QueueAwareAdmissionController(
+            ClassicMinosController(_baseline_policy()),
+            headroom=1.25, min_slots=2)
+        return FaaSPlatform(SPEC, VM, None, seed=seed, profile=PROFILE,
+                            knobs=knobs, controller=ctrl)
+    return FaaSPlatform(SPEC, VM, _baseline_policy(), seed=seed,
+                        profile=PROFILE, knobs=knobs)
+
+
+# ---------------------------------------------------------------------------
+# The processes
+# ---------------------------------------------------------------------------
+
+
+def test_all_processes_satisfy_protocol():
+    procs = [PoissonProcess(1.0),
+             MMPPProcess(0.5, 3.0),
+             DiurnalPoissonProcess(1.0),
+             TraceProcess((100.0, 200.0))]
+    for p in procs:
+        assert isinstance(p, ArrivalProcess)
+        iats = p.iats_ms(np.random.RandomState(0), 50)
+        assert iats.shape == (50,) and np.all(iats >= 0.0)
+        assert p.mean_rate_per_ms() > 0.0
+
+
+def test_poisson_iats_are_exponential_ks():
+    """KS test against the analytic Exponential(λ): the one distributional
+    property the whole M/G/c analysis downstream rests on. Pinned seed;
+    p > 0.05 at n=4000 would fail decisively for e.g. a units slip
+    (seconds vs ms shifts the scale 1000×) or uniform-instead-of-exp."""
+    rate = 2.0  # per second → scale 500 ms
+    iats = PoissonProcess(rate).iats_ms(np.random.RandomState(12345), 4000)
+    ks = stats.kstest(iats, stats.expon(scale=1000.0 / rate).cdf)
+    assert ks.pvalue > 0.05, ks
+    assert np.mean(iats) == pytest.approx(500.0, rel=0.05)
+
+
+def test_mmpp_long_run_rate_matches_stationary():
+    proc = MMPPProcess(base_rate_per_s=0.5, burst_rate_per_s=4.0,
+                       mean_off_ms=20_000.0, mean_on_ms=5_000.0)
+    iats = proc.iats_ms(np.random.RandomState(3), 40_000)
+    got = len(iats) / iats.sum()
+    assert got == pytest.approx(proc.mean_rate_per_ms(), rel=0.05)
+
+
+def test_mmpp_is_overdispersed_relative_to_poisson():
+    """Index of dispersion of counts > 1 — the defining burstiness
+    property (a Poisson process has IDC = 1)."""
+    proc = MMPPProcess(base_rate_per_s=0.5, burst_rate_per_s=4.0,
+                       mean_off_ms=20_000.0, mean_on_ms=5_000.0)
+    times = np.cumsum(proc.iats_ms(np.random.RandomState(5), 30_000))
+    window = 10_000.0  # ms; on the order of the phase residence times
+    counts = np.histogram(times, bins=np.arange(0.0, times[-1], window))[0]
+    idc = counts.var() / counts.mean()
+    assert idc > 1.5, idc
+
+
+def test_diurnal_rate_modulates_with_phase():
+    """Thinned arrivals concentrate at the peak: with amplitude 0.5 the
+    peak-half-period count is well above the trough's. A short synthetic
+    period keeps the test fast — the shape is what's under test."""
+    proc = DiurnalPoissonProcess(base_rate_per_s=5.0, amplitude=0.5,
+                                 phase_h=0.0, period_ms=60_000.0)
+    times = np.cumsum(proc.iats_ms(np.random.RandomState(11), 20_000))
+    frac = (times / proc.period_ms) % 1.0
+    # peak is centered at frac 0 (phase_h=0): quarter-period either side
+    peak = np.sum((frac < 0.25) | (frac >= 0.75))
+    trough = np.sum((frac >= 0.25) & (frac < 0.75))
+    assert peak > 1.5 * trough, (peak, trough)
+    assert proc.mean_rate_per_ms() == pytest.approx(5.0 / 1000.0)
+
+
+def test_trace_replay_is_bit_exact_and_seed_independent():
+    trace = TraceProcess((120.0, 30.0, 500.0))
+    a = trace.iats_ms(np.random.RandomState(0), 10)
+    b = trace.iats_ms(np.random.RandomState(999), 10)
+    np.testing.assert_array_equal(a, b)  # draws nothing from the rng
+    # cyclic tiling past the trace length
+    np.testing.assert_array_equal(a[:6], [120.0, 30.0, 500.0] * 2)
+    rng = np.random.RandomState(4)
+    state_before = rng.get_state()[1].copy()
+    trace.iats_ms(rng, 100)
+    np.testing.assert_array_equal(rng.get_state()[1], state_before)
+
+
+def test_trace_from_file_round_trip(tmp_path):
+    p = tmp_path / "trace.txt"
+    p.write_text("# faas-offloading-sim style IAT trace\n"
+                 "100.5\n"
+                 "\n"
+                 "250  # trailing comment\n"
+                 "75\n")
+    trace = TraceProcess.from_file(str(p), name="cust")
+    assert trace.name == "cust"
+    assert trace.iats == (100.5, 250.0, 75.0)
+    assert trace.mean_rate_per_ms() == pytest.approx(3.0 / 425.5)
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        TraceProcess(())
+    with pytest.raises(ValueError):
+        TraceProcess((10.0, -1.0))
+    with pytest.raises(ValueError):
+        TraceProcess((0.0, 0.0))
+
+
+def test_arrival_times_are_sorted_within_horizon():
+    times = arrival_times_ms(PoissonProcess(3.0), np.random.RandomState(8),
+                             duration_ms=120_000.0)
+    assert np.all(np.diff(times) >= 0.0)
+    assert times[-1] < 120_000.0
+    # n ≈ λT: 360 expected, CLT bound ±5σ
+    assert abs(len(times) - 360) < 5 * math.sqrt(360)
+
+
+def test_qos_classes_drawn_by_weight():
+    classes = [QoSClass("batch", weight=1.0), QoSClass("premium", weight=3.0)]
+    idx = draw_classes(np.random.RandomState(21), 8000, classes)
+    assert np.mean(idx == 1) == pytest.approx(0.75, abs=0.02)
+    with pytest.raises(ValueError):
+        QoSClass("bad", weight=0.0)
+
+
+# ---------------------------------------------------------------------------
+# The driver: conservation, Little's law
+# ---------------------------------------------------------------------------
+
+
+def test_conservation_under_finite_queue_loss():
+    """arrived == completed + dropped + pending, with real drops: K=2
+    servers, queue capacity 5, offered 4/s (ρ≈8) — an M/G/c/K loss
+    system. Drops are instant refusals, stamped in drop_events."""
+    plat = _platform(2, queue_capacity=5)
+    run = run_open_loop(plat, PoissonProcess(4.0),
+                        rng=np.random.RandomState(7), duration_ms=60_000.0)
+    assert run.n_arrived == (run.n_completed + run.n_dropped
+                             + run.n_pending_at_end)
+    assert run.n_dropped > 0 and run.drop_rate > 0.5
+    assert len(run.drop_events) == run.n_dropped
+    assert run.process_name == "poisson"
+    # engine-side counters agree with the run's view
+    assert plat.requests_dropped == run.n_dropped
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_littles_law_steady_state(seed):
+    """L = λW on a gate-disabled arm at ρ≈0.5, L measured independently
+    by cadence-sampling N(t) = queue + in-flight + admission-parked.
+    Measured agreement at these seeds is ≤0.3%; 5% is the bound because
+    the sampled L and the per-request W share no code path."""
+    plat = _platform(6, seed=seed)
+    run = run_open_loop(plat, PoissonProcess(1.5),
+                        rng=np.random.RandomState(42 + seed),
+                        duration_ms=600_000.0)
+    assert run.n_pending_at_end == 0  # steady state fully drained
+    lam = run.n_arrived / run.duration_ms
+    W = float(np.mean([r.latency_ms for r in run.results]))
+    L = run.mean_system_population()
+    assert L == pytest.approx(lam * W, rel=0.05), (L, lam * W)
+
+
+# ---------------------------------------------------------------------------
+# Admission under bursts (QueueAwareAdmissionController × MMPP)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def burst_runs():
+    """One pinned MMPP realization (via TraceProcess, so the per-arrival
+    phase flags are known exactly) replayed through: the admission-
+    controlled platform, the same platform without admission, and a
+    Poisson control at the same *realized* rate."""
+    proc = MMPPProcess(base_rate_per_s=0.25, burst_rate_per_s=3.0,
+                       mean_off_ms=40_000.0, mean_on_ms=6_000.0)
+    iats, on = proc.iats_with_phase(np.random.RandomState(2), 500)
+    cum = np.cumsum(iats)
+    trace = TraceProcess(tuple(iats))
+    # one full pass of the trace, and not a single wrapped arrival
+    duration = float(cum[-1] + 0.5 * iats[0])
+    realized_rate = len(iats) / cum[-1] * 1000.0
+
+    adm = _platform(4, admission=True)
+    run_adm = run_open_loop(adm, trace, rng=np.random.RandomState(99),
+                            duration_ms=duration)
+    noadm = _platform(4)
+    run_noadm = run_open_loop(noadm, trace, rng=np.random.RandomState(99),
+                              duration_ms=duration)
+    pois = _platform(4, admission=True)
+    run_pois = run_open_loop(pois, PoissonProcess(realized_rate),
+                             rng=np.random.RandomState(200),
+                             duration_ms=duration)
+    return dict(on=on, cum=cum, adm=adm, run_adm=run_adm, noadm=noadm,
+                run_noadm=run_noadm, run_pois=run_pois)
+
+
+def test_burst_defers_rise_in_on_phase_and_drain(burst_runs):
+    b = burst_runs
+    run = b["run_adm"]
+    # deferral engaged hard during the realization's bursts...
+    assert run.n_defer_decisions > 50
+    assert run.n_deferred_items > 50
+    assert run.defer_rate > 0.1
+    # ...and the system fully drains after the last one
+    assert run.n_pending_at_end == 0
+    assert run.n_arrived == run.n_completed + run.n_dropped
+    # phase-conditioned pressure: every completion maps back to its trace
+    # index (arrival time = completion − latency, exact by construction),
+    # so waits split by the phase the arrival landed in
+    arr = np.array([r.t_completed_ms - r.latency_ms for r in run.results])
+    idx = np.clip(np.searchsorted(b["cum"], arr + 1e-6), 0,
+                  len(b["cum"]) - 1)
+    waits = np.array([r.queue_wait_ms for r in run.results])
+    on_mask = b["on"][idx]
+    assert on_mask.any() and (~on_mask).any()
+    assert waits[on_mask].mean() > 3.0 * waits[~on_mask].mean()
+
+
+def test_burstiness_not_mean_rate_drives_deferral(burst_runs):
+    """A Poisson control at the SAME realized rate barely defers: the
+    admission pressure is the on-phase's doing, which a mean-rate ladder
+    cannot see (the point of the MMPP satellite)."""
+    b = burst_runs
+    assert b["run_pois"].n_defer_decisions < 0.2 * b["run_adm"].n_defer_decisions
+
+
+def test_admission_does_not_increase_churn(burst_runs):
+    """Deferral smooths the same offered load through the same K-capped
+    supply: it must never create extra instance churn over the
+    no-admission baseline on the identical trace."""
+    b = burst_runs
+    assert b["adm"].instances_started <= b["noadm"].instances_started
+    assert b["run_adm"].n_completed == b["run_noadm"].n_completed
+
+
+# ---------------------------------------------------------------------------
+# Survivorship bias (metrics.OpenLoopSummary)
+# ---------------------------------------------------------------------------
+
+
+def test_wait_p99_includes_censored_waits_under_overload():
+    """Regression for the survivorship bias: at ρ≈8 with a bounded drain
+    only ~1/4 of arrivals complete, so completed-only percentiles look at
+    the lucky survivors. wait_p99_ms folds in the censored waits of the
+    stuck majority and must exceed the completed-only figure."""
+    plat = _platform(2)
+    run = run_open_loop(plat, PoissonProcess(4.0),
+                        rng=np.random.RandomState(7),
+                        duration_ms=60_000.0, drain_limit_ms=1.0)
+    assert run.n_pending_at_end > run.n_completed  # genuinely overloaded
+    assert len(run.censored_waits_ms) > 0
+    s = OpenLoopSummary.from_run("overload", plat, run)
+    assert s.wait_p99_ms > s.completed_wait_p99_ms
+    assert s.n_arrived == run.n_arrived
+    assert s.process == "poisson"
+    # the censored waits really are censored at the final clock, not the
+    # arrival horizon
+    assert max(run.censored_waits_ms) <= plat.loop.now
+
+
+def test_open_loop_summary_on_healthy_run():
+    plat = _platform(6)
+    run = run_open_loop(plat, PoissonProcess(1.0),
+                        rng=np.random.RandomState(1), duration_ms=120_000.0)
+    s = OpenLoopSummary.from_run("healthy", plat, run)
+    assert s.n_dropped == 0 and s.drop_rate == 0.0
+    assert s.p50_latency_ms <= s.p95_latency_ms <= s.p99_latency_ms
+    # no queueing to speak of: the honest and the survivor views coincide
+    assert s.wait_p99_ms == pytest.approx(s.completed_wait_p99_ms, abs=1.0)
+    assert s.cost_per_1k > 0.0
+    assert s.mean_system_population == pytest.approx(
+        run.n_arrived / run.duration_ms
+        * float(np.mean([r.latency_ms for r in run.results])), rel=0.1)
