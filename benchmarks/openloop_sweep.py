@@ -144,10 +144,10 @@ def _pool(summaries, field) -> float:
 def _vec_leg(smoke: bool, seeds, n_steps: int, rate_per_s: float):
     """The jitted open scan on the Poisson × {off, fixed} cells: wall
     clock per lane + the zero-recompile guard, mirroring grid_sweep."""
-    max_retries = 3 if smoke else 5  # smoke trims the unrolled retry chain
+    max_retries = 3 if smoke else 5
     arms = stack_arms([
         arm_from_spec(SPEC, VM, profile=prof, gate=gate, threshold=THRESHOLD,
-                      max_retries=max_retries)
+                      max_retries=max_retries, think_time_ms=0.0)
         for prof in _profiles() for gate in ("off", "fixed")
     ])
     proc = PoissonProcess(rate_per_s)
@@ -255,6 +255,140 @@ def openloop_sweep(quick: bool = False, *, smoke: bool = False,
     return rows, headline, perf
 
 
+def vec_admission_sweep(quick: bool = False, *, smoke: bool = False,
+                        report_timing: bool = True):
+    """Admission-pipeline arms through the jitted open scan (ISSUE 7): the
+    in-scan defer (static admission bound) and drop (finite queue) paths
+    as vectorized rate-ladder cells, summarized via
+    :meth:`OpenLoopSummary.from_vec`.
+
+    Three gate-fixed arms per profile: unbounded (the PR 6 scenario),
+    ``+admit`` deferring at :func:`repro.core.control.static_admission_bound`
+    over the N_SERVERS supply cap, and ``+drop`` shedding arrivals at a
+    finite wait queue. Every rate reuses one compiled program (the iats
+    batch shape is static); the event reference is the same scenario
+    through :func:`run_open_loop`. Returns (rows, headline, perf)."""
+    from repro.core.control import static_admission_bound
+
+    if smoke:
+        profiles = _profiles()[:1]
+        rates = (0.9,)
+        vec_seeds, n_steps = range(4), 200
+        ev_arms = 2
+    elif quick:
+        profiles = _profiles()[:1]
+        rates = (0.6, 0.9)
+        vec_seeds, n_steps = range(8), 300
+        ev_arms = 2
+    else:
+        profiles = _profiles()
+        rates = (0.6, 0.9, 1.2)
+        vec_seeds, n_steps = range(16), 400
+        ev_arms = 3
+
+    knobs = dataclasses.replace(_profiles()[0].knobs(),
+                                max_instances=N_SERVERS)
+    bound = static_admission_bound(knobs, headroom=1.25)
+    arms, meta = [], []
+    for prof in profiles:
+        base = arm_from_spec(SPEC, VM, profile=prof, gate="fixed",
+                             threshold=THRESHOLD, think_time_ms=0.0)
+        for mode, arm in (
+                ("fixed", base),
+                ("fixed+admit", base._replace(admit_bound=bound)),
+                ("fixed+drop", base._replace(
+                    queue_capacity=float(2 * N_SERVERS)))):
+            arms.append(arm)
+            meta.append({"platform": prof.name, "mode": mode})
+    stacked = stack_arms(arms)
+
+    results, t_first, t_cached = {}, 0.0, math.inf
+    compiles_before = jit_stats["compiles"]
+    for rate in rates:
+        proc = PoissonProcess(rate)
+        iats = np.stack([
+            proc.iats_ms(np.random.RandomState(11_000 + i), n_steps)
+            for i in vec_seeds])
+        t0 = time.perf_counter()
+        results[rate] = simulate_open_arms(
+            stacked, seeds=vec_seeds, iats_ms=iats, n_servers=N_SERVERS,
+            collect_requests=True)
+        dt = time.perf_counter() - t0
+        if rate == rates[0]:
+            t_first = dt
+            compiles_after_first = jit_stats["compiles"]
+            for _ in range(2):  # cached rerun of the first rate's batch
+                t0 = time.perf_counter()
+                simulate_open_arms(stacked, seeds=vec_seeds, iats_ms=iats,
+                                   n_servers=N_SERVERS,
+                                   collect_requests=True)
+                t_cached = min(t_cached, time.perf_counter() - t0)
+    recompiles = jit_stats["compiles"] - compiles_after_first
+    assert jit_stats["compiles"] - compiles_before >= 1  # first batch compiled
+    lanes = len(meta) * len(list(vec_seeds))
+
+    # event reference: the same capped-supply scenario per arm
+    best = math.inf
+    prof0 = profiles[0]
+    duration_ms = n_steps / rates[0] * 1e3
+    for _ in range(2):
+        t0 = time.perf_counter()
+        for seed in range(ev_arms):
+            plat = _platform(prof0, "fixed", seed)
+            run_open_loop(plat, PoissonProcess(rates[0]),
+                          rng=np.random.RandomState(13_000 + seed),
+                          duration_ms=duration_ms, drain_limit_ms=120_000.0)
+        best = min(best, (time.perf_counter() - t0) / ev_arms)
+    ev_per_arm = best
+    vec_per_lane = t_cached / lanes
+    speedup = ev_per_arm / vec_per_lane
+
+    rows = []
+    for rate in rates:
+        res = results[rate]
+        for i, m in enumerate(meta):
+            s = OpenLoopSummary.from_vec(m["mode"], res, arm=i)
+            rows.append({
+                "platform": m["platform"],
+                "mode": m["mode"],
+                "rate_per_s": rate,
+                "p99_ms": round(s.p99_latency_ms, 1),
+                "wait_p99_ms": round(s.wait_p99_ms, 1),
+                "drop_pct": round(100 * s.drop_rate, 2),
+                "defer_pct": round(100 * s.defer_rate, 2),
+                "cost_per_1k": round(s.cost_per_1k, 4),
+            })
+
+    top = max(rates)
+    by = {(r["platform"], r["mode"], r["rate_per_s"]): r for r in rows}
+    plain = by[(profiles[0].name, "fixed", top)]["wait_p99_ms"]
+    admit = by[(profiles[0].name, "fixed+admit", top)]["wait_p99_ms"]
+    cut = (1.0 - admit / plain) * 100 if plain > 0 else 0.0
+    headline = (f"cells={len(rows)}_{profiles[0].name}_r{top:.1f}"
+                f"_admit_wait_p99_cut={cut:.0f}%")
+    perf = {
+        "n_cells": len(rows),
+        "vec_lanes": lanes,
+        "vec_n_steps": n_steps,
+        "wall_clock_s": round(t_cached, 4),
+        "compile_s": round(t_first - t_cached, 4),
+        "events_per_sec": round(lanes * n_steps / t_cached, 1),
+        "arms_per_sec": round(len(meta) / t_cached, 2),
+        "event_engine_per_arm_s": round(ev_per_arm, 5),
+        "speedup_per_arm": round(speedup, 1),
+        "jit_recompiles_second_batch": recompiles,
+        "admit_bound": bound,
+    }
+    if report_timing:
+        print(f"vec_admission timing: cells={len(rows)} lanes={lanes} "
+              f"steps={n_steps} first={t_first:.2f}s cached={t_cached:.2f}s "
+              f"events/s={perf['events_per_sec']:.0f} "
+              f"event_per_arm={ev_per_arm*1e3:.1f}ms "
+              f"speedup={speedup:.0f}x recompiles={recompiles}",
+              file=sys.stderr)
+    return rows, headline, perf
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -262,13 +396,18 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI cell set; asserts the vec zero-recompile "
                          "guard; deterministic stdout (timing on stderr)")
+    ap.add_argument("--admission", action="store_true",
+                    help="run the vec-admission (defer/drop in-scan) leg "
+                         "instead of the event-engine rate ladder")
     args = ap.parse_args()
-    rows, headline, perf = openloop_sweep(quick=args.quick, smoke=args.smoke)
+    sweep = vec_admission_sweep if args.admission else openloop_sweep
+    name = "vec_admission_sweep" if args.admission else "openloop_sweep"
+    rows, headline, perf = sweep(quick=args.quick, smoke=args.smoke)
     if args.smoke:
         assert perf["jit_recompiles_second_batch"] == 0, \
             f"second vec batch recompiled: {perf}"
-        print("openloop_sweep_smoke_guards,jit_cache_hit=ok", file=sys.stderr)
-    print(f"openloop_sweep,{headline}")
+        print(f"{name}_smoke_guards,jit_cache_hit=ok", file=sys.stderr)
+    print(f"{name},{headline}")
     cols = list(rows[0].keys())
     print(",".join(cols))
     for r in rows:

@@ -45,11 +45,16 @@ def _print_delta(prev: dict, cur: dict) -> None:
     new = sum(cur_r[n]["wall_clock_s"] for n in common)
     parts = [f"total {old:.1f}s->{new:.1f}s ({(new - old) / old * 100:+.0f}%)"
              if old > 0 else f"total {new:.1f}s"]
-    g_old = prev_r.get("grid_sweep", {}).get("arms_per_sec")
-    g_new = cur_r.get("grid_sweep", {}).get("arms_per_sec")
-    if g_old and g_new:
-        parts.append(f"grid {g_old:.0f}->{g_new:.0f} arms/s "
-                     f"({(g_new - g_old) / g_old * 100:+.0f}%)")
+    for sweep, short in (("grid_sweep", "grid"),
+                         ("loadaware_sweep", "loadaware"),
+                         ("vec_admission_sweep", "vec-admission")):
+        g_old = prev_r.get(sweep, {}).get("events_per_sec")
+        g_new = cur_r.get(sweep, {}).get("events_per_sec")
+        if g_old and g_new:
+            parts.append(f"{short} {g_old:.0f}->{g_new:.0f} events/s "
+                         f"({(g_new - g_old) / g_old * 100:+.0f}%)")
+        elif g_new:
+            parts.append(f"{short} {g_new:.0f} events/s (new)")
     print(f"BENCH delta vs previous ({len(common)} sweeps): "
           + ", ".join(parts))
 
@@ -76,8 +81,13 @@ def main() -> None:
         "pipeline_admission": pipeline_sweep.admission_sweep,
         # vectorized Monte-Carlo fast path (DESIGN.md §11)
         "grid_sweep": grid_sweep.grid_sweep,
+        # n-streams-per-lane slot pool: concurrency-4 load**alpha arms on
+        # the scan (ISSUE 7; DESIGN.md §11)
+        "loadaware_sweep": grid_sweep.loadaware_sweep,
         # open-loop arrival traffic: rate × burstiness × gate (DESIGN.md §12)
         "openloop_sweep": openloop_sweep.openloop_sweep,
+        # in-scan admission pipeline: defer/drop arms on the open scan
+        "vec_admission_sweep": openloop_sweep.vec_admission_sweep,
         "fig4_regression_duration": figs.fig4_regression_duration,
         "fig5_successful_requests": figs.fig5_successful_requests,
         "fig6_cost_per_day": figs.fig6_cost_per_day,

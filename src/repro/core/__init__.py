@@ -12,6 +12,7 @@ from .control import (
     ReuseDecision,
     Telemetry,
     lognormal_pool_speedup,
+    static_admission_bound,
 )
 from .cost import Pricing, WorkflowCost, total_cost
 from .elysium import (
@@ -61,6 +62,7 @@ __all__ = [
     "AdmitDecision", "ClassicMinosController", "Controller", "ControllerBase",
     "PassFractionController", "ProbeDecision", "QueueAwareAdmissionController",
     "ReprobeController", "ReuseDecision", "Telemetry", "lognormal_pool_speedup",
+    "static_admission_bound",
     "Pricing", "WorkflowCost", "total_cost",
     "OnlineElysiumController", "PretestReport", "optimal_pass_fraction",
     "pretest_threshold", "run_pretest",

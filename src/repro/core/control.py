@@ -765,6 +765,33 @@ class QueueAwareAdmissionController(DelegatingController):
         return AdmitDecision.ADMIT
 
 
+def static_admission_bound(knobs: Any, *, headroom: float = 2.0,
+                           min_slots: int = 1) -> float:
+    """Static in-flight cap matching :class:`QueueAwareAdmissionController`.
+
+    The vectorized open-loop scan (``repro.sim.vectorized``) cannot call a
+    live controller per arrival, so it takes the admission bound as a
+    number (``ArmParams.admit_bound``) and defers while
+    ``in_flight >= bound``.  This helper derives that number from the same
+    capacity formula the dynamic controller uses — replica budget
+    (``max_pool``, else ``max_instances``) × per-instance concurrency ×
+    headroom — minus the live-pool fallback, which has no static
+    equivalent.  With no replica cap at all the supply is elastic and the
+    bound is ``inf`` (admission never defers).
+    """
+    if headroom <= 0.0:
+        raise ValueError("headroom must be > 0")
+    if min_slots < 1:
+        raise ValueError("min_slots must be >= 1")
+    budget = getattr(knobs, "max_pool", None)
+    if budget is None:
+        budget = getattr(knobs, "max_instances", None)
+    if budget is None:
+        return math.inf
+    capacity = budget * knobs.per_instance_concurrency
+    return float(max(min_slots, math.ceil(headroom * capacity)))
+
+
 # ---------------------------------------------------------------------------
 # ReprobeController — ROADMAP: re-probing under drift
 # ---------------------------------------------------------------------------
@@ -852,4 +879,5 @@ __all__ = [
     "ReuseDecision",
     "Telemetry",
     "lognormal_pool_speedup",
+    "static_admission_bound",
 ]

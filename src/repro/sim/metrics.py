@@ -167,6 +167,65 @@ class OpenLoopSummary:
             n_terminated=engine.instances_terminated,
         )
 
+    @staticmethod
+    def from_vec(name: str, result, arm: int = 0, *,
+                 process: str = "poisson") -> "OpenLoopSummary":
+        """Summarize one arm of a vectorized open-loop run
+        (:func:`repro.sim.vectorized.simulate_open_arms` with
+        ``collect_requests=True``), pooled across seeds.
+
+        Mirrors :meth:`from_run` with one censoring caveat: the scan does
+        not expose per-request censored waits for requests still parked
+        when the horizon ends (``n_parked_end``), so ``wait_p99_ms`` here
+        pools completed requests' waits plus a zero per drop — the parked
+        tail is omitted rather than guessed. ``n_parked_end`` is small at
+        the calibrated loads (≲1 per lane; tests/test_vectorized_parity.py)
+        and the omission biases ``wait_p99_ms`` *down*, so treat it as a
+        floor under heavy overload. ``mean_system_population`` is Little's
+        L from completed work only: Σ latency / horizon, per seed, then
+        averaged."""
+        if result.requests is None:
+            raise ValueError(
+                "OpenLoopSummary.from_vec needs per-request rows; rerun "
+                "simulate_open_arms with collect_requests=True")
+        s = {k: np.asarray(v[arm], float) for k, v in result.summary.items()}
+        # (n_seeds, n_steps, D+1) rows; only `completed` rows carry a request
+        comp = np.asarray(result.requests["completed"][arm]).astype(bool)
+        lat = np.asarray(result.requests["latency_ms"][arm], float)
+        wait = np.asarray(result.requests["wait_ms"][arm], float)
+        n_arrived = int(s["n_requests"].sum())
+        n_completed = int(s["n_completed"].sum())
+        n_dropped = int(s["n_dropped"].sum())
+        lat_c = lat[comp] if comp.any() else np.asarray([np.nan])
+        wait_c = wait[comp] if comp.any() else np.asarray([0.0])
+        all_waits = np.concatenate([wait_c, np.zeros(n_dropped)]) \
+            if (comp.any() or n_dropped) else np.asarray([0.0])
+        # per-seed Little's L, then mean over seeds
+        horizon = np.maximum(s["horizon_ms"], 1.0)
+        lat_sum = np.where(comp, lat, 0.0).sum(axis=(1, 2))
+        total_cost = float(s["cost"].sum())
+        return OpenLoopSummary(
+            name=name,
+            process=process,
+            n_arrived=n_arrived,
+            n_completed=n_completed,
+            n_dropped=n_dropped,
+            n_deferred=int(s["n_deferred"].sum()),
+            drop_rate=n_dropped / max(n_arrived, 1),
+            defer_rate=int(s["n_deferred"].sum()) / max(n_arrived, 1),
+            mean_latency_ms=float(lat_c.mean()),
+            p50_latency_ms=float(np.percentile(lat_c, 50)),
+            p95_latency_ms=float(np.percentile(lat_c, 95)),
+            p99_latency_ms=float(np.percentile(lat_c, 99)),
+            completed_wait_p99_ms=float(np.percentile(wait_c, 99)),
+            wait_p99_ms=float(np.percentile(all_waits, 99)),
+            mean_system_population=float((lat_sum / horizon).mean()),
+            total_cost=total_cost,
+            cost_per_1k=total_cost / max(n_completed, 1) * 1e3,
+            n_instance_starts=int(s["n_started"].sum()),
+            n_terminated=int(s["n_terminated"].sum()),
+        )
+
 
 def cost_timeline(
     results: list[RequestResult],

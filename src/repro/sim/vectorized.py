@@ -14,16 +14,25 @@ in tests/test_vectorized_parity.py).
 
 Model scope — what the fast path deliberately is:
 
-* a **closed-loop single request stream** (the event engine at
-  ``n_vus=1``): each scan step is one invocation driven to completion,
-  think time between steps. Per-instance request concurrency, the
-  load-slowdown curve, and load-aware gating therefore never engage.
+* a **closed-loop pool of ``n_streams`` request streams** (the event
+  engine at ``n_vus=n_streams``): each scan step is the next stream's
+  invocation driven to completion, think time between a stream's
+  requests. At ``n_streams=1`` this is the paper's single-stage loop
+  bit-for-bit (the original fast path); at ``n_streams>1`` pool slots
+  carry live in-flight occupancy (derived each step from the stream
+  completion horizons), the select tournament honors the least-loaded
+  "spread" order, warm bodies pay the ``load**alpha`` self-contention
+  factor, and ``gate_load_aware`` judges cold probes at the pool's live
+  mean occupancy — the load-aware arms that previously fell back to the
+  event engine.
 * the classic decision stack only: gate off (baseline), a fixed elysium
   threshold, or the §IV adaptive policy (P² quantile + EMA republish,
   the exact :class:`~repro.core.policy.AdaptiveMinosPolicy` estimator,
   running on-device via :class:`~repro.core.estimators.P2State`).
-  Workflows, serving bodies, admission control, re-probing and the other
-  control-plane handlers stay on the event engine.
+  Workflows, serving bodies, re-probing and the other control-plane
+  handlers stay on the event engine; static admission bounds and finite
+  queue buffers run in-scan on the open-loop variant
+  (:func:`simulate_open_arms`).
 * a fixed-capacity array pool: LIFO/FIFO/spread reuse orders are gather
   indices over (validity-masked) slot arrays; idle-timeout and exponential
   recycle deadlines reclaim slots exactly where the event pool would.
@@ -42,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Any, NamedTuple, Optional
 
 import jax
@@ -107,6 +117,13 @@ class ArmParams(NamedTuple):
     think_time_ms: Any
     cost_per_invocation: Any
     cost_per_ms: Any
+    # load-aware slots (defaults reproduce the single-stream model)
+    concurrency: Any = 1           # per-slot request capacity (int32)
+    load_slowdown_alpha: Any = 0.0  # body pays load**alpha when load > 1
+    gate_load_aware: Any = 0.0     # 1.0: judge probes at live mean load
+    # open-loop loss/admission (inf = knob disabled)
+    queue_capacity: Any = math.inf  # arrivals finding >= this many waiting drop
+    admit_bound: Any = math.inf    # defer while in_service + waiting >= bound
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,13 +134,20 @@ class SimConfig:
     # One slot is exact for the single-stream model: a cold start only
     # happens when NO pooled instance is valid (so every slot is dead and
     # placement reuses slot 0), and a warm serve rewrites its own slot —
-    # the pool can never hold two live instances. K>1 is kept for future
-    # multi-stream extensions.
+    # the pool can never hold two live instances. Multi-stream runs need
+    # pool_size >= n_streams (enforced by simulate_arms): at any cold
+    # start the other n_streams-1 streams occupy at most n_streams-1
+    # slots, so a load-0 slot — necessarily dead, else it would have
+    # served warm — always exists for placement.
     pool_size: int = 1
     max_attempts: int = 6      # must exceed every arm's max_retries
     collect_requests: bool = False
     adaptive: bool = True      # False: no arm uses GATE_ADAPTIVE — skip P²
     diurnal: bool = True       # False: every arm has amplitude 0 — skip cos
+    # Closed-loop virtual users sharing the slot pool (event engine's
+    # n_vus). 1 keeps the original single-stream step (and its compiled
+    # program) untouched; >1 switches to the slot-occupancy step.
+    n_streams: int = 1
 
 
 class _ColdResult(NamedTuple):
@@ -155,12 +179,64 @@ class _Pool(NamedTuple):
     chain of elementwise selects, which XLA fuses into the surrounding
     step kernel — batched gathers/argmax/scatter over a (K,) axis each
     cost a separate kernel pass on CPU, and the profiler showed those
-    passes dominating the sweep wall-clock."""
+    passes dominating the sweep wall-clock.
 
-    log_speed: tuple   # log-space: AR(1) drift needs no log/exp
-    last_used: tuple
-    recycle: tuple     # absolute deadline (inf = never)
-    alive: tuple
+    Multi-stream runs (``n_streams > 1``) store ``(K,)`` *arrays* in the
+    same fields instead: at K = n_streams = 8 the unrolled select chains
+    exploded XLA's compile time (minutes), while argmin/scatter over a
+    tiny (K,) axis compiles in seconds — and the multi-stream step is
+    cold-chain-dominated anyway, so the per-step gather cost is noise."""
+
+    log_speed: Any     # log-space: AR(1) drift needs no log/exp
+    last_used: Any
+    recycle: Any       # absolute deadline (inf = never)
+    alive: Any
+    # Multi-stream only (None prunes it from single-stream carries): the
+    # time a cold-placed slot finishes its first serve. Until then the
+    # slot is mid-cold-start and not reusable — the event pool's
+    # admit_cold instance, in flight but never yet released.
+    avail_from: Any = None
+    # Multi-stream only: the time the slot last ENTERED the event pool's
+    # available list — the heap key's ``_avail_seq`` position rendered as
+    # a timestamp. Instances enter at their first release (admit_cold)
+    # and re-enter when a completion drops them back below capacity;
+    # while they hover below capacity the seq is FROZEN, so load ties
+    # break by a near-static priority order. That staleness is
+    # load-bearing for parity: the last slot in the priority order is
+    # starved of tie traffic and only receives arrivals in synchronized
+    # bursts when it is strictly least-loaded — bursts co-complete, the
+    # slot drains to idle, and the pool shrinks at the event engine's
+    # rate. (Tie-breaking on any *recency* signal instead spreads ties
+    # evenly, phase-locks the streams, and the shrink never happens —
+    # measured: a 3-slot pool with zero drains over 1400 s vs the event
+    # engine's one per 30–180 s.)
+    avail_seq: Any = None
+    # Multi-stream only: the take time that filled the slot to capacity
+    # (inf = currently in the available list). The first completion after
+    # it re-enters the slot into the list with a fresh avail_seq.
+    filled_at: Any = None
+
+
+class _Streams(NamedTuple):
+    """Closed-loop virtual users (n_streams > 1): (S,) arrays.
+
+    Per-slot in-flight occupancy is DERIVED each step from these
+    completion horizons (``load_k = Σ_s [slot_s == k ∧ ended_s > t]``)
+    rather than carried as counters: the scan processes stream events in
+    ``next_ready`` order, so a carried counter could only be decremented
+    when the *completed* stream's next request is processed — after other
+    streams already observed a stale count. The derived form charges each
+    completion at its true completion time."""
+
+    next_ready: Any  # when the stream next dispatches (submit or retry)
+    ended: Any       # the stream's in-flight horizon on its slot
+    slot: Any        # pool slot that served it (int32; -1 = none yet)
+    # Retry-as-step bookkeeping (one scan step = ONE cold attempt; a
+    # TERMINATEd probe re-fires the stream at the requeue time instead of
+    # looping inside the step — see _step_multi):
+    req_start: Any   # current request's first dispatch time (latency anchor)
+    retries: Any     # failed attempts of the current request (i32)
+    pend_bill: Any   # billed ms of those failed attempts (request row total)
 
 
 class VecState(NamedTuple):
@@ -184,6 +260,7 @@ class VecState(NamedTuple):
     db_term: Any
     db_pass: Any
     db_reuse: Any
+    streams: Any = None          # _Streams when n_streams > 1, else pruned
 
 
 def _diurnal(t_ms, amplitude, phase_h):
@@ -216,10 +293,17 @@ def _attempt_values(params: ArmParams, consts, su, J, day_mean, log_day, i):
 
 
 def _cold_chain_fixed(params, cfg, consts, su, J, day_mean, log_day,
-                      served_cold, state) -> _ColdResult:
+                      served_cold, state, judge_mult=None) -> _ColdResult:
     """The retry chain for attempt-invariant gates (off / fixed
     threshold): an unrolled chain of scalar selects — no P², no
-    sequential estimator feedback — the grid sweep's hot path."""
+    sequential estimator feedback — the grid sweep's hot path.
+
+    ``judge_mult`` (load-aware gating, multi-stream only; ``None`` keeps
+    the single-stream graph byte-identical) inflates the JUDGED probe
+    duration to the effective speed at the pool's live occupancy — the
+    raw observation still feeds the Welford/threshold estimators, exactly
+    as :meth:`~repro.core.control.ElysiumGate.judge` records raw and
+    judges effective."""
     f32 = jnp.float32
     z = jnp.zeros((), f32)
     pending = served_cold
@@ -242,7 +326,8 @@ def _cold_chain_fixed(params, cfg, consts, su, J, day_mean, log_day,
         cold, download, bench, log_bench, analysis, log_speed = \
             _attempt_values(params, consts, su, J, day_mean, log_day, i)
         probed = (params.gate_mode > 0) & (i < params.max_retries)
-        passes = (~probed) | (bench <= thr)
+        b_eff = bench if judge_mult is None else bench * judge_mult
+        passes = (~probed) | (b_eff <= thr)
         feed = jnp.asarray(pending & probed, f32)
         accept = pending & passes
         fail = jnp.asarray(pending & ~passes, f32)
@@ -284,11 +369,13 @@ def _cold_chain_fixed(params, cfg, consts, su, J, day_mean, log_day,
 
 
 def _cold_chain_adaptive(params, cfg, consts, su, J, day_mean, log_day,
-                         served_cold, state) -> _ColdResult:
+                         served_cold, state, judge_mult=None) -> _ColdResult:
     """The retry chain when the §IV adaptive threshold is live: every
     probed attempt reports to the on-device P² quantile + EMA republish
     (the exact :class:`~repro.core.policy.AdaptiveMinosPolicy` estimator)
-    BEFORE being judged, so attempts are sequential within the step."""
+    BEFORE being judged, so attempts are sequential within the step.
+    ``judge_mult``: see :func:`_cold_chain_fixed` — estimators always see
+    the raw observation; only the pass/terminate comparison inflates."""
     f32 = jnp.float32
     z = jnp.zeros((), f32)
     c = _ColdResult(
@@ -327,7 +414,8 @@ def _cold_chain_adaptive(params, cfg, consts, su, J, day_mean, log_day,
         thr = jnp.where(params.gate_mode == GATE_FIXED, params.threshold,
                         jnp.where(params.gate_mode == GATE_ADAPTIVE,
                                   thr_adaptive, jnp.inf))
-        passes = (~probed) | (bench <= thr)
+        b_eff = bench if judge_mult is None else bench * judge_mult
+        passes = (~probed) | (b_eff <= thr)
         accept = pending & passes
         fail = pending & ~passes
         failf = jnp.asarray(fail, f32)
@@ -487,10 +575,340 @@ def _step(params: ArmParams, cfg: SimConfig, consts: dict,
     return new_state, out
 
 
+def _judge_one(params, cfg, est, bench, log_bench, probed):
+    """One gate judgment in the retry-as-step models: feed the raw probe
+    observation to the estimator stack (Welford moments, plus the
+    P²/EMA republish pipeline when ``cfg.adaptive``), then return the
+    active threshold to compare the judged — possibly load-inflated —
+    duration against. ``est`` is the 7-tuple ``(probe_w, log_probe_w,
+    n_probes, p2, ema, ema_init, since_publish)`` pulled off a
+    :class:`VecState` or :class:`OpenState` carry; the updated tuple is
+    returned alongside ``thr`` so a step can judge several dispatches
+    sequentially (the open-loop step judges a parked re-offer and the
+    step's own arrival in one pass)."""
+    probe_w, log_probe_w, n_probes, p2, ema, ema_init, since = est
+    probe_w = welford_update_masked(probe_w, bench, probed)
+    log_probe_w = welford_update_masked(log_probe_w, log_bench, probed)
+    n_probes = n_probes + jnp.asarray(probed, jnp.int32)
+    if cfg.adaptive:
+        p2 = _wsel(probed, p2_update(p2, bench), p2)
+        since = since + jnp.asarray(probed, jnp.int32)
+        publish = probed & (since >= params.republish_every)
+        p2v = p2_value(p2)
+        ema = jnp.where(
+            publish,
+            jnp.where(ema_init,
+                      params.smoothing_alpha * p2v
+                      + (1.0 - params.smoothing_alpha) * ema,
+                      p2v),
+            ema)
+        ema_init = ema_init | publish
+        since = jnp.where(publish, 0, since)
+        thr_adaptive = jnp.where(
+            n_probes >= params.warmup_reports,
+            jnp.where(ema_init, ema, p2v), jnp.inf)
+        thr = jnp.where(params.gate_mode == GATE_FIXED, params.threshold,
+                        jnp.where(params.gate_mode == GATE_ADAPTIVE,
+                                  thr_adaptive, jnp.inf))
+    else:
+        thr = jnp.where(params.gate_mode == GATE_FIXED, params.threshold,
+                        jnp.inf)
+    return (probe_w, log_probe_w, n_probes, p2, ema, ema_init, since), thr
+
+
+def _step_multi(params: ArmParams, cfg: SimConfig, consts: dict,
+                state: VecState, draws):
+    """One invocation step of the ``n_streams > 1`` closed-loop model.
+
+    The step fires the stream with the earliest ``next_ready`` (ties →
+    lowest index, the event loop's FIFO order at equal timestamps), so
+    step times are non-decreasing and every stream completion earlier
+    than the current dispatch has already been accounted. Pool slots
+    carry live in-flight occupancy (see :class:`_Streams`): warm
+    selection masks full slots, ``order="spread"`` picks the least
+    loaded, warm bodies pay the ``(load+1)**alpha`` self-contention
+    factor at their observed occupancy, and ``gate_load_aware`` arms
+    judge every cold attempt at the pool's live mean occupancy. A cold
+    TERMINATE does not loop inside the step: the stream re-fires at the
+    requeue time (retry-as-step), so each retry is judged at fresh
+    occupancy and can be rescued by a warm slot that freed meanwhile —
+    the event dispatcher's requeue semantics. One scan step is therefore
+    one dispatch ATTEMPT; steps whose probe fails complete no request
+    (``completed`` in the collected rows, ``n_completed`` in summaries).
+
+    Unlike the single-stream step's tuple-of-scalars pool, this step
+    keeps ``(K,)``/``(S,)`` arrays: the tournaments become ``argmin``
+    reductions instead of unrolled select chains — at K = S = 8 the
+    unrolled form made XLA's fusion search blow past minutes of compile
+    time, while the array form compiles in seconds and the (small)
+    per-step gather cost is dwarfed by the cold-chain math."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    K = cfg.pool_size
+    S = cfg.n_streams
+    u, ex = draws
+    su = u * consts["scale_vec"]
+    J = jnp.exp(su)
+
+    st = state.streams
+    # ---- which stream fires (argmin keeps the lowest index on ties,
+    # the event loop's FIFO order at equal timestamps) ------------------
+    s_star = jnp.argmin(st.next_ready)
+    t0 = st.next_ready[s_star]
+
+    if cfg.diurnal:
+        dv = _diurnal(t0, params.diurnal_amplitude, params.diurnal_phase_h)
+        day_mean = params.day_factor * dv
+        log_day = consts["log_df"] + jnp.log(dv)
+    else:
+        day_mean = params.day_factor
+        log_day = consts["log_df"]
+
+    # ---- per-slot live occupancy, exact at t0 --------------------------
+    pool = state.pool
+    in_flight = (st.slot >= 0) & (st.ended > t0)
+    load = jnp.zeros((K,), i32).at[jnp.clip(st.slot, 0)].add(
+        in_flight.astype(i32))
+    # fold available-list re-entries: a slot taken to capacity left the
+    # list (filled_at finite); the first completion after that re-admits
+    # it with a fresh position seq. Completions stay visible from their
+    # end time until the stream fires again — and the firing step folds
+    # before it overwrites — so the earliest qualifying end is never lost.
+    vis = (st.slot >= 0) & (st.ended <= t0)
+    rejoin_ok = vis & (st.ended > pool.filled_at[jnp.clip(st.slot, 0)])
+    rejoin = jnp.full((K,), jnp.inf, f32).at[jnp.clip(st.slot, 0)].min(
+        jnp.where(rejoin_ok, st.ended, jnp.inf))
+    rejoined = jnp.isfinite(pool.filled_at) & jnp.isfinite(rejoin)
+    avail_seq = jnp.where(rejoined, rejoin, pool.avail_seq)
+    filled_at = jnp.where(rejoined, jnp.inf, pool.filled_at)
+
+    # ---- warm validity -------------------------------------------------
+    # Busy slots (load > 0) stay takeable while they have spare capacity,
+    # regardless of idle/recycle deadlines (the event pool only reclaims
+    # IDLE instances); idle slots must clear both deadlines; a slot mid
+    # cold start (avail_from > t0) is in flight but was never released —
+    # the event pool's admit_cold instance — and is not reusable yet.
+    idle_ok = ((t0 - pool.last_used) <= params.idle_timeout_ms) \
+        & (t0 < pool.recycle)
+    valid = pool.alive & (pool.avail_from <= t0) \
+        & (load < params.concurrency) & ((load > 0) | idle_ok)
+    any_warm = jnp.any(valid)
+    served_cold = ~any_warm
+
+    # ---- reuse-order tournament (lifo / fifo / spread) -----------------
+    # spread = least loaded, ties by available-list position (see
+    # _Pool.avail_seq — at concurrency 1 the position is the release
+    # time, so this degenerates to fifo exactly as the single-stream
+    # step documents). lifo/fifo ARE list-position orders, so they use
+    # the same seq. argmin over a masked key keeps the lowest index on
+    # exact ties.
+    inf = jnp.asarray(jnp.inf, f32)
+    time_key = jnp.where(params.order == 0, -avail_seq, avail_seq)
+    min_load = jnp.min(jnp.where(valid, load, jnp.asarray(2**31 - 1, i32)))
+    spread_cand = valid & (load == min_load)
+    key = jnp.where(params.order == 2,
+                    jnp.where(spread_cand, avail_seq, inf),
+                    jnp.where(valid, time_key, inf))
+    k_warm = jnp.argmin(key)
+    log_i = pool.log_speed[k_warm]
+    rc_i = pool.recycle[k_warm]
+    load_sel = load[k_warm]
+
+    # ---- cold placement: first dead slot -------------------------------
+    # (pool_size >= n_streams guarantees one exists on a cold start: the
+    # other streams hold < n_streams slots busy, and a load-0 slot that
+    # cleared its deadlines would have served warm instead)
+    dead = ~pool.alive | ((load == 0) & ~idle_ok)
+    k_cold = jnp.argmax(dead)  # first True
+    k_upd = jnp.where(served_cold, k_cold, k_warm)
+    upd = jnp.arange(K) == k_upd
+
+    # ---- warm path: AR(1) drift + load**alpha self-contention ----------
+    rho = params.contention_rho
+    log_drifted = jnp.where(
+        rho >= 1.0, log_i,
+        log_day + rho * (log_i - log_day)
+        + jnp.sqrt(jnp.maximum(1.0 - rho * rho, 0.0)) * su[0])
+    eff_load = jnp.asarray(load_sel + 1, f32)  # incl. this request
+    lmult = jnp.where(
+        (params.load_slowdown_alpha > 0.0) & (eff_load > 1.0),
+        jnp.power(eff_load, params.load_slowdown_alpha), 1.0)
+    download_w = params.prepare_ms * J[1]
+    analysis_w = params.body_ms * J[2] * jnp.exp(-log_drifted) * lmult
+    dur_w = download_w + analysis_w
+
+    # ---- load-aware gate factor (pool mean occupancy at dispatch) ------
+    # counts this request and its cold instance, like the event engine's
+    # Telemetry at judge time (admit_cold puts the probing instance in
+    # the pool with one in-flight request before the gate fires). Each
+    # retry attempt is its own step, so the judge re-reads occupancy at
+    # every re-dispatch exactly like the event controller.
+    live = pool.alive & ((load > 0) | idle_ok)
+    total_if = jnp.sum(load)
+    n_live = jnp.sum(live.astype(i32))
+    mean_load = jnp.maximum(
+        1.0, jnp.asarray(total_if + 1, f32) / jnp.asarray(n_live + 1, f32))
+    judge_mult = jnp.where(
+        (params.gate_load_aware > 0.5) & (params.load_slowdown_alpha > 0.0),
+        jnp.power(mean_load, params.load_slowdown_alpha), 1.0)
+
+    # ---- cold path: ONE probe attempt per step (retry-as-step) ---------
+    # The event engine requeues a TERMINATEd cold probe through the
+    # dispatcher: the retry re-dispatches ~requeue_overhead_ms after the
+    # probe ends, re-reads pool occupancy, and can land on a warm slot
+    # that freed meanwhile. Folding the whole retry chain into the step
+    # that started it (the single-stream model) freezes one occupancy
+    # snapshot across the chain and hides the probing instances from
+    # concurrent streams — under load-aware gating that severs the
+    # saturation → harsh judge → terminate → still-saturated feedback the
+    # event engine exhibits (measured: the frozen snapshot never leaves
+    # mean load 1.0, while the event judges 18% of probes at 1.75–2.5).
+    # A failed attempt completes no request and leaves no trace in the
+    # pool — the event judges and drops the instance synchronously at
+    # dispatch time — and the stream re-fires at the requeue time.
+    cold_ms, download_c, bench, log_bench, analysis_c, log_speed_c = \
+        _attempt_values(params, consts, su, J, day_mean, log_day, 0)
+    r_cur = st.retries[s_star]
+    req_start = jnp.where(r_cur > 0, st.req_start[s_star], t0)
+    probed = served_cold & (params.gate_mode > 0) \
+        & (r_cur < params.max_retries)
+    est = (state.probe_w, state.log_probe_w, state.n_probes, state.p2,
+           state.ema, state.ema_init, state.since_publish)
+    est, thr = _judge_one(params, cfg, est, bench, log_bench, probed)
+    probe_w, log_probe_w, n_probes, p2, ema, ema_init, since = est
+    # estimators see the raw observation; only the verdict inflates, as
+    # ElysiumGate.judge records raw and judges effective
+    passes = (~probed) | (bench * judge_mult <= thr)
+    completed = any_warm | passes
+    cold_pass = served_cold & passes
+    cold_passf = jnp.asarray(cold_pass, f32)
+    failf = jnp.asarray(served_cold & ~passes, f32)
+
+    # ---- merge warm/cold outcomes --------------------------------------
+    ready_c = jnp.where(probed, jnp.maximum(download_c, bench), download_c)
+    analysis = jnp.where(served_cold, analysis_c, analysis_w)
+    t_end = t0 + jnp.where(served_cold, cold_ms + ready_c + analysis_c,
+                           dur_w)
+    probe_end = t0 + cold_ms + bench
+    latency = t_end - req_start
+    billed_final = jnp.where(
+        served_cold, params.bill_cold_start * cold_ms + ready_c + analysis_c,
+        dur_w)
+    bill_fail = params.bill_cold_start * cold_ms + bench
+    log_speed_served = jnp.where(served_cold, log_speed_c, log_drifted)
+
+    # ---- pool update ---------------------------------------------------
+    recycle_new = t0 + jnp.where(
+        jnp.isinf(params.recycle_lifetime_ms), jnp.inf,
+        ex * params.recycle_lifetime_ms)
+    ninf = jnp.asarray(-jnp.inf, f32)
+    recycle_upd = jnp.where(served_cold,
+                            jnp.where(passes, recycle_new, ninf), rc_i)
+    # lazy reclaim exactly like the event pool's sweep: an idle slot past
+    # its deadline dies; busy slots (load > 0) always survive. A failed
+    # probe never enters the pool at all: the event judges and drops the
+    # instance synchronously at dispatch time, so concurrent requests
+    # never observe it — mirrored here by not raising `alive` on a fail.
+    keep = pool.alive & ((load > 0) | idle_ok)
+    new_pool = _Pool(
+        log_speed=jnp.where(upd, log_speed_served, pool.log_speed),
+        last_used=jnp.where(upd, jnp.where(completed, t_end, ninf),
+                            pool.last_used),
+        recycle=jnp.where(upd, recycle_upd, pool.recycle),
+        alive=keep | (upd & completed),
+        avail_from=jnp.where(
+            upd & served_cold,
+            jnp.where(passes, t_end, jnp.inf), pool.avail_from),
+        # a cold-placed slot enters the available list at its first
+        # release (t_end); a warm take that fills the slot to capacity
+        # removes it from the list until a completion re-admits it
+        avail_seq=jnp.where(upd & served_cold, t_end, avail_seq),
+        filled_at=jnp.where(
+            upd,
+            jnp.where(~served_cold & (load_sel + 1 >= params.concurrency),
+                      t0, jnp.inf),
+            filled_at),
+    )
+
+    # A stream whose probe failed holds no slot while it waits to requeue
+    # (the event drops the instance at judge time), so it contributes no
+    # in-flight load to anyone's occupancy reads until it re-dispatches.
+    chosen_idx = jnp.where(completed, k_upd.astype(i32),
+                           jnp.asarray(-1, i32))
+    s_oh = jnp.arange(S) == s_star
+    pend_bill = st.pend_bill[s_star]
+    requeue_at = probe_end + params.requeue_overhead_ms \
+        + params.requeue_penalty_ms
+    new_streams = _Streams(
+        next_ready=jnp.where(
+            s_oh,
+            jnp.where(completed, t_end + params.think_time_ms, requeue_at),
+            st.next_ready),
+        ended=jnp.where(s_oh, jnp.where(completed, t_end, probe_end),
+                        st.ended),
+        slot=jnp.where(s_oh, chosen_idx, st.slot),
+        req_start=jnp.where(s_oh, req_start, st.req_start),
+        retries=jnp.where(s_oh, jnp.where(completed, 0, r_cur + 1),
+                          st.retries),
+        pend_bill=jnp.where(
+            s_oh, jnp.where(completed, 0.0, pend_bill + bill_fail),
+            st.pend_bill),
+    )
+
+    # ---- Fig-3 billing + telemetry estimators --------------------------
+    coldf = jnp.asarray(served_cold, f32)
+    warmf = jnp.asarray(any_warm, f32)
+    new_state = VecState(
+        t=jnp.maximum(state.t, jnp.where(completed, t_end, probe_end)),
+        pool=new_pool,
+        probe_w=probe_w, log_probe_w=log_probe_w,
+        body_w=welford_update_masked(state.body_w, analysis, completed),
+        latency_w=welford_update_masked(state.latency_w, latency, completed),
+        reuse_w=welford_update_masked(state.reuse_w, warmf, completed),
+        p2=p2, ema=ema, ema_init=ema_init,
+        since_publish=since, n_probes=n_probes,
+        n_started=state.n_started + coldf,
+        n_terminated=state.n_terminated + failf,
+        nb_term=state.nb_term + failf,
+        nb_pass=state.nb_pass + cold_passf,
+        nb_reuse=state.nb_reuse + warmf,
+        db_term=state.db_term + failf * bill_fail,
+        db_pass=state.db_pass + cold_passf * billed_final,
+        db_reuse=state.db_reuse + warmf * billed_final,
+        streams=new_streams,
+    )
+    if cfg.collect_requests:
+        out = {
+            "latency_ms": latency,
+            "analysis_ms": analysis,
+            "billed_ms": pend_bill + billed_final,
+            "served_by_cold": served_cold,
+            "retries": r_cur,
+            "instance_speed": jnp.exp(log_speed_served),
+            # retry-as-step: a failed attempt completes no request — rows
+            # with completed=False are attempt records and must be masked
+            # out of per-request statistics by consumers
+            "completed": completed,
+            # slot-accounting stream for the O(n) replay property test
+            "slot": chosen_idx,
+            "stream": s_star.astype(i32),
+            "t_start_ms": t0,
+            "t_end_ms": jnp.where(completed, t_end, probe_end),
+            # occupancy of the serving slot excluding this request (a
+            # cold-placed slot is empty by construction)
+            "load_at_start": jnp.where(served_cold, 0, load_sel),
+        }
+    else:
+        out = None
+    return new_state, out
+
+
 def _simulate_chain(params: ArmParams, key, cfg: SimConfig):
     f32 = jnp.float32
     K = cfg.pool_size
-    ma = cfg.max_attempts
+    # multi-stream steps run ONE cold attempt each (retry-as-step), so
+    # they only consume attempt-0 draws
+    ma = 1 if cfg.n_streams > 1 else cfg.max_attempts
     k_normal, k_exp = jax.random.split(key)
     u_all = jax.random.normal(k_normal, (cfg.n_steps, 3 + 5 * ma), f32)
     ex_all = jax.random.exponential(k_exp, (cfg.n_steps,), f32)
@@ -505,14 +923,31 @@ def _simulate_chain(params: ArmParams, key, cfg: SimConfig):
         "log_bench_ms": jnp.log(params.benchmark_ms),
     }
     z = jnp.zeros((), f32)
+    S = cfg.n_streams
+    multi = S > 1
     state = VecState(
         t=z,
         pool=_Pool(
-            log_speed=(z,) * K,
-            last_used=(z,) * K,
-            recycle=(jnp.asarray(jnp.inf, f32),) * K,
-            alive=(jnp.zeros((), bool),) * K,
+            log_speed=jnp.zeros((K,), f32) if multi else (z,) * K,
+            last_used=jnp.zeros((K,), f32) if multi else (z,) * K,
+            recycle=(jnp.full((K,), jnp.inf, f32) if multi
+                     else (jnp.asarray(jnp.inf, f32),) * K),
+            alive=(jnp.zeros((K,), bool) if multi
+                   else (jnp.zeros((), bool),) * K),
+            avail_from=jnp.zeros((K,), f32) if multi else None,
+            avail_seq=jnp.zeros((K,), f32) if multi else None,
+            filled_at=jnp.full((K,), jnp.inf, f32) if multi else None,
         ),
+        # every stream submits at t=0 (workload.run_closed_loop's n_vus
+        # start); ties resolve in index order like the event loop's FIFO
+        streams=_Streams(
+            next_ready=jnp.zeros((S,), f32),
+            ended=jnp.zeros((S,), f32),
+            slot=jnp.full((S,), -1, jnp.int32),
+            req_start=jnp.zeros((S,), f32),
+            retries=jnp.zeros((S,), jnp.int32),
+            pend_bill=jnp.zeros((S,), f32),
+        ) if multi else None,
         probe_w=welford_init(), log_probe_w=welford_init(),
         body_w=welford_init(), latency_w=welford_init(),
         reuse_w=welford_init(),
@@ -527,8 +962,9 @@ def _simulate_chain(params: ArmParams, key, cfg: SimConfig):
         nb_term=z, nb_pass=z, nb_reuse=z,
         db_term=z, db_pass=z, db_reuse=z,
     )
+    step_fn = _step_multi if multi else _step
     final, requests = jax.lax.scan(
-        lambda s, x: _step(params, cfg, consts, s, x), state,
+        lambda s, x: step_fn(params, cfg, consts, s, x), state,
         (u_all, ex_all), unroll=1 if cfg.adaptive else 4)
     cost = params.cost_per_ms * (final.db_term + final.db_pass
                                  + final.db_reuse) \
@@ -536,6 +972,10 @@ def _simulate_chain(params: ArmParams, key, cfg: SimConfig):
                                         + final.nb_reuse)
     summary = {
         "n_requests": jnp.asarray(cfg.n_steps, f32),
+        # retry-as-step (n_streams > 1): a step whose cold probe fails
+        # completes no request, so completions = steps - terminations
+        "n_completed": (jnp.asarray(cfg.n_steps, f32) - final.n_terminated
+                        if multi else jnp.asarray(cfg.n_steps, f32)),
         "n_started": final.n_started,
         "n_terminated": final.n_terminated,
         "n_probes": jnp.asarray(final.n_probes, f32),
@@ -564,31 +1004,53 @@ class OpenSimConfig:
     """Static shape of one open-loop vectorized run.
 
     ``n_servers`` is the autoscaling supply cap (the event engine's
-    ``SubstrateKnobs.max_instances``): K server slots, each carrying its
-    own busy-until horizon. Scope: the scan is drop-free (no finite queue
-    buffer) and processes arrivals in order — each arrival takes the
-    earliest available slot, which IS the FIFO M/G/K queue; drop/defer
-    dynamics stay on the event engine (DESIGN.md §12)."""
+    ``SubstrateKnobs.max_instances``): K server slots, each serving one
+    request at a time. The scan runs the event dispatcher's admission
+    pipeline in-scan (DESIGN.md §12): a static admission bound
+    (``ArmParams.admit_bound``, the controller's ``on_admit``) defers
+    arrivals when in-flight work reaches it, a finite
+    ``ArmParams.queue_capacity`` (the engine's ``submit``) drops them
+    when the wait queue is full, and a failed cold probe releases its
+    slot immediately and parks the request until its requeue time
+    (retry-as-park) instead of holding the slot through the whole retry
+    chain. ``queue_ring`` bounds how many requests can be parked at once
+    (deferred + awaiting retry); parking past the ring counts as a
+    drop, never a silent loss."""
 
     n_steps: int
     n_servers: int = 4
-    max_attempts: int = 6
+    queue_ring: int = 32
+    drains_per_step: int = 3
     collect_requests: bool = False
     adaptive: bool = True
     diurnal: bool = True
 
 
 class OpenState(NamedTuple):
-    """Scan carry for the open-loop variant. The estimator tail
-    (probe_w … n_probes) duck-types :class:`VecState`, so the cold retry
-    chain helpers run unchanged on either carry."""
+    """Scan carry for the open-loop variant. Slot state is ``(K,)``
+    arrays. The park ring (``(W,)``, ``W = cfg.queue_ring``) holds
+    requests not currently occupying a slot: admission-deferred arrivals
+    (``park_retries == 0``) and failed probes waiting out the requeue
+    delay (``park_ready`` = earliest re-dispatch time, ``inf`` = empty
+    entry). ``starts`` is a circular log of recent dispatch start times:
+    an arrival's wait-queue depth is the number of logged starts still
+    in the future — requests with a slot promised but not yet begun
+    service. The estimator tail (probe_w … since_publish, n_probes)
+    matches the 7-tuple :func:`_judge_one` threads."""
 
     t_arr: Any                   # previous arrival's absolute time
-    busy: tuple                  # per-slot busy-until horizon
-    log_speed: tuple
-    last_used: tuple             # per-slot last completion time
-    recycle: tuple               # absolute recycle deadline (inf = never)
-    alive: tuple
+    busy: Any                    # (K,) per-slot busy-until horizon
+    log_speed: Any               # (K,)
+    last_used: Any               # (K,) per-slot last completion time
+    recycle: Any                 # (K,) absolute recycle deadline
+    alive: Any                   # (K,)
+    starts: Any                  # (W,) dispatch-start log (queue depth)
+    starts_idx: Any              # i32 circular cursor into ``starts``
+    park_ready: Any              # (W,) re-dispatch time, inf = empty
+    park_start: Any              # (W,) original arrival (latency anchor)
+    park_retries: Any            # (W,) i32 failed probes so far
+    park_bill: Any               # (W,) billed ms of those failed probes
+    park_wait: Any               # (W,) queue wait at FIRST dispatch
     probe_w: WelfordState
     log_probe_w: WelfordState
     body_w: WelfordState
@@ -602,6 +1064,9 @@ class OpenState(NamedTuple):
     n_probes: Any
     n_started: Any
     n_terminated: Any
+    n_completed: Any
+    n_dropped: Any
+    n_deferred: Any
     nb_term: Any
     nb_pass: Any
     nb_reuse: Any
@@ -610,97 +1075,70 @@ class OpenState(NamedTuple):
     db_reuse: Any
 
 
-def _open_step(params: ArmParams, cfg: OpenSimConfig, consts: dict,
-               state: OpenState, draws):
+def _open_dispatch(params: ArmParams, cfg: OpenSimConfig, consts: dict,
+                   slots, est, su, ex, t_req, rc_cur, active):
+    """Place and serve ONE open-loop request dispatching at ``t_req``.
+
+    ``slots`` is the ``(busy, log_speed, last_used, recycle, alive)``
+    tuple of ``(K,)`` arrays; ``su`` one pre-scaled 8-draw block (warm
+    drift/prepare/body + one cold attempt, the layout
+    :func:`_attempt_values` reads at ``i=0``); ``rc_cur`` how many
+    probes this request already failed (past ``max_retries`` the gate
+    accepts anything, the event policy's retry budget). When ``active``
+    is false all state threads through untouched and every output is a
+    don't-care the caller masks.
+
+    A failed probe is retry-as-park: the attempt bills its cold start +
+    benchmark but occupies the slot for ZERO wall time — the event
+    engine judges and terminates the instance synchronously at dispatch,
+    so no concurrent request ever waits behind it — and the caller parks
+    the request until ``requeue_at``. Each re-dispatch therefore sees
+    fresh slot state and can be rescued by a slot that freed meanwhile,
+    the event dispatcher's requeue semantics."""
     f32 = jnp.float32
-    K = cfg.n_servers
-    u, ex, iat = draws
-    su = u * consts["scale_vec"]
+    busy, log_speed, last_used, recycle, alive = slots
     J = jnp.exp(su)
-    t_arr = state.t_arr + iat
 
-    # ---- slot availability at arrival time -----------------------------
-    free = [state.busy[k] <= t_arr for k in range(K)]
-    valid = [state.alive[k] & free[k]
-             & ((t_arr - state.last_used[k]) <= params.idle_timeout_ms)
-             & (t_arr < state.recycle[k])
-             for k in range(K)]
-    any_valid = valid[0]
-    any_free = free[0]
-    for k in range(1, K):
-        any_valid = any_valid | valid[k]
-        any_free = any_free | free[k]
+    free = busy <= t_req
+    idle_ok = ((t_req - last_used) <= params.idle_timeout_ms) \
+        & (t_req < recycle)
+    valid = alive & free & idle_ok
+    any_valid = jnp.any(valid)
+    any_free = jnp.any(free)
 
-    # case A — warm now: reuse-order tournament among valid slots
-    # (lifo: most recently used; fifo/spread: oldest — concurrency is 1
-    # per slot here, so spread degenerates to fifo exactly as in _step)
+    # case A — warm now: reuse-order tournament (one request per slot:
+    # lifo = most recently used, fifo/spread = oldest; argmax keeps the
+    # lowest index on exact ties, the event pool's stable list order)
     sign = jnp.where(params.order == 0, 1.0, -1.0)
-    ninf = jnp.asarray(-jnp.inf, f32)
-    score = [jnp.where(valid[k], sign * state.last_used[k], ninf)
-             for k in range(K)]
-    oh_a = [None] * K
-    oh_a[0] = score[0] >= ninf
-    best_a = score[0]
-    for k in range(1, K):
-        take = score[k] > best_a
-        best_a = jnp.where(take, score[k], best_a)
-        for j in range(k):
-            oh_a[j] = oh_a[j] & ~take
-        oh_a[k] = take
-
+    score = jnp.where(valid, sign * last_used, -jnp.inf)
+    k_a = jnp.argmax(score)
     # case B — no valid warm slot but a free one exists (dead or
     # idle/recycle-expired): cold start now, into the first free slot
-    oh_b = [None] * K
-    oh_b[0] = free[0]
-    taken = free[0]
-    for k in range(1, K):
-        oh_b[k] = free[k] & ~taken
-        taken = taken | free[k]
-
+    k_b = jnp.argmax(free)
     # case C — every slot busy: wait for the earliest completion; the
-    # freed slot serves this arrival (warm unless its recycle deadline
-    # passed while it was busy — idle gap is zero by construction)
-    oh_c = [None] * K
-    oh_c[0] = jnp.ones((), bool)
-    best_c = state.busy[0]
-    for k in range(1, K):
-        take = state.busy[k] < best_c
-        best_c = jnp.where(take, state.busy[k], best_c)
-        for j in range(k):
-            oh_c[j] = oh_c[j] & ~take
-        oh_c[k] = take
-
-    case_a = any_valid
-    case_b = ~any_valid & any_free
+    # freed slot serves warm unless its recycle deadline passed while it
+    # was busy (idle gap is zero by construction)
+    k_c = jnp.argmin(busy)
     case_c = ~any_free
-    t_start = jnp.where(case_c, jnp.maximum(best_c, t_arr), t_arr)
-    wait = t_start - t_arr
-
-    # the serving slot's one-hot + the warm-path speed/recycle it carries
-    upd = [(case_a & oh_a[k]) | (case_b & oh_b[k]) | (case_c & oh_c[k])
-           for k in range(K)]
-    log_i = jnp.zeros((), f32)
-    rc_keep = jnp.zeros((), f32)
-    rc_c = jnp.zeros((), f32)
-    for k in range(K):
-        sel_a = case_a & oh_a[k]
-        sel_c = case_c & oh_c[k]
-        log_i = jnp.where(sel_a | sel_c, state.log_speed[k], log_i)
-        rc_keep = jnp.where(sel_a | sel_c, state.recycle[k], rc_keep)
-        rc_c = jnp.where(oh_c[k], state.recycle[k], rc_c)
-    recycled_c = case_c & (t_start >= rc_c)
-    served_cold = case_b | recycled_c
+    k = jnp.where(any_valid, k_a, jnp.where(any_free, k_b, k_c))
+    t_start = jnp.where(case_c, jnp.maximum(busy[k_c], t_req), t_req)
+    recycled_c = case_c & (t_start >= recycle[k_c])
+    served_cold = (~any_valid & any_free) | recycled_c
     any_warm = ~served_cold
+    log_i = log_speed[k]
 
     if cfg.diurnal:
-        dv = _diurnal(t_start, params.diurnal_amplitude, params.diurnal_phase_h)
+        dv = _diurnal(t_start, params.diurnal_amplitude,
+                      params.diurnal_phase_h)
         day_mean = params.day_factor * dv
         log_day = consts["log_df"] + jnp.log(dv)
     else:
         day_mean = params.day_factor
         log_day = consts["log_df"]
 
-    # ---- warm path: AR(1) drift, prepare + body ------------------------
+    # warm path: AR(1) drift, prepare + body. One request per slot means
+    # no load**alpha self-contention and a judge load factor of 1 — the
+    # event Telemetry at per-instance concurrency 1.
     rho = params.contention_rho
     log_drifted = jnp.where(
         rho >= 1.0, log_i,
@@ -710,66 +1148,232 @@ def _open_step(params: ArmParams, cfg: OpenSimConfig, consts: dict,
     analysis_w = params.body_ms * J[2] * jnp.exp(-log_drifted)
     dur_w = download_w + analysis_w
 
-    # ---- cold path: the shared retry chain -----------------------------
-    chain = _cold_chain_adaptive if cfg.adaptive else _cold_chain_fixed
-    c = chain(params, cfg, consts, su, J, day_mean, log_day,
-              served_cold, state)
+    # cold path: ONE probe attempt (retries re-enter via the park ring)
+    cold_ms, download_c, bench, log_bench, analysis_c, log_speed_c = \
+        _attempt_values(params, consts, su, J, day_mean, log_day, 0)
+    probed = active & served_cold & (params.gate_mode > 0) \
+        & (rc_cur < params.max_retries)
+    est, thr = _judge_one(params, cfg, est, bench, log_bench, probed)
+    passes = (~probed) | (bench <= thr)
+    completed = active & (any_warm | passes)
+    fail = active & served_cold & ~passes
 
-    # ---- merge + slot update -------------------------------------------
-    analysis = jnp.where(served_cold, c.analysis_ms, analysis_w)
-    service = jnp.where(
-        served_cold, c.elapsed + c.cold_ms + c.ready_ms + c.analysis_ms, dur_w)
-    latency = wait + service
-    billed_final = jnp.where(
-        served_cold,
-        params.bill_cold_start * c.cold_ms + c.ready_ms + c.analysis_ms,
-        dur_w)
+    ready_c = jnp.where(probed, jnp.maximum(download_c, bench), download_c)
+    analysis = jnp.where(served_cold, analysis_c, analysis_w)
+    service = jnp.where(served_cold, cold_ms + ready_c + analysis_c, dur_w)
     t_end = t_start + service
-    log_speed_served = jnp.where(served_cold, c.log_speed, log_drifted)
-    recycle_new = (t_start + c.place_rel) + jnp.where(
+    probe_end = t_start + cold_ms + bench
+    billed = jnp.where(
+        served_cold, params.bill_cold_start * cold_ms + ready_c + analysis_c,
+        dur_w)
+    bill_fail = params.bill_cold_start * cold_ms + bench
+    requeue_at = probe_end + params.requeue_overhead_ms \
+        + params.requeue_penalty_ms
+    log_speed_served = jnp.where(served_cold, log_speed_c, log_drifted)
+    recycle_new = t_start + jnp.where(
         jnp.isinf(params.recycle_lifetime_ms), jnp.inf,
         ex * params.recycle_lifetime_ms)
-    recycle_upd = jnp.where(served_cold, recycle_new, rc_keep)
+
+    # a failed probe leaves no trace in the slot arrays (alive only
+    # rises on a completed cold placement)
+    upd = completed & (jnp.arange(busy.shape[0]) == k)
+    slots = (
+        jnp.where(upd, t_end, busy),
+        jnp.where(upd, log_speed_served, log_speed),
+        jnp.where(upd, t_end, last_used),
+        jnp.where(upd, jnp.where(served_cold, recycle_new, recycle[k]),
+                  recycle),
+        alive | upd,
+    )
+    o = {
+        "t_start": t_start, "t_end": t_end,
+        "served_cold": active & served_cold, "completed": completed,
+        "fail": fail, "analysis": analysis, "billed": billed,
+        "bill_fail": bill_fail, "requeue_at": requeue_at,
+    }
+    return slots, est, o
+
+
+def _open_step(params: ArmParams, cfg: OpenSimConfig, consts: dict,
+               state: OpenState, draws):
+    """One arrival of the open-loop scan, in event-dispatcher order.
+
+    Phase 1 drains up to ``cfg.drains_per_step`` matured park-ring
+    entries in FIFO-by-ready order (deferred arrivals and requeued
+    retries whose ``park_ready`` has passed) through full placements —
+    a drained dispatch runs at its OWN ``park_ready`` timestamp, not at
+    this step's arrival time, so retry timing is exact as long as the
+    drain budget keeps up. Phase 2 runs the admission pipeline on the
+    step's own arrival — defer first (static ``admit_bound`` on
+    in-flight work, the controller's ``on_admit``), then drop (finite
+    ``queue_capacity`` on the wait queue, the engine's ``submit``) —
+    and dispatches it when admitted. Each step emits
+    ``drains_per_step + 1`` rows (drains first, arrival last) with
+    ``completed`` / ``dropped`` / ``deferred`` masks; consumers filter.
+
+    Approximations vs the event loop, all second-order at the parity
+    operating points (measured in EXPERIMENTS.md): a fail burst larger
+    than the drain budget lets a later arrival book a slot ahead of a
+    matured retry (FIFO inversion); an item is deferred at most once,
+    re-offered at the earliest busy horizon rather than at every
+    completion; and re-offers skip the drop check (the event re-offer
+    can still drop at submit)."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    W = cfg.queue_ring
+    D = cfg.drains_per_step
+    u, ex, iat = draws
+    su = u * consts["scale_blocks"]
+    t_arr = state.t_arr + iat
+
+    slots = (state.busy, state.log_speed, state.last_used, state.recycle,
+             state.alive)
+    est = (state.probe_w, state.log_probe_w, state.n_probes, state.p2,
+           state.ema, state.ema_init, state.since_publish)
+    park_ready, park_start = state.park_ready, state.park_start
+    park_retries, park_bill = state.park_retries, state.park_bill
+    park_wait = state.park_wait
+    starts, sidx = state.starts, state.starts_idx
+
+    wf = {"body_w": state.body_w, "latency_w": state.latency_w,
+          "wait_w": state.wait_w, "reuse_w": state.reuse_w}
+    acc = {k: getattr(state, k) for k in (
+        "n_started", "n_terminated", "n_completed", "n_dropped",
+        "n_deferred", "nb_term", "nb_pass", "nb_reuse",
+        "db_term", "db_pass", "db_reuse")}
+    rows: list = []
+
+    def account(o, lat, wait, wait_mask, bill_prev, rc, dropped, deferred):
+        cdone = o["completed"]
+        warm = cdone & ~o["served_cold"]
+        cp = cdone & o["served_cold"]
+        failf = jnp.asarray(o["fail"], f32)
+        wf["body_w"] = welford_update_masked(
+            wf["body_w"], o["analysis"], cdone)
+        wf["latency_w"] = welford_update_masked(wf["latency_w"], lat, cdone)
+        wf["wait_w"] = welford_update_masked(wf["wait_w"], wait, wait_mask)
+        wf["reuse_w"] = welford_update_masked(
+            wf["reuse_w"], jnp.asarray(warm, f32), cdone)
+        acc["n_started"] += jnp.asarray(o["served_cold"], f32)
+        acc["n_terminated"] += failf
+        acc["n_completed"] += jnp.asarray(cdone, f32)
+        acc["n_dropped"] += jnp.asarray(dropped, f32)
+        acc["n_deferred"] += jnp.asarray(deferred, f32)
+        acc["nb_term"] += failf
+        acc["nb_pass"] += jnp.asarray(cp, f32)
+        acc["nb_reuse"] += jnp.asarray(warm, f32)
+        acc["db_term"] += failf * o["bill_fail"]
+        acc["db_pass"] += jnp.asarray(cp, f32) * o["billed"]
+        acc["db_reuse"] += jnp.asarray(warm, f32) * o["billed"]
+        if cfg.collect_requests:
+            rows.append({
+                "latency_ms": lat, "wait_ms": wait,
+                "analysis_ms": o["analysis"],
+                # a retry completion's bill includes its failed attempts
+                "billed_ms": bill_prev + o["billed"],
+                "served_by_cold": o["served_cold"],
+                "retries": rc, "t_completed_ms": o["t_end"],
+                # rows with completed=False are attempt/defer/drop
+                # records — consumers must mask them out of per-request
+                # statistics
+                "completed": cdone, "dropped": dropped,
+                "deferred": deferred})
+
+    fz = jnp.zeros((), bool)
+    # ---- phase 1: drain matured parked requests, FIFO by ready time ----
+    for di in range(D):
+        j = jnp.argmin(park_ready)
+        ready_j = park_ready[j]
+        drain = jnp.isfinite(ready_j) & (ready_j <= t_arr)
+        rc_d = park_retries[j]
+        start_d = park_start[j]
+        bill_prev = park_bill[j]
+        slots, est, d = _open_dispatch(
+            params, cfg, consts, slots, est, su[8 * di:8 * di + 8], ex[di],
+            jnp.where(drain, ready_j, t_arr), rc_d, drain)
+        oh = (jnp.arange(W) == j) & drain
+        park_ready = jnp.where(
+            oh, jnp.where(d["fail"], d["requeue_at"], jnp.inf), park_ready)
+        park_retries = jnp.where(oh & d["fail"], rc_d + 1, park_retries)
+        park_bill = jnp.where(
+            oh, jnp.where(d["fail"], bill_prev + d["bill_fail"], 0.0),
+            park_bill)
+        # queue wait = until FIRST dispatch, back-dated to arrival for
+        # deferred items (run_open_loop's submitted_at_ms); requeues do
+        # not reset it (Invocation.first_dispatched_at_ms), so retries
+        # carry theirs through the ring
+        wait_d = jnp.where(rc_d > 0, park_wait[j], d["t_start"] - start_d)
+        park_wait = jnp.where(oh & d["fail"], wait_d, park_wait)
+        # log the drained dispatch's start so queue-depth counts see it
+        starts = jnp.where(
+            drain, starts.at[sidx % W].set(d["t_start"]), starts)
+        sidx = sidx + jnp.asarray(drain, i32)
+        account(d, d["t_end"] - start_d, wait_d,
+                drain & (rc_d == 0), bill_prev, rc_d, fz, fz)
+
+    # ---- phase 2: admission pipeline on the step's own arrival ---------
+    busy1 = slots[0]
+    parked = jnp.isfinite(park_ready)
+    # in-flight work the admission bound sees: in service, slot promised
+    # but not yet started, or mid retry-chain. Admission-deferred parks
+    # (park_retries == 0) are the event loop's pending deque — NOT
+    # in-flight, exactly as ``on_admit`` counts.
+    in_service = jnp.sum((busy1 > t_arr).astype(i32))
+    q_wait = jnp.sum((starts > t_arr).astype(i32))
+    n_retry = jnp.sum((parked & (park_retries > 0)).astype(i32))
+    in_flight = in_service + q_wait + n_retry
+    defer = jnp.asarray(in_flight, f32) >= params.admit_bound
+    # the engine's submit drops when the wait queue is at capacity —
+    # checked after admission, run_open_loop's offer → submit order
+    drop = ~defer & (jnp.asarray(q_wait, f32) >= params.queue_capacity)
+    admitted = ~defer & ~drop
+
+    slots, est, a = _open_dispatch(
+        params, cfg, consts, slots, est, su[8 * D:], ex[D], t_arr,
+        jnp.zeros((), i32), admitted)
+    starts = jnp.where(
+        admitted, starts.at[sidx % W].set(a["t_start"]), starts)
+    sidx = sidx + jnp.asarray(admitted, i32)
+
+    # park the arrival when deferred, or when its probe failed (retry);
+    # a full ring drops the request (counted, never silent)
+    want_park = defer | a["fail"]
+    empty = ~jnp.isfinite(park_ready)
+    j2 = jnp.argmax(empty)
+    overflow = want_park & ~jnp.any(empty)
+    oh2 = (jnp.arange(W) == j2) & want_park & ~overflow
+    # a deferred item re-offers at the next completion (earliest busy
+    # horizon), the event loop's done → re-offer hook
+    reoffer_at = jnp.maximum(jnp.min(busy1), t_arr)
+    park_ready = jnp.where(
+        oh2, jnp.where(defer, reoffer_at, a["requeue_at"]), park_ready)
+    park_start = jnp.where(oh2, t_arr, park_start)
+    park_retries = jnp.where(oh2, jnp.where(defer, 0, 1), park_retries)
+    park_bill = jnp.where(oh2, jnp.where(defer, 0.0, a["bill_fail"]),
+                          park_bill)
+    park_wait = jnp.where(oh2, jnp.where(defer, 0.0, a["t_start"] - t_arr),
+                          park_wait)
+    account(a, a["t_end"] - t_arr, a["t_start"] - t_arr, admitted,
+            jnp.zeros((), f32), jnp.zeros((), i32),
+            drop | overflow, defer & ~overflow)
 
     new_state = OpenState(
         t_arr=t_arr,
-        busy=tuple(jnp.where(upd[k], t_end, state.busy[k]) for k in range(K)),
-        log_speed=tuple(
-            jnp.where(upd[k], log_speed_served, state.log_speed[k])
-            for k in range(K)),
-        last_used=tuple(
-            jnp.where(upd[k], t_end, state.last_used[k]) for k in range(K)),
-        recycle=tuple(
-            jnp.where(upd[k], recycle_upd, state.recycle[k])
-            for k in range(K)),
-        alive=tuple(state.alive[k] | upd[k] for k in range(K)),
-        probe_w=c.probe_w, log_probe_w=c.log_probe_w,
-        body_w=welford_update(state.body_w, analysis),
-        latency_w=welford_update(state.latency_w, latency),
-        wait_w=welford_update(state.wait_w, wait),
-        reuse_w=welford_update(state.reuse_w, jnp.asarray(any_warm, f32)),
-        p2=c.p2, ema=c.ema, ema_init=c.ema_init,
-        since_publish=c.since_publish, n_probes=c.n_probes,
-        n_started=state.n_started + jnp.asarray(served_cold, f32) * (
-            jnp.asarray(c.retries, f32) + 1.0),
-        n_terminated=state.n_terminated + c.n_term,
-        nb_term=state.nb_term + c.n_term,
-        nb_pass=state.nb_pass + jnp.asarray(served_cold, f32),
-        nb_reuse=state.nb_reuse + jnp.asarray(any_warm, f32),
-        db_term=state.db_term + c.d_term,
-        db_pass=state.db_pass + jnp.asarray(served_cold, f32) * billed_final,
-        db_reuse=state.db_reuse + jnp.asarray(any_warm, f32) * billed_final,
+        busy=slots[0], log_speed=slots[1], last_used=slots[2],
+        recycle=slots[3], alive=slots[4],
+        starts=starts, starts_idx=sidx,
+        park_ready=park_ready, park_start=park_start,
+        park_retries=park_retries, park_bill=park_bill,
+        park_wait=park_wait,
+        probe_w=est[0], log_probe_w=est[1],
+        body_w=wf["body_w"], latency_w=wf["latency_w"],
+        wait_w=wf["wait_w"], reuse_w=wf["reuse_w"],
+        p2=est[3], ema=est[4], ema_init=est[5], since_publish=est[6],
+        n_probes=est[2],
+        **acc,
     )
     if cfg.collect_requests:
-        out = {
-            "latency_ms": latency,
-            "wait_ms": wait,
-            "analysis_ms": analysis,
-            "billed_ms": jnp.asarray(served_cold, f32) * c.d_term + billed_final,
-            "served_by_cold": served_cold,
-            "retries": jnp.where(served_cold, c.retries, 0),
-            "t_completed_ms": t_end,
-        }
+        out = {k: jnp.stack([r[k] for r in rows]) for k in rows[0]}
     else:
         out = None
     return new_state, out
@@ -777,35 +1381,49 @@ def _open_step(params: ArmParams, cfg: OpenSimConfig, consts: dict,
 
 def _simulate_open_chain(params: ArmParams, key, cfg: OpenSimConfig, iats):
     f32 = jnp.float32
+    i32 = jnp.int32
     K = cfg.n_servers
-    ma = cfg.max_attempts
+    W = cfg.queue_ring
+    D = cfg.drains_per_step
     k_normal, k_exp = jax.random.split(key)
-    u_all = jax.random.normal(k_normal, (cfg.n_steps, 3 + 5 * ma), f32)
-    ex_all = jax.random.exponential(k_exp, (cfg.n_steps,), f32)
+    # one 8-draw dispatch block per drain slot plus one for the arrival —
+    # retries consume the drain block of whichever later step drains them
+    u_all = jax.random.normal(k_normal, (cfg.n_steps, 8 * (D + 1)), f32)
+    ex_all = jax.random.exponential(k_exp, (cfg.n_steps, D + 1), f32)
     pj, bj = params.prepare_jitter, params.body_jitter
     cj, bn, sg = params.cold_start_jitter, params.benchmark_noise, params.sigma
+    block = [sg, pj, bj, sg, cj, pj, bn, bj]
     consts = {
-        "scale_vec": jnp.stack([sg, pj, bj] + [sg, cj, pj, bn, bj] * ma),
+        "scale_blocks": jnp.stack(block * (D + 1)),
         "log_df": jnp.log(params.day_factor),
         "log_bench_ms": jnp.log(params.benchmark_ms),
     }
     z = jnp.zeros((), f32)
     state = OpenState(
         t_arr=z,
-        busy=(z,) * K,
-        log_speed=(z,) * K,
-        last_used=(z,) * K,
-        recycle=(jnp.asarray(jnp.inf, f32),) * K,
-        alive=(jnp.zeros((), bool),) * K,
+        busy=jnp.zeros((K,), f32),
+        log_speed=jnp.zeros((K,), f32),
+        last_used=jnp.zeros((K,), f32),
+        recycle=jnp.full((K,), jnp.inf, f32),
+        alive=jnp.zeros((K,), bool),
+        # -inf: an unused log entry is never counted as a future start
+        starts=jnp.full((W,), -jnp.inf, f32),
+        starts_idx=jnp.zeros((), i32),
+        park_ready=jnp.full((W,), jnp.inf, f32),
+        park_start=jnp.zeros((W,), f32),
+        park_retries=jnp.zeros((W,), i32),
+        park_bill=jnp.zeros((W,), f32),
+        park_wait=jnp.zeros((W,), f32),
         probe_w=welford_init(), log_probe_w=welford_init(),
         body_w=welford_init(), latency_w=welford_init(),
         wait_w=welford_init(), reuse_w=welford_init(),
         p2=p2_init(params.pass_fraction) if cfg.adaptive else None,
         ema=z if cfg.adaptive else None,
         ema_init=jnp.zeros((), bool) if cfg.adaptive else None,
-        since_publish=jnp.zeros((), jnp.int32) if cfg.adaptive else None,
-        n_probes=jnp.zeros((), jnp.int32),
+        since_publish=jnp.zeros((), i32) if cfg.adaptive else None,
+        n_probes=jnp.zeros((), i32),
         n_started=z, n_terminated=z,
+        n_completed=z, n_dropped=z, n_deferred=z,
         nb_term=z, nb_pass=z, nb_reuse=z,
         db_term=z, db_pass=z, db_reuse=z,
     )
@@ -817,8 +1435,17 @@ def _simulate_open_chain(params: ArmParams, key, cfg: OpenSimConfig, iats):
                                  + final.db_reuse) \
         + params.cost_per_invocation * (final.nb_term + final.nb_pass
                                         + final.nb_reuse)
+    n_steps_f = jnp.asarray(cfg.n_steps, f32)
     summary = {
-        "n_requests": jnp.asarray(cfg.n_steps, f32),
+        "n_requests": n_steps_f,
+        # conservation (tested): every arrival completes, drops, or is
+        # still parked (deferred / awaiting retry) at the horizon
+        "n_completed": final.n_completed,
+        "n_dropped": final.n_dropped,
+        "n_deferred": final.n_deferred,
+        "n_parked_end": jnp.sum(jnp.isfinite(final.park_ready).astype(f32)),
+        "drop_rate": final.n_dropped / n_steps_f,
+        "defer_rate": final.n_deferred / n_steps_f,
         "n_started": final.n_started,
         "n_terminated": final.n_terminated,
         "n_probes": jnp.asarray(final.n_probes, f32),
@@ -888,11 +1515,26 @@ def simulate_arms(
     *,
     seeds,
     n_steps: int,
-    pool_size: int = 1,
+    pool_size: Optional[int] = None,
+    n_streams: int = 1,
     max_attempts: Optional[int] = None,
     collect_requests: bool = False,
 ) -> VecResult:
-    """Run every arm × seed lane through the jitted scan; returns numpy."""
+    """Run every arm × seed lane through the jitted scan; returns numpy.
+
+    ``n_streams`` is the number of closed-loop virtual users sharing the
+    slot pool (the event engine's ``n_vus``; ``n_steps`` stays the TOTAL
+    request count across streams). ``pool_size`` defaults to
+    ``max(1, n_streams)`` — the smallest pool that can always place a
+    cold start — and must be at least ``n_streams`` when given."""
+    if n_streams < 1:
+        raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+    if pool_size is None:
+        pool_size = max(1, n_streams)
+    if pool_size < n_streams:
+        raise ValueError(
+            f"pool_size={pool_size} < n_streams={n_streams}: a cold start "
+            "could find no free slot (need pool_size >= n_streams)")
     leaves = [np.atleast_1d(np.asarray(x)) for x in arms]
     n_arms = max(leaf.shape[0] for leaf in leaves)
     stacked = ArmParams(*[
@@ -911,7 +1553,8 @@ def simulate_arms(
     cfg = SimConfig(n_steps=int(n_steps), pool_size=int(pool_size),
                     max_attempts=int(max_attempts),
                     collect_requests=bool(collect_requests),
-                    adaptive=adaptive, diurnal=diurnal)
+                    adaptive=adaptive, diurnal=diurnal,
+                    n_streams=int(n_streams))
     fn = _get_sim_fn(cfg, (n_arms, len(seeds)))
     jit_stats["calls"] += 1
     summary, requests = fn(stacked, jnp.asarray(seeds),
@@ -945,6 +1588,11 @@ def _get_open_sim_fn(cfg: OpenSimConfig, batch_shape: tuple):
     return _JIT_CACHE[cache_key]
 
 
+#: one-shot latch for the think-time contract warning below (tests reset
+#: it to re-assert the warning fires).
+_OPEN_THINK_WARNED = False
+
+
 def simulate_open_arms(
     arms: ArmParams,
     *,
@@ -952,16 +1600,39 @@ def simulate_open_arms(
     iats_ms: np.ndarray,
     n_servers: int = 4,
     max_attempts: Optional[int] = None,
+    queue_ring: int = 32,
+    drains_per_step: int = 3,
     collect_requests: bool = False,
 ) -> VecResult:
     """Open-loop variant of :func:`simulate_arms`: instead of a think-time
     loop, the scan consumes ``iats_ms`` — host-generated inter-arrival
     times, shape ``(n_steps,)`` (shared by every seed lane; bit-exact
     trace replay) or ``(n_seeds, n_steps)`` (one realization per seed,
-    from :mod:`repro.sim.arrivals`). Each arrival waits for the earliest
-    of ``n_servers`` slots (the FIFO M/G/K queue at an autoscaling cap of
-    ``max_instances = n_servers``); ``ArmParams.think_time_ms`` is ignored.
-    """
+    from :mod:`repro.sim.arrivals`). Each arrival runs the admission
+    pipeline (defer at ``ArmParams.admit_bound``, drop at
+    ``ArmParams.queue_capacity``) and then waits for the earliest of
+    ``n_servers`` slots (the FIFO M/G/K queue at an autoscaling cap of
+    ``max_instances = n_servers``); a failed cold probe parks and
+    requeues without holding its slot (``queue_ring`` bounds the park
+    ring, see :class:`OpenSimConfig`).
+
+    Contract: ``ArmParams.think_time_ms`` is IGNORED here — arrivals
+    come from ``iats_ms``, never from a think-time loop. Arms built by
+    :func:`arm_from_spec` carry its default ``think_time_ms=1000``, so
+    this is warned once per process rather than raised. ``max_attempts``
+    is accepted for call-site compatibility and only validated: retries
+    cross scan steps via the park ring, so no per-step attempt budget
+    shapes the draws."""
+    global _OPEN_THINK_WARNED
+    if not _OPEN_THINK_WARNED and np.any(
+            np.asarray(arms.think_time_ms) != 0.0):
+        warnings.warn(
+            "simulate_open_arms ignores ArmParams.think_time_ms: arrivals "
+            "come from iats_ms, not a think-time loop (arm_from_spec "
+            "defaults think_time_ms=1000, so this is expected for arms "
+            "shared with the closed-loop scan). Warned once per process.",
+            stacklevel=2)
+        _OPEN_THINK_WARNED = True
     leaves = [np.atleast_1d(np.asarray(x)) for x in arms]
     n_arms = max(leaf.shape[0] for leaf in leaves)
     stacked = ArmParams(*[
@@ -978,15 +1649,22 @@ def simulate_open_arms(
             f"{np.asarray(iats_ms).shape} for {len(seeds)} seeds")
     n_steps = int(iats.shape[1])
     max_r = int(np.max(np.asarray(arms.max_retries)))
-    if max_attempts is None:
-        max_attempts = max_r + 1
-    if max_attempts < max_r + 1:
+    if max_attempts is not None and max_attempts < max_r + 1:
         raise ValueError(
             f"max_attempts={max_attempts} cannot cover max_retries={max_r}")
+    caps = np.asarray(arms.queue_capacity, float)
+    finite_cap = caps[np.isfinite(caps)]
+    if finite_cap.size and float(np.max(finite_cap)) > queue_ring:
+        raise ValueError(
+            f"queue_capacity={float(np.max(finite_cap)):g} exceeds "
+            f"queue_ring={queue_ring}; the in-scan wait-queue counter "
+            f"saturates at the ring size, so the drop gate would never "
+            f"fire — raise queue_ring")
     adaptive = bool(np.any(np.asarray(arms.gate_mode) == GATE_ADAPTIVE))
     diurnal = bool(np.any(np.asarray(arms.diurnal_amplitude) != 0.0))
     cfg = OpenSimConfig(n_steps=n_steps, n_servers=int(n_servers),
-                        max_attempts=int(max_attempts),
+                        queue_ring=int(queue_ring),
+                        drains_per_step=int(drains_per_step),
                         collect_requests=bool(collect_requests),
                         adaptive=adaptive, diurnal=diurnal)
     fn = _get_open_sim_fn(cfg, (n_arms, len(seeds)))
@@ -1020,6 +1698,7 @@ def arm_from_spec(
     republish_every: int = 4,
     smoothing_alpha: float = 0.7,
     think_time_ms: float = 1000.0,
+    admit_bound: Optional[float] = None,
 ) -> ArmParams:
     """Build one arm from the event engine's own config objects
     (:class:`~repro.sim.platform.FunctionSpec`,
@@ -1027,7 +1706,13 @@ def arm_from_spec(
     :class:`~repro.sim.variation.VariationModel`) so a parity test or grid
     sweep describes *one* scenario for both engines. ``gate`` is "off"
     (baseline arm), "fixed" (pre-tested ``threshold``) or "adaptive"
-    (:class:`~repro.core.policy.AdaptiveMinosPolicy` defaults)."""
+    (:class:`~repro.core.policy.AdaptiveMinosPolicy` defaults).
+
+    Per-instance concurrency, the load-slowdown alpha, load-aware gating
+    and the finite queue buffer come from the resolved knobs (profile or
+    spec); ``admit_bound`` is the static admission cap the open-loop scan
+    defers at (:func:`repro.core.control.static_admission_bound` computes
+    the event engine's equivalent), ``None`` = admission disabled."""
     gate_mode = {"off": GATE_OFF, "fixed": GATE_FIXED,
                  "adaptive": GATE_ADAPTIVE}[gate]
     if gate_mode == GATE_FIXED and not math.isfinite(threshold):
@@ -1080,6 +1765,13 @@ def arm_from_spec(
         think_time_ms=float(think_time_ms),
         cost_per_invocation=float(pricing.cost_per_invocation),
         cost_per_ms=float(pricing.cost_per_ms),
+        concurrency=int(knobs.per_instance_concurrency),
+        load_slowdown_alpha=float(knobs.load_slowdown_alpha),
+        gate_load_aware=1.0 if knobs.gate_load_aware else 0.0,
+        queue_capacity=(
+            math.inf if knobs.queue_capacity is None
+            else float(knobs.queue_capacity)),
+        admit_bound=math.inf if admit_bound is None else float(admit_bound),
     )
 
 
@@ -1097,20 +1789,30 @@ def stack_arms(arms: list) -> ArmParams:
 
 
 def run_event_chain(platform, n_requests: int,
-                    think_time_ms: float = 1000.0) -> list:
-    """Drive a :class:`~repro.sim.platform.FaaSPlatform` with ONE
-    closed-loop virtual user for exactly ``n_requests`` completions — the
-    event-engine scenario :func:`simulate_arms` vectorizes. Used by the
-    parity tests and as grid_sweep's per-arm timing reference."""
+                    think_time_ms: float = 1000.0, n_vus: int = 1) -> list:
+    """Drive a :class:`~repro.sim.platform.FaaSPlatform` with ``n_vus``
+    closed-loop virtual users for exactly ``n_requests`` total
+    completions — the event-engine scenario :func:`simulate_arms`
+    vectorizes (``n_vus`` maps to its ``n_streams``). All users submit at
+    t=0 (like :func:`repro.sim.workload.run_closed_loop`), each resubmits
+    ``think_time_ms`` after its completion while the budget lasts. Used
+    by the parity tests and as the sweeps' per-arm timing reference."""
     results: list = []
+    # budget is reserved at SCHEDULING time, so concurrent completions
+    # (n_vus > 1) can never over-submit past n_requests
+    budget = n_requests
 
     def on_complete(res) -> None:
+        nonlocal budget
         results.append(res)
-        if len(results) < n_requests:
+        if budget > 0:
+            budget -= 1
             platform.loop.after(
                 think_time_ms, lambda: platform.submit(None, on_complete))
 
-    platform.submit(None, on_complete)
+    for _ in range(min(n_vus, n_requests)):
+        budget -= 1
+        platform.submit(None, on_complete)
     platform.loop.run_all()
     assert len(results) == n_requests
     return results

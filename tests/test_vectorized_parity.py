@@ -3,9 +3,12 @@
 
 The jitted scan is a *fast path for parameter exploration*, not a
 replacement — golden digests stay on the event engine — so what it must
-prove is distributional agreement on the scenario it models (one
-closed-loop stream). Both engines run the SAME config (spec, profile,
-threshold, think time) on pinned seeds; the checks are the ISSUE's bounds:
+prove is distributional agreement on the scenarios it models: closed-loop
+VU streams (single- and multi-stream; see also
+tests/test_multistream_vectorized.py) and open-loop Poisson arrivals
+against a capped supply (second half of this file). Both engines run the
+SAME config (spec, profile, threshold, think time) on pinned seeds; the
+checks are the ISSUE's bounds:
 
 * two-sample KS on per-request analysis / latency / billed-duration
   distributions,
@@ -204,19 +207,22 @@ def test_seeded_determinism(runs):
 
 
 # ---------------------------------------------------------------------------
-# Open-loop parity (ISSUE PR 6): both engines consume Poisson arrivals at the
-# same offered rate against the same K-instance supply cap and must agree on
-# the resulting latency (wait + service) distribution — i.e. the queueing
-# physics, not just the per-request service model, matches.
+# Open-loop parity: both engines consume Poisson arrivals at the same offered
+# rate against the same K-instance supply cap and must agree on the resulting
+# latency (wait + service) distribution — i.e. the queueing physics, not just
+# the per-request service model, matches.
 #
-# Calibration note (DESIGN.md §12): the vec open scan processes a gated
-# request's cold-retry chain atomically in one server slot, while the event
-# engine frees the terminated instance's budget at judge time — mid-chain —
-# letting a queued request start during the crash wall-time. At rho≈0.55 the
-# measured effect is nil on gate-off arms (P99 gap ≤ 1.4%) and a ~5% P99
-# inflation on gated arms. The strict ISSUE bound (P99 within 5%) is pinned
-# where the models genuinely coincide (gate off); gated arms get the same KS /
-# pass-rate / billing bounds plus a looser, regression-pinning tail bound.
+# Model note (DESIGN.md §12): a failed probe frees its server slot at judge
+# time in BOTH engines. The vec scan parks the gated request in a retry ring
+# (ready at probe_end + requeue overhead) and drains up to
+# `drains_per_step` matured retries before each arrival's own dispatch, so
+# retries keep their FIFO priority over later arrivals exactly as the event
+# queue's (enqueued_at, seq) ordering grants it. At the default drain budget
+# the measured gated P99 gap is < 1% (the earlier atomic-retry-chain model,
+# which held the slot through the whole crash chain, sat at ~5–12%), so one
+# 5% P99 bound applies to every cell. Scan rows are (drains..., arrival) per
+# step; only rows flagged `completed` carry a finished request — consumers
+# MUST mask, the rest is ring padding / drops / defers.
 # ---------------------------------------------------------------------------
 
 OPEN_RATE_PER_S = 0.9     # offered load; with K=4 and ~2.1 s service, rho≈0.55
@@ -270,7 +276,7 @@ def open_runs():
         for gate in OPEN_GATES:
             arms.append(arm_from_spec(
                 SPEC, VM, profile=_profile(pname), gate=gate,
-                threshold=THRESHOLD))
+                threshold=THRESHOLD, think_time_ms=0.0))
             keys.append((pname, gate))
     proc = PoissonProcess(OPEN_RATE_PER_S)
     iats = np.stack([proc.iats_ms(np.random.RandomState(5000 + i), OPEN_STEPS)
@@ -280,10 +286,18 @@ def open_runs():
                              collect_requests=True)
     vec = {}
     for i, key in enumerate(keys):
+        # in-scan conservation, per seed and exact: every arrival either
+        # completed, dropped, or is still parked when the horizon ends
+        np.testing.assert_array_equal(
+            np.asarray(res.summary["n_requests"][i]),
+            np.asarray(res.summary["n_completed"][i])
+            + np.asarray(res.summary["n_dropped"][i])
+            + np.asarray(res.summary["n_parked_end"][i]))
+        comp = np.asarray(res.requests["completed"][i]).astype(bool)
         vec[key] = {
-            "latency": res.requests["latency_ms"][i].ravel(),
-            "billed": res.requests["billed_ms"][i].ravel(),
-            "wait": res.requests["wait_ms"][i].ravel(),
+            "latency": np.asarray(res.requests["latency_ms"][i])[comp],
+            "billed": np.asarray(res.requests["billed_ms"][i])[comp],
+            "wait": np.asarray(res.requests["wait_ms"][i])[comp],
             "pass_rate": float(res.summary["pass_rate"][i].mean()),
         }
     return event, vec
@@ -304,14 +318,14 @@ def test_open_loop_ks_latency(open_runs, pname, gate):
 @pytest.mark.parametrize("pname", OPEN_PROFILES)
 @pytest.mark.parametrize("gate", OPEN_GATES)
 def test_open_loop_p99(open_runs, pname, gate):
-    """Tail latency agrees: within the ISSUE's 5% where the engines model
-    the same process (gate off); within 12% on gated arms, whose tail is
-    inflated by the vec scan's atomic retry chain (header note above)."""
+    """Tail latency agrees within 5% on every cell, gated included: the
+    retry-as-park drain model gives failed probes the same slot-release
+    and FIFO-priority semantics as the event queue (header note above).
+    Measured gaps at these pinned seeds are 0.4–4.3%."""
     event, vec = open_runs
     p99_ev = float(np.percentile(event[(pname, gate)]["latency"], 99))
     p99_v = float(np.percentile(vec[(pname, gate)]["latency"], 99))
-    bound = 0.05 if gate == "off" else 0.12
-    assert abs(p99_v - p99_ev) / p99_ev < bound, (pname, gate, p99_ev, p99_v)
+    assert abs(p99_v - p99_ev) / p99_ev < 0.05, (pname, gate, p99_ev, p99_v)
 
 
 @pytest.mark.parametrize("pname", OPEN_PROFILES)
