@@ -19,12 +19,37 @@ import time
 _BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
 
+def _sanitized() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
 def _bench_json_path(quick: bool) -> str:
     """Quick runs use shorter windows, so their wall-clocks are not
     comparable to full runs — each mode keeps its own baseline file (the
-    committed perf trajectory is the full one)."""
+    committed perf trajectory is the full one). REPRO_SANITIZE runs get a
+    third file: their wall-clocks carry the sanitizer's checking overhead,
+    and the delta against the matching plain file IS the overhead
+    measurement (target <=2x, DESIGN.md §13)."""
     name = "BENCH_substrate.quick.json" if quick else "BENCH_substrate.json"
+    if _sanitized():
+        name = name.replace(".json", ".sanitize.json")
     return os.path.join(_BENCH_DIR, name)
+
+
+def _print_sanitize_overhead(quick: bool, cur: dict) -> None:
+    """Compare a sanitized run to the matching plain baseline file."""
+    plain_name = ("BENCH_substrate.quick.json" if quick
+                  else "BENCH_substrate.json")
+    plain = _load_previous(os.path.join(_BENCH_DIR, plain_name))
+    plain_r, cur_r = plain.get("results", {}), cur.get("results", {})
+    common = [n for n in cur_r if n in plain_r
+              and plain_r[n].get("wall_clock_s", 0) > 0]
+    if not common:
+        return
+    base = sum(plain_r[n]["wall_clock_s"] for n in common)
+    san = sum(cur_r[n]["wall_clock_s"] for n in common)
+    print(f"SANITIZE overhead vs {plain_name} ({len(common)} sweeps): "
+          f"{base:.1f}s->{san:.1f}s ({san / base:.2f}x)")
 
 
 def _load_previous(path: str) -> dict:
@@ -137,9 +162,12 @@ def main() -> None:
         cur = {
             "schema": 1,
             "quick": bool(args.quick),
+            "sanitized": _sanitized(),
             "results": bench_results,
         }
         _print_delta(prev, cur)
+        if _sanitized():
+            _print_sanitize_overhead(args.quick, cur)
         # merge: a --only (or partially failed) run must not wipe the
         # baselines of sweeps it did not execute
         merged = dict(prev.get("results", {}))

@@ -1,0 +1,37 @@
+"""repro.analysis — project-native static checks + runtime sanitizer.
+
+Static side (``python -m repro.analysis``): AST lint over ``src/`` and
+``benchmarks/`` enforcing the hand-verified invariants of DESIGN.md §13
+(scan purity, tracer leaks, controller purity, recompile hazards, scan
+carrier pytrees), with a fingerprint baseline so grandfathered findings
+only ever ratchet down.
+
+Runtime side (``REPRO_SANITIZE=1``): :mod:`repro.analysis.sanitizer`
+wraps SubstrateEngine / InstancePool / run_open_loop with conservation,
+heap-consistency, telemetry-immutability, and NaN/inf checks.
+
+Pure stdlib — safe to import before (or without) jax.
+"""
+from __future__ import annotations
+
+from .lint import (
+    Baseline,
+    DEFAULT_TARGETS,
+    Finding,
+    ModuleModel,
+    RULES,
+    analyze_paths,
+    analyze_source,
+    default_baseline_path,
+)
+
+__all__ = [
+    "Baseline",
+    "DEFAULT_TARGETS",
+    "Finding",
+    "ModuleModel",
+    "RULES",
+    "analyze_paths",
+    "analyze_source",
+    "default_baseline_path",
+]

@@ -1,0 +1,657 @@
+"""Project-native static analysis engine (DESIGN.md §13).
+
+The invariants this repo rests on — scan bodies draw no host RNG or
+wall-clock, controllers are pure decisions over a read-only ``Telemetry``,
+jitted serving paths never silently recompile, scan carriers are
+registered pytrees — were stated in DESIGN.md and re-proved by hand in
+every PR (golden digests, CI stdout diffs). This module enforces them
+statically: an AST pass over ``src/`` and ``benchmarks/`` builds, per
+module, an import-alias table, a local call graph, the set of functions
+*traced by JAX* (passed to ``lax.scan`` / ``jit`` / ``vmap`` / ``cond`` /
+``while_loop``, or decorated as such — plus everything reachable from
+them through local calls), and a per-function traced-parameter taint, and
+then runs the project rules over that model:
+
+* **R1 scan-purity** — no host RNG (``np.random.*``, ``random.*``), no
+  wall clock (``time.time`` & co, ``datetime.now``), no file/network I/O
+  reachable from a traced function. These execute at *trace* time, bake
+  one draw into the compiled program, and silently break determinism and
+  parity — the exact failure class Night Shift documents for serverless
+  measurement (PAPERS.md).
+* **R2 tracer-leak** — no ``float()`` / ``int()`` / ``bool()`` /
+  ``.item()`` / ``np.asarray`` on traced values, and no ``if``/``while``
+  branching on a traced value, inside a traced body (these either raise
+  ``TracerConversionError`` at runtime or force a host sync).
+* **R3 controller-purity** — ``Controller`` classes must not assign to
+  ``Telemetry`` attributes, call pool mutators, or hold mutable
+  module-level state (controllers decide; engines act — DESIGN.md §10).
+* **R4 recompile-hazard** — no unhashable container literals at jitted
+  call sites, no ``jax.jit(f)(x)`` immediate invocation, no ``jax.jit``
+  inside a loop (each retraces/recompiles per call).
+* **R5 estimator-pytree** — ``lax.scan`` carriers must be NamedTuples /
+  registered pytrees with array leaves, not raw ``list``/``dict``/``set``
+  literals (an unregistered or shape-unstable carry retraces per step).
+
+Grandfathering: ``baseline.json`` (next to this file) pins the accepted
+findings by line-independent fingerprint with a one-line justification
+each; ``--ci`` fails only on findings NOT in the baseline, so the floor
+can only ratchet down. Pure stdlib (``ast``) — importable everywhere the
+repo is.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+from typing import Iterable, Optional
+
+#: rule id -> one-line description (the invariant catalog's static rows)
+RULES = {
+    "R1": "scan-purity: no host RNG / wall-clock / IO reachable from traced code",
+    "R2": "tracer-leak: no host conversion or branch on a traced value",
+    "R3": "controller-purity: controllers decide, engines act",
+    "R4": "recompile-hazard: jitted call sites must hit the compile cache",
+    "R5": "estimator-pytree: scan carriers are registered pytrees of arrays",
+}
+
+DEFAULT_TARGETS = ("src", "benchmarks")
+
+
+# ---------------------------------------------------------------------------
+# Findings + baseline
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation.
+
+    ``fingerprint`` deliberately excludes the line number, so a baseline
+    entry survives unrelated edits to the same file; ``symbol`` (the
+    enclosing function/class qualname) plus the machine-stable ``detail``
+    keeps it specific enough not to mask new violations of the same rule
+    elsewhere in the function — unless they have the identical detail,
+    which is the granularity we accept for grandfathering."""
+
+    rule: str
+    path: str      # repo-relative posix path
+    line: int
+    symbol: str    # enclosing qualname ("" = module level)
+    detail: str    # machine-stable short form, e.g. "numpy.random.normal"
+    message: str   # human explanation
+
+    @property
+    def fingerprint(self) -> str:
+        return f"{self.rule}:{self.path}:{self.symbol}:{self.detail}"
+
+    def render(self) -> str:
+        sym = f" [{self.symbol}]" if self.symbol else ""
+        return f"{self.path}:{self.line}: {self.rule}{sym}: {self.message}"
+
+
+@dataclasses.dataclass
+class Baseline:
+    """Grandfathered findings: fingerprint -> justification."""
+
+    entries: dict[str, str]
+    path: Optional[str] = None
+
+    @staticmethod
+    def load(path: str) -> "Baseline":
+        try:
+            with open(path) as fh:
+                data = json.load(fh)
+        except OSError:
+            return Baseline({}, path=path)
+        entries = {
+            e["fingerprint"]: e.get("justification", "")
+            for e in data.get("findings", [])
+        }
+        return Baseline(entries, path=path)
+
+    def save(self, path: str) -> None:
+        data = {
+            "schema": 1,
+            "comment": (
+                "Grandfathered repro.analysis findings. Every entry needs a "
+                "one-line justification; new code must not add entries "
+                "(python -m repro.analysis --ci fails on non-baseline "
+                "findings)."),
+            "findings": [
+                {"fingerprint": fp, "justification": j}
+                for fp, j in sorted(self.entries.items())
+            ],
+        }
+        with open(path, "w") as fh:
+            json.dump(data, fh, indent=2)
+            fh.write("\n")
+
+    def split(self, findings: list[Finding]):
+        """(new, grandfathered, stale-fingerprints)."""
+        seen = {f.fingerprint for f in findings}
+        new = [f for f in findings if f.fingerprint not in self.entries]
+        old = [f for f in findings if f.fingerprint in self.entries]
+        stale = sorted(fp for fp in self.entries if fp not in seen)
+        return new, old, stale
+
+
+def default_baseline_path() -> str:
+    return os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "baseline.json")
+
+
+# ---------------------------------------------------------------------------
+# Module model
+# ---------------------------------------------------------------------------
+
+#: names under which JAX's tracing entry points appear once import aliases
+#: are canonicalized (``import jax.numpy as jnp`` -> ``jax.numpy``).
+_TRACE_WRAPPERS = {
+    "jax.jit", "jax.pmap", "jax.vmap", "jax.checkpoint", "jax.remat",
+    "jax.grad", "jax.value_and_grad", "jax.lax.map",
+}
+#: attribute reads that yield concrete (non-traced) values at trace time:
+#: shapes/dtypes of tracers are Python objects, so branching on them is fine.
+_TAINT_BREAKER_ATTRS = {"shape", "ndim", "dtype", "size"}
+#: calls whose result is concrete even on traced arguments
+_TAINT_BREAKER_CALLS = {"len", "isinstance", "type", "id"}
+
+#: (canonical callable, positional indices of traced function args)
+_TRACE_HOF = {
+    "jax.lax.scan": (0,),
+    "jax.lax.cond": (1, 2),
+    "jax.lax.while_loop": (0, 1),
+    "jax.lax.fori_loop": (2,),
+    "jax.lax.associative_scan": (0,),
+}
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _static_call_names(call: ast.Call) -> set:
+    """``static_argnames`` string constants of a jit-like call."""
+    out: set = set()
+    for kw in call.keywords:
+        if kw.arg != "static_argnames":
+            continue
+        vals = kw.value.elts if isinstance(
+            kw.value, (ast.Tuple, ast.List)) else [kw.value]
+        for v in vals:
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                out.add(v.value)
+    return out
+
+
+def _static_params(call: ast.Call, fi: "FunctionInfo") -> set:
+    """Params of ``fi`` declared static by a jit decorator call — via
+    ``static_argnames`` strings or ``static_argnums`` indices."""
+    out = _static_call_names(call)
+    pos = [p for p in fi.params if p != "self"]
+    for kw in call.keywords:
+        if kw.arg != "static_argnums":
+            continue
+        vals = kw.value.elts if isinstance(
+            kw.value, (ast.Tuple, ast.List)) else [kw.value]
+        for v in vals:
+            if isinstance(v, ast.Constant) and isinstance(v.value, int) \
+                    and 0 <= v.value < len(pos):
+                out.add(pos[v.value])
+    return out
+
+
+@dataclasses.dataclass
+class FunctionInfo:
+    qualname: str
+    node: ast.AST                    # FunctionDef / AsyncFunctionDef / Lambda
+    params: list[str]
+    class_name: Optional[str]        # enclosing class, if a method
+    parent: Optional[str]            # enclosing function qualname, if nested
+    # call edges: (callee expression, Call node) for Name / self.X calls
+    calls: list[tuple[str, ast.Call]] = dataclasses.field(default_factory=list)
+    # set lazily by the tracer: which params carry traced values
+    traced_params: set[str] = dataclasses.field(default_factory=set)
+    trace_reason: Optional[str] = None
+
+
+@dataclasses.dataclass
+class ClassInfo:
+    name: str
+    node: ast.ClassDef
+    bases: list[str]                 # dotted base names as written
+    methods: dict[str, str]          # method name -> qualname
+
+
+class _StatementVisitor(ast.NodeVisitor):
+    """Walks one function body without descending into nested defs."""
+
+    def __init__(self, root: ast.AST, on_node) -> None:
+        self._root = root
+        self._on_node = on_node
+
+    def generic_visit(self, node: ast.AST) -> None:
+        if node is not self._root and isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return  # nested function: its own FunctionInfo covers it
+        self._on_node(node)
+        super().generic_visit(node)
+
+
+def walk_body(func_node: ast.AST) -> Iterable[ast.AST]:
+    """Every AST node lexically inside ``func_node``'s body, excluding
+    nested function/lambda bodies (they are separate FunctionInfos)."""
+    out: list[ast.AST] = []
+    _StatementVisitor(func_node, out.append).visit(func_node)
+    return out
+
+
+class ModuleModel:
+    """Everything the rules need about one module, computed once."""
+
+    def __init__(self, path: str, rel_path: str, source: str) -> None:
+        self.path = path
+        self.rel_path = rel_path
+        self.source = source
+        self.tree = ast.parse(source, filename=path)
+        self.imports: dict[str, str] = {}      # local alias -> canonical module
+        self.functions: dict[str, FunctionInfo] = {}
+        self.classes: dict[str, ClassInfo] = {}
+        self.module_mutables: dict[str, int] = {}  # name -> lineno
+        self._collect()
+        self.traced: dict[str, FunctionInfo] = {}
+        self._find_traced()
+
+    # -- canonicalization ------------------------------------------------
+    def canonical(self, dotted: Optional[str]) -> Optional[str]:
+        """Resolve the leading segment through the import table:
+        ``np.random.normal`` -> ``numpy.random.normal``."""
+        if not dotted:
+            return None
+        head, _, rest = dotted.partition(".")
+        base = self.imports.get(head)
+        if base is None:
+            return dotted
+        return f"{base}.{rest}" if rest else base
+
+    # -- collection ------------------------------------------------------
+    def _collect(self) -> None:
+        for node in ast.walk(self.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    self.imports[a.asname or a.name.split(".")[0]] = (
+                        a.name if a.asname else a.name.split(".")[0])
+            elif isinstance(node, ast.ImportFrom) and node.module and not node.level:
+                for a in node.names:
+                    if a.name == "*":
+                        continue
+                    self.imports[a.asname or a.name] = f"{node.module}.{a.name}"
+        self._collect_scope(self.tree.body, prefix="", class_name=None,
+                            parent=None)
+
+    def _collect_scope(self, body, *, prefix: str, class_name, parent) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{node.name}"
+                self._add_function(node, qual, class_name, parent)
+                self._collect_scope(node.body, prefix=f"{qual}.",
+                                    class_name=None, parent=qual)
+            elif isinstance(node, ast.ClassDef):
+                qual = f"{prefix}{node.name}"
+                bases = [dotted_name(b) or "" for b in node.bases]
+                ci = ClassInfo(name=qual, node=node, bases=bases, methods={})
+                self.classes[qual] = ci
+                for sub in node.body:
+                    if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                        mq = f"{qual}.{sub.name}"
+                        ci.methods[sub.name] = mq
+                        self._add_function(sub, mq, qual, parent)
+                        self._collect_scope(sub.body, prefix=f"{mq}.",
+                                            class_name=None, parent=mq)
+            elif isinstance(node, (ast.Assign, ast.AnnAssign)) \
+                    and prefix == "" and class_name is None:
+                value = node.value
+                if isinstance(value, (ast.List, ast.Dict, ast.Set)):
+                    targets = node.targets if isinstance(node, ast.Assign) \
+                        else [node.target]
+                    for t in targets:
+                        if isinstance(t, ast.Name):
+                            self.module_mutables[t.id] = node.lineno
+
+    def _add_function(self, node, qual: str, class_name, parent) -> None:
+        args = node.args
+        params = [a.arg for a in (
+            list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs))]
+        if args.vararg:
+            params.append(args.vararg.arg)
+        if args.kwarg:
+            params.append(args.kwarg.arg)
+        fi = FunctionInfo(qualname=qual, node=node, params=params,
+                          class_name=class_name, parent=parent)
+        for sub in walk_body(node):
+            if isinstance(sub, ast.Call):
+                name = dotted_name(sub.func)
+                if name:
+                    fi.calls.append((name, sub))
+        self.functions[qual] = fi
+
+    def _lambda_info(self, node: ast.Lambda, reason: str) -> FunctionInfo:
+        qual = f"<lambda:{node.lineno}:{node.col_offset}>"
+        if qual in self.functions:
+            return self.functions[qual]
+        params = [a.arg for a in (
+            list(node.args.posonlyargs) + list(node.args.args)
+            + list(node.args.kwonlyargs))]
+        fi = FunctionInfo(qualname=qual, node=node, params=params,
+                          class_name=None, parent=None)
+        for sub in walk_body(node):
+            if isinstance(sub, ast.Call):
+                name = dotted_name(sub.func)
+                if name:
+                    fi.calls.append((name, sub))
+        self.functions[qual] = fi
+        return fi
+
+    # -- call resolution -------------------------------------------------
+    def resolve_call(self, caller: FunctionInfo, name: str) -> Optional[FunctionInfo]:
+        """Resolve a called name to a locally defined function: nested
+        defs of the caller first, then same-class ``self.X`` methods,
+        then module-level functions."""
+        if name.startswith("self.") and caller.class_name:
+            meth = name[len("self."):]
+            ci = self.classes.get(caller.class_name)
+            if ci and "." not in meth and meth in ci.methods:
+                return self.functions.get(ci.methods[meth])
+            return None
+        if "." in name:
+            return None  # external / attribute call — not a local edge
+        nested = self.functions.get(f"{caller.qualname}.{name}")
+        if nested is not None:
+            return nested
+        # enclosing scopes, innermost first
+        parent = caller.parent
+        while parent:
+            cand = self.functions.get(f"{parent}.{name}")
+            if cand is not None:
+                return cand
+            parent = self.functions[parent].parent \
+                if parent in self.functions else None
+        return self.functions.get(name)
+
+    # -- traced-function discovery ---------------------------------------
+    def _mark_traced(self, target: ast.AST, caller: Optional[FunctionInfo],
+                     reason: str, static: Optional[set] = None) -> None:
+        """``target`` is an expression passed to a tracing wrapper: a
+        lambda, a local function name, or ``self.meth``. Mark it (and,
+        transitively at propagation time, its callees) as traced; all its
+        params are considered traced values unless ``taint_args`` later
+        refines them (we keep it simple: every param of a traced root is
+        traced — carries, xs and operands all are)."""
+        fi: Optional[FunctionInfo] = None
+        if isinstance(target, ast.Lambda):
+            fi = self._lambda_info(target, reason)
+        else:
+            name = dotted_name(target)
+            if name is None:
+                return
+            if caller is not None:
+                fi = self.resolve_call(caller, name)
+            if fi is None:
+                fi = self.functions.get(name)
+            if fi is None and "." not in name:
+                # module-level reference from module scope
+                fi = self.functions.get(name)
+        if fi is None:
+            return
+        if fi.qualname not in self.traced:
+            fi.trace_reason = reason
+            fi.traced_params.update(
+                p for p in fi.params if not static or p not in static)
+            self.traced[fi.qualname] = fi
+
+    def _enclosing_function(self, node: ast.AST,
+                            parents: dict) -> Optional[FunctionInfo]:
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for fi in self.functions.values():
+                    if fi.node is cur:
+                        return fi
+            cur = parents.get(cur)
+        return None
+
+    def _find_traced(self) -> None:
+        parents: dict[ast.AST, ast.AST] = {}
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                parents[child] = node
+
+        # decorators: @jax.jit / @jit / @partial(jax.jit, ...)
+        for fi in list(self.functions.values()):
+            node = fi.node
+            for dec in getattr(node, "decorator_list", []):
+                dec_name = self.canonical(dotted_name(dec))
+                if dec_name in _TRACE_WRAPPERS:
+                    self._mark_decorated(fi, f"decorated @{dec_name}")
+                elif isinstance(dec, ast.Call):
+                    fn = self.canonical(dotted_name(dec.func))
+                    if fn in _TRACE_WRAPPERS:
+                        self._mark_decorated(fi, f"decorated @{fn}(...)",
+                                             static=_static_params(dec, fi))
+                    elif fn in ("functools.partial", "partial") and dec.args:
+                        inner = self.canonical(dotted_name(dec.args[0]))
+                        if inner in _TRACE_WRAPPERS:
+                            self._mark_decorated(
+                                fi, f"decorated @partial({inner}, ...)",
+                                static=_static_params(dec, fi))
+
+        # call sites: jit(f) / vmap(f) / lax.scan(f, ...) / cond / while
+        for node in ast.walk(self.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = self.canonical(dotted_name(node.func))
+            if fn is None:
+                continue
+            caller = self._enclosing_function(node, parents)
+            if fn in _TRACE_WRAPPERS and node.args:
+                self._mark_traced(node.args[0], caller,
+                                  f"passed to {fn} at line {node.lineno}",
+                                  static=_static_call_names(node))
+            elif fn in ("functools.partial", "partial") and node.args:
+                inner = self.canonical(dotted_name(node.args[0]))
+                if inner in _TRACE_WRAPPERS and len(node.args) > 1:
+                    self._mark_traced(
+                        node.args[1], caller,
+                        f"passed to partial({inner}, ...) at line {node.lineno}")
+            elif fn in _TRACE_HOF:
+                for idx in _TRACE_HOF[fn]:
+                    if idx < len(node.args):
+                        self._mark_traced(
+                            node.args[idx], caller,
+                            f"passed to {fn} at line {node.lineno}")
+                for kw in node.keywords:
+                    if kw.arg in ("f", "body_fun", "cond_fun", "body"):
+                        self._mark_traced(
+                            kw.value, caller,
+                            f"passed to {fn} at line {node.lineno}")
+
+        # propagate: everything a traced function calls locally is traced;
+        # call-argument taint flows into callee params
+        frontier = list(self.traced.values())
+        while frontier:
+            fi = frontier.pop()
+            for name, call in fi.calls:
+                callee = self.resolve_call(fi, name)
+                if callee is None:
+                    continue
+                tainted_idx = [
+                    i for i, a in enumerate(call.args)
+                    if _expr_mentions(a, fi.traced_params)]
+                tainted_kw = [
+                    kw.arg for kw in call.keywords
+                    if kw.arg and _expr_mentions(kw.value, fi.traced_params)]
+                changed = False
+                if callee.qualname not in self.traced:
+                    callee.trace_reason = (
+                        f"called from traced {fi.qualname or '<module>'}")
+                    self.traced[callee.qualname] = callee
+                    changed = True
+                pos = [p for p in callee.params if p != "self"]
+                for i in tainted_idx:
+                    if i < len(pos) and pos[i] not in callee.traced_params:
+                        callee.traced_params.add(pos[i])
+                        changed = True
+                for kwname in tainted_kw:
+                    if kwname in callee.params \
+                            and kwname not in callee.traced_params:
+                        callee.traced_params.add(kwname)
+                        changed = True
+                if changed:
+                    frontier.append(callee)
+
+    def _mark_decorated(self, fi: FunctionInfo, reason: str,
+                        static: Optional[set] = None) -> None:
+        if fi.qualname not in self.traced:
+            fi.trace_reason = reason
+            fi.traced_params.update(
+                p for p in fi.params if not static or p not in static)
+            self.traced[fi.qualname] = fi
+
+    # -- taint within one function ---------------------------------------
+    def tainted_names(self, fi: FunctionInfo) -> set[str]:
+        """Names in ``fi`` holding traced values: traced params plus
+        anything assigned from an expression mentioning a tainted name
+        (two passes over the body handle use-before-redef chains)."""
+        tainted = set(fi.traced_params)
+        body_nodes = list(walk_body(fi.node))
+        for _ in range(2):
+            before = len(tainted)
+            for node in body_nodes:
+                targets: list[ast.AST] = []
+                value: Optional[ast.AST] = None
+                if isinstance(node, ast.Assign):
+                    targets, value = node.targets, node.value
+                elif isinstance(node, ast.AugAssign):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.NamedExpr):
+                    targets, value = [node.target], node.value
+                elif isinstance(node, ast.For):
+                    targets, value = [node.target], node.iter
+                if value is None or not taint_mentions(value, tainted):
+                    continue
+                for t in targets:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            tainted.add(n.id)
+            if len(tainted) == before:
+                break
+        return tainted
+
+
+def _expr_mentions(expr: ast.AST, names: set[str]) -> bool:
+    if not names:
+        return False
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Name) and node.id in names:
+            return True
+    return False
+
+
+def taint_mentions(expr: ast.AST, tainted: set[str]) -> bool:
+    """Like ``_expr_mentions`` but shape-aware: does ``expr`` produce a
+    *traced* value given ``tainted`` names? Subtrees under ``.shape`` /
+    ``.ndim`` / ``.dtype`` / ``len(...)`` are concrete at trace time and
+    break the taint (``if x.shape[0] > 1:`` is legal under jit)."""
+    if not tainted:
+        return False
+    if isinstance(expr, ast.Attribute) and expr.attr in _TAINT_BREAKER_ATTRS:
+        return False
+    if isinstance(expr, ast.Call):
+        fn = expr.func
+        if isinstance(fn, ast.Name) and fn.id in _TAINT_BREAKER_CALLS:
+            return False
+    if isinstance(expr, ast.Name):
+        return expr.id in tainted
+    return any(taint_mentions(c, tainted)
+               for c in ast.iter_child_nodes(expr))
+
+
+# ---------------------------------------------------------------------------
+# Engine driver
+# ---------------------------------------------------------------------------
+
+
+def iter_python_files(paths: Iterable[str]) -> Iterable[tuple[str, str]]:
+    """Yield (abs_path, display_path) for every .py under ``paths``."""
+    for root in paths:
+        root = os.path.abspath(root)
+        if os.path.isfile(root):
+            yield root, os.path.basename(root)
+            continue
+        base = os.path.dirname(root)
+        for dirpath, dirnames, filenames in os.walk(root):
+            dirnames[:] = sorted(
+                d for d in dirnames
+                if d not in ("__pycache__", ".git", ".mypy_cache"))
+            for fn in sorted(filenames):
+                if fn.endswith(".py"):
+                    full = os.path.join(dirpath, fn)
+                    yield full, os.path.relpath(full, base).replace(os.sep, "/")
+
+
+def analyze_file(path: str, rel_path: str,
+                 rules: Optional[Iterable[str]] = None) -> list[Finding]:
+    from .rules import run_rules  # late: rules import this module
+    with open(path, encoding="utf-8") as fh:
+        source = fh.read()
+    return analyze_source(source, rel_path, rules=rules, abs_path=path)
+
+
+def analyze_source(source: str, rel_path: str, *,
+                   rules: Optional[Iterable[str]] = None,
+                   abs_path: str = "<string>") -> list[Finding]:
+    from .rules import run_rules
+    try:
+        model = ModuleModel(abs_path, rel_path, source)
+    except SyntaxError as e:
+        return [Finding(rule="R0", path=rel_path, line=e.lineno or 0,
+                        symbol="", detail="syntax-error",
+                        message=f"does not parse: {e.msg}")]
+    return run_rules(model, rules)
+
+
+def analyze_paths(paths: Iterable[str],
+                  rules: Optional[Iterable[str]] = None) -> list[Finding]:
+    findings: list[Finding] = []
+    for full, rel in iter_python_files(paths):
+        findings.extend(analyze_file(full, rel, rules=rules))
+    findings.sort(key=lambda f: (f.path, f.line, f.rule, f.detail))
+    return findings
+
+
+__all__ = [
+    "Baseline",
+    "DEFAULT_TARGETS",
+    "Finding",
+    "FunctionInfo",
+    "ModuleModel",
+    "RULES",
+    "analyze_paths",
+    "analyze_source",
+    "default_baseline_path",
+    "dotted_name",
+    "iter_python_files",
+    "taint_mentions",
+    "walk_body",
+]

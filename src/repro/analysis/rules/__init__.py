@@ -1,0 +1,38 @@
+"""Rule registry for :mod:`repro.analysis` (DESIGN.md §13).
+
+Each rule module exposes ``check(model) -> list[Finding]`` functions
+registered here under their rule ids. Adding a rule = one function + one
+registry entry; the engine (``lint.py``) owns the module model (imports,
+call graph, traced set), the rules own the judgments.
+"""
+from __future__ import annotations
+
+from typing import Iterable, Optional
+
+from ..lint import Finding, ModuleModel
+from . import controller, purity, recompile
+
+#: rule id -> checker. Order is report order within a file.
+REGISTRY = {
+    "R1": purity.check_scan_purity,
+    "R2": purity.check_tracer_leak,
+    "R3": controller.check_controller_purity,
+    "R4": recompile.check_recompile_hazard,
+    "R5": recompile.check_estimator_pytree,
+}
+
+
+def run_rules(model: ModuleModel,
+              rules: Optional[Iterable[str]] = None) -> list[Finding]:
+    selected = list(rules) if rules else list(REGISTRY)
+    unknown = [r for r in selected if r not in REGISTRY]
+    if unknown:
+        raise ValueError(f"unknown rule(s): {', '.join(unknown)}; "
+                         f"available: {', '.join(REGISTRY)}")
+    findings: list[Finding] = []
+    for rule in selected:
+        findings.extend(REGISTRY[rule](model))
+    return findings
+
+
+__all__ = ["REGISTRY", "run_rules"]

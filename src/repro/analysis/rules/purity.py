@@ -1,0 +1,217 @@
+"""R1 scan-purity + R2 tracer-leak: what traced code may not do.
+
+A function is *traced* when it is passed to ``lax.scan`` / ``jit`` /
+``vmap`` / ``lax.cond`` / ``lax.while_loop`` (directly, via decorator, or
+reachable through local calls from such a function — the engine's
+per-module call graph resolves this). Traced Python runs ONCE at trace
+time; anything host-side it does is baked into the compiled program:
+
+* host RNG (``np.random.*``, stdlib ``random``) freezes one draw for
+  every compiled step — the sweep still *runs*, deterministically wrong;
+* wall-clock reads (``time.time`` & co) freeze trace time into results;
+* file/network I/O executes at trace time, not run time, and re-executes
+  on every retrace — silent nondeterminism across cache states.
+
+R2 catches the converse failure: host operations applied to *traced
+values* (``float()``/``int()``/``.item()``/``np.asarray`` force a
+concretization that raises ``TracerArrayConversionError`` under jit, or
+silently falls back to eager under ``lax.scan`` debugging; ``if``/
+``while`` on a traced value raises ``TracerBoolConversionError``). The
+engine's taint pass knows which names in each traced function derive from
+traced parameters, so static config branches (``if cfg.adaptive:`` on a
+closed-over dataclass) stay legal while carry branches are flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from ..lint import (
+    Finding, FunctionInfo, ModuleModel, dotted_name, taint_mentions, walk_body,
+)
+
+#: canonical dotted prefixes forbidden in traced code (R1), with reasons.
+_FORBIDDEN_PREFIXES = (
+    ("numpy.random.", "host RNG"),
+    ("random.", "host RNG"),
+    ("secrets.", "host RNG"),
+    ("time.time", "wall clock"),
+    ("time.monotonic", "wall clock"),
+    ("time.perf_counter", "wall clock"),
+    ("time.process_time", "wall clock"),
+    ("time.sleep", "host sleep"),
+    ("datetime.datetime.now", "wall clock"),
+    ("datetime.datetime.utcnow", "wall clock"),
+    ("datetime.datetime.today", "wall clock"),
+    ("datetime.date.today", "wall clock"),
+    ("datetime.now", "wall clock"),
+    ("socket.", "network I/O"),
+    ("urllib.", "network I/O"),
+    ("requests.", "network I/O"),
+    ("http.client.", "network I/O"),
+    ("os.urandom", "host RNG"),
+    ("os.getenv", "host environment read"),
+    ("os.environ", "host environment read"),
+    ("subprocess.", "host process I/O"),
+)
+
+#: bare builtins forbidden as calls in traced code (R1: file I/O).
+_FORBIDDEN_BUILTINS = {
+    "open": "file I/O",
+    "input": "console I/O",
+}
+
+#: numpy host-conversion calls (R2) once canonicalized.
+_HOST_CONVERSIONS = {
+    "numpy.asarray", "numpy.array", "numpy.asanyarray", "numpy.ascontiguousarray",
+}
+
+
+def _forbidden(canon: str) -> Optional[str]:
+    for prefix, why in _FORBIDDEN_PREFIXES:
+        if canon == prefix or canon.startswith(prefix):
+            return why
+        if prefix.endswith(".") and canon == prefix[:-1]:
+            return why
+    return None
+
+
+def check_scan_purity(model: ModuleModel) -> list[Finding]:
+    """R1: no host RNG / wall clock / IO reachable from traced code."""
+    findings: list[Finding] = []
+    for qual, fi in sorted(model.traced.items()):
+        locals_here = _local_names(fi)
+        for node in walk_body(fi.node):
+            name = None
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func)
+            elif isinstance(node, ast.Attribute):
+                # plain attribute read, e.g. os.environ["X"]
+                name = dotted_name(node)
+            if not name:
+                continue
+            head = name.split(".", 1)[0]
+            if head in locals_here and head not in model.imports:
+                continue  # shadowed by a local binding — not the module
+            canon = model.canonical(name)
+            why = _forbidden(canon)
+            if why is None and isinstance(node, ast.Call) \
+                    and name in _FORBIDDEN_BUILTINS and head not in locals_here:
+                canon, why = name, _FORBIDDEN_BUILTINS[name]
+            if why is not None:
+                findings.append(Finding(
+                    rule="R1", path=model.rel_path, line=node.lineno,
+                    symbol=qual, detail=canon,
+                    message=(
+                        f"{canon} ({why}) inside traced code "
+                        f"({fi.trace_reason}); traced bodies must draw "
+                        f"only from jax.random / carried state"),
+                ))
+    return _dedup(findings)
+
+
+def check_tracer_leak(model: ModuleModel) -> list[Finding]:
+    """R2: no host conversion of, or control flow on, a traced value."""
+    findings: list[Finding] = []
+    for qual, fi in sorted(model.traced.items()):
+        if not fi.traced_params:
+            continue
+        tainted = model.tainted_names(fi)
+        for node in walk_body(fi.node):
+            if isinstance(node, ast.Call):
+                findings.extend(
+                    _check_conversion_call(model, fi, qual, node, tainted))
+            elif isinstance(node, (ast.If, ast.While)):
+                if _mentions_tainted(node.test, tainted):
+                    kind = "if" if isinstance(node, ast.If) else "while"
+                    names = _tainted_in(node.test, tainted)
+                    findings.append(Finding(
+                        rule="R2", path=model.rel_path, line=node.lineno,
+                        symbol=qual, detail=f"{kind}-on-traced:{names}",
+                        message=(
+                            f"`{kind}` branches on traced value(s) "
+                            f"{names} ({fi.trace_reason}); use jnp.where/"
+                            f"lax.cond — a Python branch raises "
+                            f"TracerBoolConversionError under jit"),
+                    ))
+    return _dedup(findings)
+
+
+def _check_conversion_call(model: ModuleModel, fi: FunctionInfo, qual: str,
+                           node: ast.Call, tainted: set[str]) -> list[Finding]:
+    out: list[Finding] = []
+    name = dotted_name(node.func)
+    if name is None:
+        return out
+    canon = model.canonical(name)
+    arg0_tainted = bool(node.args) and _mentions_tainted(node.args[0], tainted)
+    if name in ("float", "int", "bool", "complex") and arg0_tainted:
+        names = _tainted_in(node.args[0], tainted)
+        out.append(Finding(
+            rule="R2", path=model.rel_path, line=node.lineno, symbol=qual,
+            detail=f"{name}-on-traced:{names}",
+            message=(
+                f"{name}() concretizes traced value(s) {names} "
+                f"({fi.trace_reason}); this raises "
+                f"TracerArrayConversionError under jit"),
+        ))
+    elif canon in _HOST_CONVERSIONS and arg0_tainted:
+        names = _tainted_in(node.args[0], tainted)
+        out.append(Finding(
+            rule="R2", path=model.rel_path, line=node.lineno, symbol=qual,
+            detail=f"{canon}-on-traced:{names}",
+            message=(
+                f"{canon}() pulls traced value(s) {names} to host "
+                f"({fi.trace_reason}); use jnp.asarray to stay on device"),
+        ))
+    elif isinstance(node.func, ast.Attribute) and node.func.attr == "item" \
+            and not node.args \
+            and _mentions_tainted(node.func.value, tainted):
+        names = _tainted_in(node.func.value, tainted)
+        out.append(Finding(
+            rule="R2", path=model.rel_path, line=node.lineno, symbol=qual,
+            detail=f"item-on-traced:{names}",
+            message=(
+                f".item() forces a host sync on traced value(s) {names} "
+                f"({fi.trace_reason})"),
+        ))
+    return out
+
+
+def _local_names(fi: FunctionInfo) -> set[str]:
+    """Params + names assigned anywhere in the body (shadow check)."""
+    names = set(fi.params)
+    for node in walk_body(fi.node):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign,
+                             ast.NamedExpr, ast.For)):
+            targets = getattr(node, "targets", None) \
+                or [getattr(node, "target", None)]
+            for t in targets:
+                if t is None:
+                    continue
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        names.add(n.id)
+    return names
+
+
+def _mentions_tainted(expr: ast.AST, tainted: set[str]) -> bool:
+    # shape-aware: `if x.shape[0] > 1:` on a traced x is legal under jit
+    return taint_mentions(expr, tainted)
+
+
+def _tainted_in(expr: ast.AST, tainted: set[str]) -> str:
+    hits = sorted({n.id for n in ast.walk(expr)
+                   if isinstance(n, ast.Name) and n.id in tainted})
+    return ",".join(hits)
+
+
+def _dedup(findings: list[Finding]) -> list[Finding]:
+    seen: set[tuple] = set()
+    out = []
+    for f in findings:
+        key = (f.fingerprint, f.line)
+        if key not in seen:
+            seen.add(key)
+            out.append(f)
+    return out

@@ -1,0 +1,238 @@
+"""R4 recompile-hazard + R5 estimator-pytree.
+
+R4 — the serving/sim fast paths assert "zero recompiles on the second
+batch" in CI (grid/openloop sweeps); this rule catches the hazards that
+break that guard *before* a sweep has to:
+
+* ``jax.jit(f)(x)`` — jit applied and immediately invoked builds a fresh
+  compile-cache entry per call site execution;
+* ``jax.jit``/``jax.vmap`` application inside a ``for``/``while`` loop —
+  a new wrapper per iteration never hits the cache (the repo idiom is a
+  module-level ``_JIT_CACHE`` keyed on static config, sim/vectorized.py);
+* ``list``/``dict``/``set`` literals passed to a known-jitted callable —
+  a per-call container changes the pytree structure (or, for static
+  args, is unhashable) and retraces; pass a tuple / NamedTuple.
+
+R5 — scan carriers must be NamedTuples / registered pytrees with array
+leaves (the ``VecState``/``OpenState``/``WelfordState`` idiom): a raw
+``list``/``dict``/``set`` literal initializer retraces on any structure
+drift and defeats the carry-pruning the fast path relies on (``None``
+leaves pruning, sim/vectorized.py). Checked at ``lax.scan`` call sites
+(the ``init`` argument) and in locally-resolved scan bodies (the carry
+element of the returned pair).
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from ..lint import Finding, ModuleModel, dotted_name, walk_body
+
+_JIT_WRAPPERS = {"jax.jit", "jax.pmap"}
+_LOOPY_WRAPPERS = {"jax.jit", "jax.pmap", "jax.vmap"}
+
+
+def _canon_call(model: ModuleModel, node: ast.Call) -> Optional[str]:
+    return model.canonical(dotted_name(node.func))
+
+
+def _is_jit_application(model: ModuleModel, node: ast.AST,
+                        wrappers: set) -> bool:
+    """``jax.jit(...)`` or ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return False
+    fn = _canon_call(model, node)
+    if fn in wrappers:
+        return True
+    if fn in ("functools.partial", "partial") and node.args:
+        return model.canonical(dotted_name(node.args[0])) in wrappers
+    return False
+
+
+def _collect_jitted_names(model: ModuleModel) -> dict[str, int]:
+    """Names bound to jitted callables: ``f = jax.jit(g)`` assignments and
+    ``@jax.jit`` / ``@partial(jax.jit, ...)`` decorated defs."""
+    jitted: dict[str, int] = {}
+    for node in ast.walk(model.tree):
+        if isinstance(node, ast.Assign) and _is_jit_application(
+                model, node.value, _JIT_WRAPPERS):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    jitted[t.id] = node.lineno
+        elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                dec_fn = model.canonical(dotted_name(dec))
+                if dec_fn in _JIT_WRAPPERS or _is_jit_application(
+                        model, dec, _JIT_WRAPPERS):
+                    jitted[node.name] = node.lineno
+    return jitted
+
+
+def check_recompile_hazard(model: ModuleModel) -> list[Finding]:
+    findings: list[Finding] = []
+    jitted = _collect_jitted_names(model)
+
+    # parent map for enclosing-loop / enclosing-call detection
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(model.tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    def enclosing_symbol(node: ast.AST) -> str:
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for fi in model.functions.values():
+                    if fi.node is cur:
+                        return fi.qualname
+                return cur.name
+            cur = parents.get(cur)
+        return ""
+
+    def inside_loop(node: ast.AST) -> bool:
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.For, ast.While, ast.AsyncFor)):
+                return True
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                return False  # a def inside a loop compiles once per call
+            cur = parents.get(cur)
+        return False
+
+    for node in ast.walk(model.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        # jax.jit(f)(x): jit application immediately invoked
+        if isinstance(node.func, ast.Call) and _is_jit_application(
+                model, node.func, _JIT_WRAPPERS):
+            findings.append(Finding(
+                rule="R4", path=model.rel_path, line=node.lineno,
+                symbol=enclosing_symbol(node), detail="jit-immediate-call",
+                message=(
+                    "jax.jit(...) applied and immediately called — the "
+                    "wrapper (and its compile cache entry) dies with the "
+                    "expression; bind the jitted function once (module "
+                    "level or a keyed cache) and call that"),
+            ))
+        # jit/vmap application inside a Python loop
+        elif _is_jit_application(model, node, _LOOPY_WRAPPERS) \
+                and inside_loop(node):
+            fn = _canon_call(model, node) or "jax.jit"
+            findings.append(Finding(
+                rule="R4", path=model.rel_path, line=node.lineno,
+                symbol=enclosing_symbol(node), detail=f"jit-in-loop:{fn}",
+                message=(
+                    f"{fn} applied inside a loop — every iteration builds "
+                    f"a fresh wrapper that cannot hit the compile cache; "
+                    f"hoist the application out of the loop"),
+            ))
+        # container literals at known-jitted call sites
+        if isinstance(node.func, ast.Name) and node.func.id in jitted:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, (ast.List, ast.Dict, ast.Set)):
+                    kind = type(arg).__name__.lower()
+                    findings.append(Finding(
+                        rule="R4", path=model.rel_path, line=node.lineno,
+                        symbol=enclosing_symbol(node),
+                        detail=f"container-arg:{node.func.id}:{kind}",
+                        message=(
+                            f"{kind} literal passed to jitted "
+                            f"`{node.func.id}` (bound at line "
+                            f"{jitted[node.func.id]}): unhashable as a "
+                            f"static arg and structure-unstable as a "
+                            f"traced one — pass a tuple / NamedTuple"),
+                    ))
+    return findings
+
+
+def _bad_carry_literal(node: ast.AST) -> Optional[str]:
+    """'list'/'dict'/'set' when the expression is (or a tuple directly
+    contains) a raw mutable-container literal."""
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return type(node).__name__.lower()
+    if isinstance(node, ast.Tuple):
+        for elt in node.elts:
+            bad = _bad_carry_literal(elt)
+            if bad:
+                return bad
+    return None
+
+
+def check_estimator_pytree(model: ModuleModel) -> list[Finding]:
+    findings: list[Finding] = []
+    parents: dict[ast.AST, ast.AST] = {}
+    for node in ast.walk(model.tree):
+        for child in ast.iter_child_nodes(node):
+            parents[child] = node
+
+    def enclosing(node: ast.AST):
+        cur = parents.get(node)
+        while cur is not None:
+            if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                for fi in model.functions.values():
+                    if fi.node is cur:
+                        return fi
+            cur = parents.get(cur)
+        return None
+
+    for node in ast.walk(model.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn = _canon_call(model, node)
+        if fn != "jax.lax.scan":
+            continue
+        sym_fi = enclosing(node)
+        sym = sym_fi.qualname if sym_fi else ""
+        init = node.args[1] if len(node.args) > 1 else None
+        for kw in node.keywords:
+            if kw.arg == "init":
+                init = kw.value
+        if isinstance(init, ast.Name) and sym_fi is not None:
+            # resolve one level of local binding: init = {...}; scan(f, init)
+            init_name = init.id
+            for stmt in walk_body(sym_fi.node):
+                if isinstance(stmt, ast.Assign) \
+                        and stmt.lineno < node.lineno \
+                        and any(isinstance(t, ast.Name) and t.id == init_name
+                                for t in stmt.targets):
+                    init = stmt.value
+        if init is not None:
+            bad = _bad_carry_literal(init)
+            if bad:
+                findings.append(Finding(
+                    rule="R5", path=model.rel_path, line=node.lineno,
+                    symbol=sym, detail=f"scan-init-literal:{bad}",
+                    message=(
+                        f"lax.scan carry initialized from a raw {bad} "
+                        f"literal; carriers must be NamedTuples / "
+                        f"registered pytrees with array leaves (the "
+                        f"VecState/WelfordState idiom) so the carry "
+                        f"structure is stable across steps"),
+                ))
+        # resolved scan body: the returned carry must not be a container
+        # literal either
+        body_expr = node.args[0] if node.args else None
+        body_fi = None
+        if body_expr is not None and sym_fi is not None:
+            name = dotted_name(body_expr)
+            if name:
+                body_fi = model.resolve_call(sym_fi, name)
+        if body_fi is not None:
+            for sub in walk_body(body_fi.node):
+                if isinstance(sub, ast.Return) and sub.value is not None \
+                        and isinstance(sub.value, ast.Tuple) \
+                        and sub.value.elts:
+                    bad = _bad_carry_literal(sub.value.elts[0])
+                    if bad:
+                        findings.append(Finding(
+                            rule="R5", path=model.rel_path,
+                            line=sub.lineno, symbol=body_fi.qualname,
+                            detail=f"scan-carry-return-literal:{bad}",
+                            message=(
+                                f"scan body returns a raw {bad} literal "
+                                f"as its carry; return the same "
+                                f"NamedTuple/pytree type the scan was "
+                                f"initialized with"),
+                        ))
+    return findings

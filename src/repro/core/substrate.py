@@ -718,6 +718,13 @@ class SubstrateEngine:
         self.body_stats = Welford()       # observed body durations (ms)
         self.reuse_stats = Welford()      # 1.0 warm-served / 0.0 cold-served
         self.telemetry = Telemetry(self)
+        # REPRO_SANITIZE=1 arms conservation/heap/immutability cross-checks
+        # on this engine and its pool (repro.analysis.sanitizer). Attached
+        # per instance here so benchmarks and examples get covered too,
+        # not just pytest runs; a cold env check costs one dict lookup.
+        from ..analysis import sanitizer as _sanitizer
+        if _sanitizer.enabled():
+            _sanitizer.attach_engine(self)
 
     def _decide(self, point: str):
         """Count the decision-point call on the controller (sweep summaries)."""

@@ -200,13 +200,12 @@ def init_params(cfg: ArchConfig, key) -> dict[str, Any]:
         ),
         "groups": [],
     }
+    init_mlstm_stack = jax.vmap(functools.partial(init_mlstm_block, cfg))
     for gi, (kind, count) in enumerate(_plan(cfg)):
         gk = jax.random.fold_in(k_blocks, gi)
         if kind == "mlstm":
             keys = jax.random.split(gk, count)
-            params["groups"].append(
-                jax.vmap(functools.partial(init_mlstm_block, cfg))(keys)
-            )
+            params["groups"].append(init_mlstm_stack(keys))
         else:
             params["groups"].append(init_slstm_block(cfg, gk))
     return params

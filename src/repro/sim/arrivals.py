@@ -45,6 +45,7 @@ from typing import Any, Callable, List, Optional, Protocol, Sequence, runtime_ch
 
 import numpy as np
 
+from repro.analysis import sanitizer as _sanitizer
 from repro.core.control import AdmitContext, AdmitDecision
 from repro.core.substrate import RequestResult, SubstrateEngine
 
@@ -473,6 +474,10 @@ def run_open_loop(
     # that neither completed nor dropped
     pending_at_end = len(pending) + counts["in_flight"]
     end_clock = engine.loop.now
+    if _sanitizer.enabled():
+        _sanitizer.check_open_loop(
+            n_arrived=n_arrived, n_completed=len(results),
+            n_dropped=n_dropped, n_pending_at_end=pending_at_end)
     censored = [end_clock - it.arrived_at for it in pending]
     censored += [
         end_clock - inv.first_enqueued_at_ms

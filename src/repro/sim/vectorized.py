@@ -58,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitizer as _sanitizer
 from repro.core.cost import Pricing
 from repro.core.estimators import (
     P2State,
@@ -1563,6 +1564,8 @@ def simulate_arms(
     if requests is not None:
         # vmap axes lead, scan's step axis last → (arms, seeds, steps)
         requests = {k: np.asarray(v) for k, v in requests.items()}
+    if _sanitizer.enabled():
+        _sanitizer.check_finite(summary, where="simulate_arms")
     return VecResult(summary=summary, requests=requests, n_arms=n_arms,
                      n_seeds=len(seeds), n_steps=int(n_steps))
 
@@ -1675,6 +1678,9 @@ def simulate_open_arms(
     summary = {k: np.asarray(v) for k, v in summary.items()}
     if requests is not None:
         requests = {k: np.asarray(v) for k, v in requests.items()}
+    if _sanitizer.enabled():
+        _sanitizer.check_open_summary(summary, n_steps,
+                                      where="simulate_open_arms")
     return VecResult(summary=summary, requests=requests, n_arms=n_arms,
                      n_seeds=len(seeds), n_steps=n_steps)
 

@@ -1,0 +1,22 @@
+"""Mutation fixture: R1 — forbidden call reachable through a local helper
+(two hops), exercising the per-module call-graph propagation."""
+import random
+
+import jax
+import jax.numpy as jnp
+
+
+def _draw():
+    return random.random()              # R1: host RNG, two calls deep
+
+
+def _helper(carry):
+    return carry + _draw()
+
+
+def step(carry, x):
+    return _helper(carry), x
+
+
+def run(xs):
+    return jax.lax.scan(step, jnp.zeros(()), xs)

@@ -1,0 +1,16 @@
+"""Mutation fixture: R1 — host RNG / wall clock directly in a scan body."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def step(carry, x):
+    noise = np.random.normal()          # R1: host RNG
+    stamp = time.time()                 # R1: wall clock
+    return carry + noise + stamp, x
+
+
+def run(xs):
+    return jax.lax.scan(step, jnp.zeros(()), xs)

@@ -1,0 +1,17 @@
+"""Mutation fixture: R2 — host conversions of / branches on traced values."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def step(carry, x):
+    if carry > 0:                       # R2: if-on-traced
+        carry = carry - 1.0
+    y = float(x)                        # R2: float-on-traced
+    z = np.asarray(carry)               # R2: host conversion
+    w = carry.item()                    # R2: host sync
+    return carry + y + z + w, x
+
+
+def run(xs):
+    return jax.lax.scan(step, jnp.zeros(()), xs)

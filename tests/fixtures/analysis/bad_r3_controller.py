@@ -1,0 +1,19 @@
+"""Mutation fixture: R3 — controller mutating telemetry / pool / globals."""
+
+_shared_counter = 0
+
+
+class RogueController:
+    history = []                        # R3: mutable class attr
+
+    def on_admit(self, ctx):
+        ctx.telemetry.depth = 3         # R3: telemetry write
+        return True
+
+    def on_reuse(self, ctx):
+        ctx.telemetry._engine.pool.retire(ctx.instance)  # R3: pool mutator
+        return None
+
+    def on_release(self, ctx):
+        global _shared_counter          # R3: global state
+        _shared_counter += 1

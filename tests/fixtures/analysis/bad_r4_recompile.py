@@ -1,0 +1,25 @@
+"""Mutation fixture: R4 — recompile hazards at jitted call sites."""
+import jax
+import jax.numpy as jnp
+
+
+def f(x):
+    return x * 2
+
+
+g = jax.jit(f)
+
+
+def immediate(x):
+    return jax.jit(f)(x)                # R4: jit applied then called
+
+
+def in_loop(xs):
+    out = []
+    for x in xs:
+        out.append(jax.jit(f)(x))       # R4: jit inside a loop (and immediate)
+    return out
+
+
+def container_arg():
+    return g([1.0, 2.0, 3.0])           # R4: list literal to jitted callable

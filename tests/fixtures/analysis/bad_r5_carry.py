@@ -1,0 +1,27 @@
+"""Mutation fixture: R5 — raw container literals as scan carriers."""
+import jax
+import jax.numpy as jnp
+
+
+def step(carry, x):
+    return carry, x
+
+
+def dict_init(xs):
+    return jax.lax.scan(step, {"a": jnp.zeros(())}, xs)   # R5: dict literal
+
+
+def named_dict_init(xs):
+    state = {"a": jnp.zeros(()), "b": jnp.ones(())}
+    return jax.lax.scan(step, state, xs)                  # R5: via local name
+
+
+def list_in_tuple_init(xs):
+    return jax.lax.scan(step, (jnp.zeros(()), [1.0]), xs)  # R5: list in tuple
+
+
+def bad_body(xs):
+    def step_list(carry, x):
+        return [carry[0] + x], x                           # R5: list carry out
+
+    return jax.lax.scan(step_list, (jnp.zeros(()),), xs)

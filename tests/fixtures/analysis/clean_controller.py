@@ -1,0 +1,20 @@
+"""Clean fixture: a well-behaved controller — reads telemetry, keeps
+per-instance state, returns decisions, never mutates engine state."""
+
+
+class WellBehavedController:
+    def __init__(self):
+        self.observations = []          # per-instance state: fine
+
+    def on_admit(self, ctx):
+        depth = ctx.telemetry.queue_depth      # read: fine
+        self.observations.append(depth)
+        return depth < 10
+
+    def on_reuse(self, ctx):
+        return "KEEP"
+
+
+def helper_uses_pool_legally(pool, inst):
+    # module-level engine code (not a Controller class) may mutate pools
+    pool.release(inst)

@@ -1,0 +1,49 @@
+"""Clean fixture: the idioms the rules must NOT flag.
+
+Covers: jax.random in scan bodies, static_argnames branches, shape-based
+control flow on traced arrays, closure-static config branches, host RNG
+*outside* traced code, and a NamedTuple carry.
+"""
+import functools
+import time
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Carry(NamedTuple):
+    total: jax.Array
+    key: jax.Array
+
+
+def step(carry, x):
+    key, sub = jax.random.split(carry.key)      # device RNG: fine
+    noise = jax.random.normal(sub)
+    if x.shape[0] > 1:                          # shape branch: concrete
+        noise = noise * 2.0
+    return Carry(carry.total + noise, key), x
+
+
+def run(xs, cfg):
+    init = Carry(jnp.zeros(()), jax.random.PRNGKey(0))
+    if cfg.adaptive:                            # closure-static config: fine
+        xs = xs * 2.0
+    return jax.lax.scan(step, init, xs)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "scale"))
+def kernel(x, *, block: int = 8, scale: float = 1.0):
+    if block > x.shape[0]:                      # static arg branch: fine
+        block = x.shape[0]
+    if scale is None:
+        scale = 1.0
+    return x * float(scale) * block             # float() on a static: fine
+
+
+def host_driver(xs):
+    t0 = time.time()                            # host side: fine
+    rng = np.random.RandomState(0)              # host side: fine
+    _ = rng.normal()
+    return time.time() - t0

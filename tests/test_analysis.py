@@ -1,0 +1,276 @@
+"""repro.analysis static checker (DESIGN.md §13).
+
+Mutation-style self-tests: each fixture under tests/fixtures/analysis/
+injects exactly one violation class and must trigger exactly the expected
+rule; the clean fixtures exercise the idioms the rules must NOT flag
+(jax.random in scan bodies, static_argnames branches, shape-based control
+flow, closure-static config). Plus baseline grandfathering mechanics and
+the ``python -m repro.analysis --ci`` contract the CI lint job runs.
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    Finding,
+    analyze_paths,
+    analyze_source,
+)
+from repro.analysis.lint import analyze_file
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "analysis")
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _rules_for(fixture: str) -> set:
+    path = os.path.join(FIXTURES, fixture)
+    return {f.rule for f in analyze_file(path, fixture)}
+
+
+def _findings_for(fixture: str):
+    path = os.path.join(FIXTURES, fixture)
+    return analyze_file(path, fixture)
+
+
+# ---------------------------------------------------------------------------
+# Mutation fixtures: each violation class fires its rule
+# ---------------------------------------------------------------------------
+
+
+def test_r1_direct_scan_rng_and_clock():
+    fs = _findings_for("bad_r1_scan_rng.py")
+    details = {f.detail for f in fs if f.rule == "R1"}
+    assert any(d.startswith("numpy.random") for d in details), details
+    assert "time.time" in details
+    assert all(f.symbol == "step" for f in fs if f.rule == "R1")
+
+
+def test_r1_reaches_through_local_call_chain():
+    fs = [f for f in _findings_for("bad_r1_indirect.py") if f.rule == "R1"]
+    assert fs, "call-graph propagation missed a two-hop RNG call"
+    assert fs[0].detail == "random.random"
+    assert fs[0].symbol == "_draw"
+
+
+def test_r2_conversions_and_branches_on_traced():
+    details = {f.detail.split(":")[0]
+               for f in _findings_for("bad_r2_tracer.py") if f.rule == "R2"}
+    assert "if-on-traced" in details
+    assert "float-on-traced" in details
+    assert "numpy.asarray-on-traced" in details
+    assert "item-on-traced" in details
+
+
+def test_r3_controller_violations():
+    details = {f.detail.split(":")[0]
+               for f in _findings_for("bad_r3_controller.py") if f.rule == "R3"}
+    assert details == {"mutable-class-attr", "telemetry-write",
+                       "pool-mutator", "global-state"}
+
+
+def test_r4_recompile_hazards():
+    details = {f.detail.split(":")[0]
+               for f in _findings_for("bad_r4_recompile.py") if f.rule == "R4"}
+    assert "jit-immediate-call" in details
+    assert "jit-in-loop" in details
+    assert "container-arg" in details
+
+
+def test_r5_carry_literals():
+    details = {f.detail for f in _findings_for("bad_r5_carry.py")
+               if f.rule == "R5"}
+    assert "scan-init-literal:dict" in details          # direct + via name
+    assert "scan-init-literal:list" in details          # list inside tuple
+    assert "scan-carry-return-literal:list" in details  # body return
+
+
+def test_every_bad_fixture_fires_only_its_rule():
+    expected = {
+        "bad_r1_scan_rng.py": {"R1"},
+        "bad_r1_indirect.py": {"R1"},
+        "bad_r2_tracer.py": {"R2"},
+        "bad_r3_controller.py": {"R3"},
+        "bad_r4_recompile.py": {"R4"},
+        "bad_r5_carry.py": {"R5"},
+    }
+    for fixture, rules in expected.items():
+        assert _rules_for(fixture) == rules, fixture
+
+
+def test_clean_fixtures_stay_clean():
+    for fixture in ("clean_scan.py", "clean_controller.py"):
+        assert _rules_for(fixture) == set(), (
+            f"{fixture} false positives: {_findings_for(fixture)}")
+
+
+def test_syntax_error_reported_not_crashed():
+    fs = analyze_source("def broken(:\n", "broken.py")
+    assert [f.rule for f in fs] == ["R0"]
+
+
+# ---------------------------------------------------------------------------
+# Engine behavior details
+# ---------------------------------------------------------------------------
+
+
+def test_shape_reads_break_taint():
+    src = (
+        "import jax\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    n = x.shape[0]\n"
+        "    if n > 1:\n"
+        "        return x * 2\n"
+        "    return x\n")
+    assert analyze_source(src, "m.py") == []
+
+
+def test_static_argnums_excluded_from_taint():
+    src = (
+        "import functools, jax\n"
+        "@functools.partial(jax.jit, static_argnums=(1,))\n"
+        "def f(x, mode):\n"
+        "    if mode:\n"
+        "        return x * 2\n"
+        "    return x\n")
+    assert analyze_source(src, "m.py") == []
+
+
+def test_import_alias_canonicalization():
+    src = (
+        "import numpy.random as npr\n"
+        "import jax\n"
+        "def step(c, x):\n"
+        "    return c + npr.normal(), x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(step, 0, xs)\n")
+    fs = analyze_source(src, "m.py")
+    assert [f.rule for f in fs] == ["R1"]
+    assert fs[0].detail == "numpy.random.normal"
+
+
+def test_local_shadow_suppresses_r1():
+    src = (
+        "import jax\n"
+        "def step(c, x, time):\n"   # param shadows the stdlib module
+        "    return c + time.time(), x\n"
+        "def run(xs):\n"
+        "    return jax.lax.scan(step, 0, xs)\n")
+    assert all(f.detail != "time.time" for f in analyze_source(src, "m.py"))
+
+
+# ---------------------------------------------------------------------------
+# Baseline mechanics
+# ---------------------------------------------------------------------------
+
+
+def _finding(line=10, detail="numpy.random.normal"):
+    return Finding(rule="R1", path="src/x.py", line=line, symbol="step",
+                   detail=detail, message="msg")
+
+
+def test_fingerprint_is_line_independent():
+    assert _finding(line=10).fingerprint == _finding(line=99).fingerprint
+    assert _finding(detail="time.time").fingerprint != _finding().fingerprint
+
+
+def test_baseline_split_and_roundtrip(tmp_path):
+    grandfathered = _finding()
+    fresh = _finding(detail="time.time")
+    bl = Baseline({grandfathered.fingerprint: "pre-existing, tracked"})
+    new, old, stale = bl.split([grandfathered, fresh])
+    assert new == [fresh]
+    assert old == [grandfathered]
+    assert stale == []
+    # entries for findings that disappeared are reported stale
+    new, old, stale = bl.split([fresh])
+    assert stale == [grandfathered.fingerprint]
+    # save/load round-trips entries
+    p = tmp_path / "baseline.json"
+    bl.save(str(p))
+    assert Baseline.load(str(p)).entries == bl.entries
+
+
+def test_missing_baseline_file_is_empty():
+    assert Baseline.load("/nonexistent/baseline.json").entries == {}
+
+
+# ---------------------------------------------------------------------------
+# CLI contract (what CI runs)
+# ---------------------------------------------------------------------------
+
+
+def _run_cli(*args, cwd=REPO):
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=cwd)
+
+
+def test_cli_ci_clean_on_shipped_tree():
+    proc = _run_cli("--ci")
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
+
+
+def test_cli_fails_on_mutation_fixture(tmp_path):
+    bad = tmp_path / "src"
+    bad.mkdir()
+    shutil.copy(os.path.join(FIXTURES, "bad_r1_scan_rng.py"),
+                bad / "bad_r1_scan_rng.py")
+    proc = _run_cli("--ci", str(bad))
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "R1" in proc.stdout
+
+
+def test_cli_rules_filter_and_json(tmp_path):
+    bad = tmp_path / "src"
+    bad.mkdir()
+    shutil.copy(os.path.join(FIXTURES, "bad_r2_tracer.py"),
+                bad / "bad_r2_tracer.py")
+    # a rule filter that excludes the violation passes
+    proc = _run_cli("--rules", "R3,R4", str(bad))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # --json emits machine-readable findings
+    proc = _run_cli("--json", "--no-baseline", str(bad))
+    assert proc.returncode == 1
+    findings = json.loads(proc.stdout)
+    assert findings and all(f["rule"] == "R2" for f in findings)
+
+
+def test_cli_unknown_rule_is_usage_error():
+    assert _run_cli("--rules", "R9").returncode == 2
+
+
+def test_cli_write_baseline_then_clean(tmp_path):
+    bad = tmp_path / "src"
+    bad.mkdir()
+    shutil.copy(os.path.join(FIXTURES, "bad_r5_carry.py"),
+                bad / "bad_r5_carry.py")
+    bl = tmp_path / "baseline.json"
+    proc = _run_cli("--write-baseline", "--baseline", str(bl), str(bad))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # grandfathered now: same tree passes against that baseline
+    proc = _run_cli("--ci", "--baseline", str(bl), str(bad))
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    # but a NEW violation still fails
+    shutil.copy(os.path.join(FIXTURES, "bad_r1_scan_rng.py"),
+                bad / "bad_r1_scan_rng.py")
+    proc = _run_cli("--ci", "--baseline", str(bl), str(bad))
+    assert proc.returncode == 1
+
+
+def test_shipped_tree_has_no_baseline_entries():
+    """The repo ships lint-clean with an empty grandfather list — new
+    engines/controllers must keep it that way (ROADMAP)."""
+    from repro.analysis import default_baseline_path
+    with open(default_baseline_path()) as fh:
+        assert json.load(fh)["findings"] == []
+    src = os.path.join(REPO, "src")
+    benches = os.path.join(REPO, "benchmarks")
+    assert analyze_paths([src, benches]) == []
