@@ -1,0 +1,269 @@
+"""Fleet meta-scheduler sweep: routing policies × rate ladder × drift
+over a heterogeneous gen1+gen2+lambda fleet (EXPERIMENTS.md §Fleet
+sweep; DESIGN.md §14).
+
+Every fleet is a full Minos-gated :class:`~repro.sim.platform.FaaSPlatform`
+with its own variability, cold-start profile, pricing tier, and supply
+cap, all on one shared clock; one open-loop request stream is split
+across them by a :class:`~repro.fleet.policies.RoutingPolicy`:
+
+* **fleets** — gcf-gen1 (cheap, high σ, 1 req/instance), gcf-gen2
+  (fast, stable, 4×-concurrent, expensive tier), aws-lambda (mid).
+  Per-fleet ``max_instances`` caps are set so every *single* fleet
+  saturates below the top aggregate rate — a static one-hot assignment
+  must blow up there, which is exactly the regime a meta-scheduler
+  exists for.
+* **policies** — random (floor), the three static one-hots (the best of
+  them is the bar the probabilistic split must beat), greedy (argmin
+  expected response from live telemetry), probabilistic (periodically
+  re-solved LP/waterfill split), and probabilistic+hedge (duplicate a
+  straggler onto a second fleet after ``HEDGE_AFTER_MS``; the loser is
+  still billed — honest accounting).
+* **drift** — ``stable`` (low contention AR(1) ρ) vs ``drift`` (ρ=0.95
+  reuse drift) legs; an Azure-Functions-style trace leg
+  (tests/data/azure_invocations_sample.csv) replaces the Poisson stream
+  in the non-smoke modes.
+
+Timing goes to **stderr**; two ``--smoke`` runs produce byte-identical
+stdout (the CI determinism diff). No vectorized leg: the router is
+event-driven control flow (per-request callbacks), so there is no jitted
+program to guard for recompiles here.
+
+Usage: PYTHONPATH=src python benchmarks/fleet_sweep.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import os
+import sys
+import time
+
+import numpy as np
+from scipy import stats
+
+from repro.core.policy import MinosPolicy
+from repro.fleet import (
+    FleetRouter,
+    FleetSpec,
+    GreedyRoutingPolicy,
+    ProbabilisticRoutingPolicy,
+    RandomRoutingPolicy,
+    WeightedStaticRoutingPolicy,
+    run_fleet_open_loop,
+)
+from repro.sim import (
+    FunctionSpec,
+    PlatformProfile,
+    PoissonProcess,
+    TraceProcess,
+    VariationModel,
+)
+from repro.sim.metrics import FleetSummary
+
+PASS_FRACTION = 0.4
+BODY_MS = 1200.0
+HEDGE_AFTER_MS = 4 * BODY_MS
+AZURE_TRACE = os.path.join(os.path.dirname(__file__), "..", "tests",
+                           "data", "azure_invocations_sample.csv")
+
+
+def _spec(rho: float) -> FunctionSpec:
+    return FunctionSpec(
+        name="weather-linreg-fleet",
+        prepare_ms=300.0,
+        body_ms=BODY_MS,
+        benchmark_ms=300.0,
+        contention_rho=rho,
+        benchmark_noise=0.08,
+    )
+
+
+def _threshold(vm: VariationModel, spec: FunctionSpec) -> float:
+    """Per-fleet elysium threshold at the same pass fraction: each gate
+    certifies the SAME share of its own speed distribution, so fleets
+    differ in what a certified instance is worth, not in gate strictness."""
+    sigma_tot = math.sqrt(vm.sigma ** 2 + spec.benchmark_noise ** 2)
+    return spec.benchmark_ms * math.exp(
+        stats.norm.ppf(PASS_FRACTION) * sigma_tot)
+
+
+def _fleets(rho: float) -> list[FleetSpec]:
+    """Heterogeneous ladder. Slots per fleet: gen1 4×1, gen2 1×4,
+    lambda 3×1 — each alone saturates near ~2.5-3.3 req/s at BODY_MS,
+    the combined supply comfortably absorbs the top ladder rate."""
+    spec = _spec(rho)
+    rows = [
+        ("gen1", PlatformProfile.gcf_gen1(),
+         VariationModel(sigma=0.30), 4),
+        ("gen2", PlatformProfile.gcf_gen2(),
+         VariationModel(sigma=0.10, day_factor=1.15), 1),
+        ("lambda", PlatformProfile.aws_lambda(),
+         VariationModel(sigma=0.20, day_factor=0.95), 3),
+    ]
+    fleets = []
+    for name, prof, vm, cap in rows:
+        knobs = dataclasses.replace(prof.knobs(), max_instances=cap)
+        fleets.append(FleetSpec(
+            name=name, spec=spec, variation=vm, profile=prof, knobs=knobs,
+            policy=MinosPolicy(elysium_threshold=_threshold(vm, spec),
+                               max_retries=5)))
+    return fleets
+
+
+def _policies(n_fleets: int, smoke: bool):
+    """(arm label, policy factory, hedge_after_ms) triples. Factories,
+    not instances: stateful policies must be rebuilt per run."""
+    arms = [
+        ("random", RandomRoutingPolicy, None),
+        ("greedy", GreedyRoutingPolicy, None),
+        ("probabilistic",
+         lambda: ProbabilisticRoutingPolicy(prior_unit_ms=BODY_MS), None),
+    ]
+    for i in range(n_fleets):
+        arms.insert(1 + i, (f"static[{i}]",
+                            lambda i=i: WeightedStaticRoutingPolicy.one_hot(
+                                i, n_fleets), None))
+    if not smoke:
+        arms.append(("prob+hedge",
+                     lambda: ProbabilisticRoutingPolicy(
+                         prior_unit_ms=BODY_MS), HEDGE_AFTER_MS))
+    return arms
+
+
+def _run_arm(fleets, label, policy_factory, hedge_ms, process, seeds,
+             duration_ms):
+    """Seed-pooled FleetSummary means for one (policy × process) cell."""
+    summaries = []
+    for seed in seeds:
+        router = FleetRouter(fleets, policy_factory(), seed=seed,
+                             hedge_after_ms=hedge_ms)
+        run = run_fleet_open_loop(
+            router, process, rng=np.random.RandomState(17_000 + seed),
+            duration_ms=duration_ms, drain_limit_ms=180_000.0)
+        router.check_conservation()  # every arm, not only under the env gate
+        summaries.append(FleetSummary.from_run(label, router, run))
+    return summaries
+
+
+def _pool(summaries, field) -> float:
+    return float(np.mean([getattr(s, field) for s in summaries]))
+
+
+def _row(label, process_name, rate, drift, summaries):
+    shares = np.mean(
+        [[f["share"] for f in s.per_fleet] for s in summaries], axis=0)
+    return {
+        "policy": label,
+        "process": process_name,
+        "rate_per_s": rate,
+        "drift": drift,
+        "mean_ms": round(_pool(summaries, "mean_latency_ms"), 1),
+        "p50_ms": round(_pool(summaries, "p50_latency_ms"), 1),
+        "p95_ms": round(_pool(summaries, "p95_latency_ms"), 1),
+        "p99_ms": round(_pool(summaries, "p99_latency_ms"), 1),
+        "drop_pct": round(100 * _pool(summaries, "drop_rate"), 2),
+        "cost_per_1k": round(_pool(summaries, "cost_per_1k"), 4),
+        "hedges": int(round(_pool(summaries, "n_hedges"))),
+        "hedge_waste": round(_pool(summaries, "hedge_waste_cost"), 4),
+        "split": "/".join(f"{s:.2f}" for s in shares),
+    }
+
+
+def fleet_sweep(quick: bool = False, *, smoke: bool = False,
+                report_timing: bool = True):
+    """Returns (rows, headline, perf) — the benchmarks/run.py contract."""
+    if smoke:
+        rates = (2.0,)
+        seeds = range(2)
+        duration_ms = 60_000.0
+        drifts = (("stable", 0.3),)
+        azure = False
+    elif quick:
+        rates = (1.5, 3.0)
+        seeds = range(2)
+        duration_ms = 120_000.0
+        drifts = (("stable", 0.3),)
+        azure = True
+    else:
+        rates = (1.5, 3.0, 4.5)
+        seeds = range(3)
+        duration_ms = 180_000.0
+        drifts = (("stable", 0.3), ("drift", 0.95))
+        azure = True
+
+    t_sweep = time.perf_counter()
+    rows = []
+    cells = {}
+    n_fleets = len(_fleets(0.3))
+    arms = _policies(n_fleets, smoke)
+    for drift_label, rho in drifts:
+        fleets = _fleets(rho)
+        for rate in rates:
+            process = PoissonProcess(rate)
+            for label, factory, hedge_ms in arms:
+                summaries = _run_arm(fleets, label, factory, hedge_ms,
+                                     process, seeds, duration_ms)
+                cells[(drift_label, rate, label)] = summaries
+                rows.append(_row(label, process.name, rate, drift_label,
+                                 summaries))
+    if azure:
+        # real-trace leg: replay the checked-in Azure-style IAT fixture
+        # (deterministic arrivals; only routing and service draw RNG)
+        process = TraceProcess.from_azure_csv(AZURE_TRACE, function="a7f3")
+        fleets = _fleets(0.3)
+        trace_rate = round(process.mean_rate_per_ms() * 1e3, 2)
+        for label, factory, hedge_ms in (arms[0], arms[-2], arms[-1]):
+            summaries = _run_arm(fleets, label, factory, hedge_ms, process,
+                                 seeds, duration_ms)
+            rows.append(_row(label, process.name, trace_rate, "stable",
+                             summaries))
+    t_event = time.perf_counter() - t_sweep
+    n_requests = sum(s.n_arrived for ss in cells.values() for s in ss)
+
+    # headline: the meta-scheduler claim at the top rate — probabilistic
+    # split vs the best static single-fleet assignment
+    top = max(rates)
+    drift0 = drifts[0][0]
+    statics = [(_pool(cells[(drift0, top, f"static[{i}]")],
+                      "mean_latency_ms"), i) for i in range(n_fleets)]
+    best_static_ms, best_i = min(statics)
+    prob_ms = _pool(cells[(drift0, top, "probabilistic")], "mean_latency_ms")
+    cut = (1.0 - prob_ms / best_static_ms) * 100 if best_static_ms else 0.0
+    headline = (f"cells={len(rows)}_r{top:.1f}_prob_vs_static[{best_i}]"
+                f"_mean_cut={cut:.0f}%")
+    perf = {
+        "n_cells": len(rows),
+        "n_requests": n_requests,
+        "event_wall_clock_s": round(t_event, 3),
+        "event_arrivals_per_sec": round(n_requests / max(t_event, 1e-9), 1),
+    }
+    if report_timing:
+        print(f"fleet_sweep timing: cells={len(rows)} "
+              f"requests={n_requests} event={t_event:.2f}s "
+              f"({perf['event_arrivals_per_sec']:.0f} arrivals/s)",
+              file=sys.stderr)
+    return rows, headline, perf
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 rates, shorter windows, stable drift only")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI cell set; deterministic stdout "
+                         "(timing on stderr)")
+    args = ap.parse_args()
+    rows, headline, _perf = fleet_sweep(quick=args.quick, smoke=args.smoke)
+    if args.smoke:
+        print("fleet_sweep_smoke_guards,conservation=ok", file=sys.stderr)
+    print(f"fleet_sweep,{headline}")
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

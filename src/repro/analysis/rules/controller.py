@@ -23,6 +23,17 @@ A class is a controller when its base chain (resolved within the module)
 or its name says so: bases named ``Controller``/``ControllerBase``/
 ``DelegatingController``/``ClassicMinosController`` (any dotted
 spelling), or a class name ending in ``Controller``.
+
+Fleet routing policies (``repro.fleet.policies``) sit on the same side
+of the contract: they receive a read-only
+:class:`~repro.core.control.FleetTelemetry` per
+:class:`~repro.fleet.policies.RouteContext` and return a fleet index —
+submits and hedges are the :class:`~repro.fleet.router.FleetRouter`'s
+job. So classes named/based ``*RoutingPolicy`` (or
+``RoutingPolicyBase``) are scanned under the same rule. The router
+itself is deliberately exempt: ``FleetRouter`` is an engine-side actor
+(it must call ``engine.submit``), which is why the match is on
+``RoutingPolicy``, never on ``*Router``.
 """
 from __future__ import annotations
 
@@ -32,8 +43,14 @@ from ..lint import Finding, ModuleModel, dotted_name, walk_body
 
 _CONTROLLER_BASES = {
     "Controller", "ControllerBase", "DelegatingController",
-    "ClassicMinosController",
+    "ClassicMinosController", "RoutingPolicy", "RoutingPolicyBase",
 }
+
+
+def _name_is_controller(name: str) -> bool:
+    tail = name.split(".")[-1]
+    return (tail.endswith("Controller") or tail.endswith("RoutingPolicy")
+            or tail == "RoutingPolicyBase")
 
 _POOL_MUTATORS = {
     "take", "release", "retire", "add_warm", "drop", "admit_cold",
@@ -47,8 +64,8 @@ def _is_controller(model: ModuleModel, name: str,
         return False
     ci = model.classes.get(name)
     if ci is None:
-        return name.endswith("Controller")
-    if ci.name.split(".")[-1].endswith("Controller"):
+        return _name_is_controller(name)
+    if _name_is_controller(ci.name):
         return True
     for base in ci.bases:
         tail = base.split(".")[-1]

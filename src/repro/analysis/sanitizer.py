@@ -281,6 +281,59 @@ def check_open_loop(*, n_arrived: int, n_completed: int, n_dropped: int,
               pending_at_end=n_pending_at_end)
 
 
+def check_fleet_conservation(
+    *,
+    n_arrived: int,
+    n_completed: int,
+    n_dropped: int,
+    n_pending: int,
+    n_hedges: int,
+    n_hedge_dropped: int,
+    n_hedge_cancelled: int,
+    per_fleet_arrived: tuple,
+    per_fleet_completed: tuple,
+    per_fleet_dropped: tuple,
+    per_fleet_parked: tuple,
+) -> None:
+    """Fleet-router conservation ledger (DESIGN.md §14).
+
+    Two levels cross-check each other. The *logical* ledger counts each
+    request once regardless of hedging; the *copies* ledger sums the
+    per-engine counters, where a hedged request appears twice. The copies
+    identity ``Σ arrived_f == n_arrived + n_hedges`` is the
+    double-dispatch detector: a router that submits a request to two
+    fleets without recording a hedge inflates the left side only.
+    ``n_pending`` and ``per_fleet_parked`` are tracked/measured
+    independently (not residuals), so every equation is a real check.
+    """
+    if n_arrived != n_completed + n_dropped + n_pending:
+        _fail("fleet logical conservation violated: arrived != completed "
+              "+ dropped + pending", arrived=n_arrived,
+              completed=n_completed, dropped=n_dropped, pending=n_pending)
+    if sum(per_fleet_arrived) != n_arrived + n_hedges:
+        _fail("fleet copies conservation violated: sum(per-fleet arrived) "
+              "!= logical arrived + hedges (double dispatch?)",
+              per_fleet_arrived=per_fleet_arrived, arrived=n_arrived,
+              hedges=n_hedges)
+    if sum(per_fleet_completed) != n_completed + n_hedge_cancelled:
+        _fail("fleet completion ledger violated: sum(per-fleet completed) "
+              "!= logical completed + hedge losers",
+              per_fleet_completed=per_fleet_completed,
+              completed=n_completed, hedge_cancelled=n_hedge_cancelled)
+    if sum(per_fleet_dropped) != n_dropped + n_hedge_dropped:
+        _fail("fleet drop ledger violated: sum(per-fleet dropped) != "
+              "logical dropped + hedge-copy drops",
+              per_fleet_dropped=per_fleet_dropped, dropped=n_dropped,
+              hedge_dropped=n_hedge_dropped)
+    for i, (a, c, d, p) in enumerate(zip(
+            per_fleet_arrived, per_fleet_completed, per_fleet_dropped,
+            per_fleet_parked)):
+        if a != c + d + p:
+            _fail("per-fleet conservation violated: arrived != completed "
+                  "+ dropped + parked", fleet=i, arrived=a, completed=c,
+                  dropped=d, parked=p)
+
+
 def check_finite(summary: dict, *, where: str = "") -> None:
     """NaN/inf guard on a vectorized-sim summary dict of arrays."""
     import numpy as np  # deferred: keep this module stdlib-importable
@@ -323,6 +376,7 @@ __all__ = [
     "attach_pool",
     "check_engine_conservation",
     "check_finite",
+    "check_fleet_conservation",
     "check_open_loop",
     "check_open_summary",
     "check_pool",

@@ -226,6 +226,91 @@ class Telemetry:
         return s.mean if s.count else float("nan")
 
 
+class FleetTelemetry:
+    """Read-only view over N engines' :class:`Telemetry` views — what a
+    fleet-level :class:`~repro.fleet.policies.RoutingPolicy` receives
+    (DESIGN.md §14).
+
+    Same contract as :class:`Telemetry`, one level up: every read flows
+    through the per-fleet views to the live engines (no snapshots), and
+    mutation raises — routing policies decide, the
+    :class:`~repro.fleet.router.FleetRouter` acts. Aggregates are plain
+    per-fleet tuples so a policy can score fleets without ever touching an
+    engine handle.
+    """
+
+    __slots__ = ("_views", "_names")
+
+    def __init__(self, views: Any, names: Optional[Any] = None) -> None:
+        views = tuple(views)
+        if not views:
+            raise ValueError("FleetTelemetry needs at least one fleet view")
+        if names is None:
+            names = tuple(f"fleet{i}" for i in range(len(views)))
+        else:
+            names = tuple(names)
+            if len(names) != len(views):
+                raise ValueError("names/views length mismatch")
+        object.__setattr__(self, "_views", views)
+        object.__setattr__(self, "_names", names)
+
+    def __setattr__(self, name: str, value: Any) -> None:
+        raise AttributeError("FleetTelemetry is read-only")
+
+    def __delattr__(self, name: str) -> None:
+        raise AttributeError("FleetTelemetry is read-only")
+
+    def __len__(self) -> int:
+        return len(self._views)
+
+    def __iter__(self):
+        return iter(self._views)
+
+    @property
+    def names(self) -> tuple[str, ...]:
+        return self._names
+
+    def fleet(self, i: int) -> Telemetry:
+        """The i-th fleet's own read-only view."""
+        return self._views[i]
+
+    # -- clock (the router runs every fleet on ONE SimClock) -------------
+    @property
+    def now_ms(self) -> float:
+        return self._views[0].now_ms
+
+    # -- per-fleet aggregate tuples (policy scoring inputs) --------------
+    def queue_depths(self) -> tuple[int, ...]:
+        return tuple(v.queue_depth for v in self._views)
+
+    def in_flights(self) -> tuple[int, ...]:
+        return tuple(v.total_in_flight for v in self._views)
+
+    def pool_availables(self) -> tuple[int, ...]:
+        return tuple(v.pool_available for v in self._views)
+
+    def capacity_slots(self) -> tuple[int, ...]:
+        """Concurrent-request slots each fleet can hold: the autoscaling
+        cap × per-instance concurrency when ``max_instances`` is set, else
+        the live instance count (elastic supply; floored at 1 slot so an
+        idle uncapped fleet still scores as able to serve)."""
+        out = []
+        for v in self._views:
+            cap = v.knobs.max_instances
+            n = cap if cap is not None else max(v.pool_instances, 1)
+            out.append(n * v.knobs.per_instance_concurrency)
+        return tuple(out)
+
+    # -- fleet-wide totals ------------------------------------------------
+    @property
+    def total_queue_depth(self) -> int:
+        return sum(self.queue_depths())
+
+    @property
+    def total_in_flight(self) -> int:
+        return sum(self.in_flights())
+
+
 # ---------------------------------------------------------------------------
 # Decision contexts
 # ---------------------------------------------------------------------------
@@ -869,6 +954,7 @@ __all__ = [
     "DECISION_POINTS",
     "DelegatingController",
     "ElysiumGate",
+    "FleetTelemetry",
     "PassFractionController",
     "ProbeContext",
     "ProbeDecision",

@@ -12,6 +12,23 @@ first — two engines in one process could never reproduce the ids of either
 engine run alone, breaking cross-run comparability of seeded results. Now
 each queue owns both counters: ids are assigned on *first* push (stable
 across requeues) and the tiebreaker advances on every push.
+
+Ordering modes:
+
+* default (``fair=False``) — FIFO by enqueue time, then per-queue sequence:
+  exactly the historical behavior, bit-identical heap keys (the seeded
+  golden digests in tests/test_unified_substrate.py run through it).
+* ``fair=True`` — weighted-fair by :class:`~repro.sim.arrivals.QoSClass`
+  weight via start-time fair queueing (virtual finish times): each push
+  of class ``c`` gets key ``max(V, F_c) + 1/weight_c`` where ``V`` is the
+  virtual time of the last pop and ``F_c`` the class's previous finish.
+  Under a shared backlog, class throughputs converge to the weight ratio,
+  and every class drains at a bounded rate — no starvation (tested in
+  tests/test_lifecycle_queue.py). Ties (equal virtual finish) break on the
+  per-queue sequence, preserving FIFO order within a class and across
+  equal-weight classes. A requeued invocation re-enters at its class's
+  *current* virtual finish — a crash costs the request its place in line,
+  same as the FIFO mode's requeue-at-now semantics.
 """
 from __future__ import annotations
 
@@ -35,6 +52,10 @@ class Invocation:
     # when the engine first popped this invocation for dispatch — the end of
     # its queue wait (requeues after a crash do not reset it)
     first_dispatched_at_ms: Optional[float] = None
+    # QoS class (sim/arrivals.QoSClass): name + scheduling weight. Only the
+    # fair-queue mode reads these; the default FIFO mode carries them inert.
+    qos: str = "default"
+    qos_weight: float = 1.0
 
     def __post_init__(self) -> None:
         if self.first_enqueued_at_ms is None:
@@ -43,14 +64,18 @@ class Invocation:
 
 class InvocationQueue:
     """FIFO (by enqueue time, then per-queue sequence) queue with requeue
-    semantics."""
+    semantics; ``fair=True`` switches to weighted-fair dequeue by QoS
+    weight (see module docstring)."""
 
-    def __init__(self) -> None:
+    def __init__(self, *, fair: bool = False) -> None:
         self._heap: list[tuple[float, int, Invocation]] = []
         self._seq = itertools.count()  # heap tiebreaker: every push
         self._ids = itertools.count()  # invocation ids: first push only
         self.total_enqueued = 0
         self.total_requeued = 0
+        self.fair = fair
+        self._vtime = 0.0  # virtual time: the key of the last pop
+        self._class_vfinish: dict[str, float] = {}
 
     def __len__(self) -> int:
         return len(self._heap)
@@ -59,7 +84,14 @@ class InvocationQueue:
         if inv.invocation_id is None:
             inv.invocation_id = next(self._ids)
         inv.enqueued_at_ms = now_ms
-        heapq.heappush(self._heap, (now_ms, next(self._seq), inv))
+        if self.fair:
+            w = inv.qos_weight if inv.qos_weight > 0.0 else 1.0
+            start = max(self._vtime, self._class_vfinish.get(inv.qos, 0.0))
+            key = start + 1.0 / w
+            self._class_vfinish[inv.qos] = key
+        else:
+            key = now_ms
+        heapq.heappush(self._heap, (key, next(self._seq), inv))
         self.total_enqueued += 1
 
     def requeue(self, inv: Invocation, now_ms: float) -> None:
@@ -72,9 +104,14 @@ class InvocationQueue:
     def pop(self) -> Invocation:
         if not self._heap:
             raise IndexError("pop from empty InvocationQueue")
-        return heapq.heappop(self._heap)[2]
+        key, _, inv = heapq.heappop(self._heap)
+        if self.fair and key > self._vtime:
+            self._vtime = key
+        return inv
 
     def peek_time(self) -> Optional[float]:
+        """Head-of-queue heap key: enqueue time (default) or virtual
+        finish (``fair=True``)."""
         return self._heap[0][0] if self._heap else None
 
     def waiting(self) -> list[Invocation]:

@@ -636,6 +636,10 @@ class SubstrateKnobs:
     # loss model. None = unbounded queue (drops never happen; sustained
     # overload shows up as unbounded waits instead).
     queue_capacity: Optional[int] = None
+    # Weighted-fair dequeue by QoS class weight (start-time fair queueing;
+    # core/queue.py). False keeps the historical FIFO heap keys
+    # bit-identical, so seeded golden digests are unaffected.
+    fair_queue: bool = False
 
     def load_multiplier(self, load: float) -> float:
         """Body-duration multiplier at ``load`` in-flight requests."""
@@ -692,7 +696,7 @@ class SubstrateEngine:
         self.pricing = pricing
         self.rng = rng if rng is not None else np.random.RandomState(seed)
         self.loop = clock if clock is not None else SimClock()
-        self.queue = InvocationQueue()
+        self.queue = InvocationQueue(fair=knobs.fair_queue)
         self.pool = InstancePool(
             order=knobs.warm_pool_order,
             concurrency=knobs.per_instance_concurrency,
@@ -756,6 +760,8 @@ class SubstrateEngine:
         on_complete: Callable[[RequestResult], None] | None = None,
         *,
         submitted_at_ms: Optional[float] = None,
+        qos: str = "default",
+        qos_weight: float = 1.0,
     ) -> bool:
         """Enqueue one invocation; returns False when the finite queue
         buffer (``SubstrateKnobs.queue_capacity``) rejects it.
@@ -763,6 +769,9 @@ class SubstrateEngine:
         ``submitted_at_ms`` back-dates the request's submission time (and
         therefore its reported latency/queue wait) — the open-loop driver
         uses it for items that waited at admission before being submitted.
+        ``qos``/``qos_weight`` ride on the invocation; they only order
+        anything under ``SubstrateKnobs.fair_queue`` (weighted-fair
+        dequeue, core/queue.py).
         """
         self.requests_arrived += 1
         cap = self.knobs.queue_capacity
@@ -771,7 +780,8 @@ class SubstrateEngine:
             self.drop_events.append((self.loop.now, len(self.queue)))
             return False
         inv = Invocation(payload={"on_complete": on_complete, "user": payload},
-                         enqueued_at_ms=self.loop.now)
+                         enqueued_at_ms=self.loop.now,
+                         qos=qos, qos_weight=qos_weight)
         inv.first_enqueued_at_ms = (
             self.loop.now if submitted_at_ms is None else submitted_at_ms)
         self.queue.push(inv, self.loop.now)

@@ -1,0 +1,35 @@
+"""Fleet-level meta-scheduler (DESIGN.md §14).
+
+The paper's gate picks *instances* inside one platform; this package
+routes one live request stream *across* heterogeneous Minos-gated fleets
+— each a full :class:`~repro.sim.platform.FaaSPlatform` on a shared
+:class:`~repro.core.substrate.SimClock` — through a pluggable
+:class:`RoutingPolicy` (random / weighted-static / greedy /
+probabilistic-split), with optional request hedging.
+"""
+from .policies import (
+    GreedyRoutingPolicy,
+    ProbabilisticRoutingPolicy,
+    RandomRoutingPolicy,
+    RouteContext,
+    RoutingPolicy,
+    RoutingPolicyBase,
+    WeightedStaticRoutingPolicy,
+    solve_split,
+)
+from .router import FleetRouter, FleetRunResult, FleetSpec, run_fleet_open_loop
+
+__all__ = [
+    "FleetRouter",
+    "FleetRunResult",
+    "FleetSpec",
+    "GreedyRoutingPolicy",
+    "ProbabilisticRoutingPolicy",
+    "RandomRoutingPolicy",
+    "RouteContext",
+    "RoutingPolicy",
+    "RoutingPolicyBase",
+    "WeightedStaticRoutingPolicy",
+    "run_fleet_open_loop",
+    "solve_split",
+]

@@ -25,6 +25,7 @@ from .arrivals import (
 )
 from .metrics import (
     ArmSummary,
+    FleetSummary,
     OpenLoopSummary,
     WorkflowSummary,
     cost_timeline,
@@ -65,8 +66,8 @@ __all__ = [
     "ARMS", "PAPER_PRICING", "PAPER_SPEC", "PASS_FRACTION",
     "DayResult", "WeekResult", "make_arm_policy", "run_day",
     "run_pretest_phase", "run_week", "workflow_arm_factory",
-    "ArmSummary", "OpenLoopSummary", "WorkflowSummary", "cost_timeline",
-    "improvement",
+    "ArmSummary", "FleetSummary", "OpenLoopSummary", "WorkflowSummary",
+    "cost_timeline", "improvement",
     "ArrivalProcess", "DiurnalPoissonProcess", "MMPPProcess", "OpenLoopRun",
     "PoissonProcess", "QoSClass", "TraceProcess", "arrival_times_ms",
     "run_open_loop",

@@ -237,6 +237,57 @@ class TraceProcess:
                     iats.append(float(s))
         return TraceProcess(tuple(iats), name=name or "trace")
 
+    @staticmethod
+    def from_azure_csv(
+        path: str,
+        function: Optional[str] = None,
+        name: Optional[str] = None,
+        minute_ms: float = 60_000.0,
+    ) -> "TraceProcess":
+        """Load an Azure-Functions-invocation-trace-style CSV.
+
+        Format (the 2019 Azure Functions dataset): a header row, then one
+        row per function — ``HashOwner,HashApp,HashFunction,Trigger``
+        followed by one integer invocation count per minute. Each
+        minute's ``k`` invocations expand to ``k`` evenly spaced arrivals
+        inside that minute (the dataset has no sub-minute timestamps, so
+        uniform spacing is the deterministic, assumption-minimal choice);
+        zero-count minutes contribute pure gap. ``function`` selects a
+        row by HashFunction prefix; None takes the first data row. Like
+        every TraceProcess the result draws nothing from the RandomState.
+        """
+        with open(path) as fh:
+            rows = [line.strip() for line in fh if line.strip()
+                    and not line.startswith("#")]
+        if len(rows) < 2:
+            raise ValueError(f"no data rows in {path!r}")
+        chosen: Optional[list[str]] = None
+        for row in rows[1:]:  # rows[0] is the header
+            cells = [c.strip() for c in row.split(",")]
+            if len(cells) < 5:
+                raise ValueError(f"malformed Azure trace row: {row[:60]!r}")
+            if function is None or cells[2].startswith(function):
+                chosen = cells
+                break
+        if chosen is None:
+            raise ValueError(
+                f"no function matching {function!r} in {path!r}")
+        counts = [int(c) for c in chosen[4:]]
+        if sum(counts) < 2:
+            raise ValueError("trace needs >= 2 invocations to form IATs")
+        times: List[float] = []
+        for minute, k in enumerate(counts):
+            if k <= 0:
+                continue
+            start = minute * minute_ms
+            step = minute_ms / k
+            # center the k arrivals in their minute: minute boundaries are
+            # bins, not event times
+            times.extend(start + step * (j + 0.5) for j in range(k))
+        iats = [times[0]] + [b - a for a, b in zip(times, times[1:])]
+        return TraceProcess(
+            tuple(iats), name=name or f"azure[{chosen[2][:8]}]")
+
     def iats_ms(self, rng: np.random.RandomState, n: int) -> np.ndarray:
         reps = -(-n // len(self.iats))  # ceil
         return np.tile(np.asarray(self.iats, float), reps)[:n]
@@ -305,12 +356,14 @@ def draw_classes(
 
 
 class _Item:
-    __slots__ = ("payload", "arrived_at", "qos", "deferred")
+    __slots__ = ("payload", "arrived_at", "qos", "qos_weight", "deferred")
 
-    def __init__(self, payload: Any, arrived_at: float, qos: str) -> None:
+    def __init__(self, payload: Any, arrived_at: float, qos: str,
+                 qos_weight: float = 1.0) -> None:
         self.payload = payload
         self.arrived_at = arrived_at
         self.qos = qos
+        self.qos_weight = qos_weight
         self.deferred = False
 
 
@@ -397,8 +450,10 @@ def run_open_loop(
     if qos_classes:
         cls_idx = draw_classes(rng, len(times), qos_classes)
         cls_names = [qos_classes[i].name for i in cls_idx]
+        cls_weights = [qos_classes[i].weight for i in cls_idx]
     else:
         cls_names = ["default"] * len(times)
+        cls_weights = [1.0] * len(times)
 
     results: List[RequestResult] = []
     result_classes: List[str] = []
@@ -427,7 +482,8 @@ def run_open_loop(
                 submit_item(pending.popleft())
 
         ok = engine.submit(item.payload, done,
-                           submitted_at_ms=item.arrived_at)
+                           submitted_at_ms=item.arrived_at,
+                           qos=item.qos, qos_weight=item.qos_weight)
         if ok:
             counts["in_flight"] += 1
         # a drop is already counted by the engine; nothing more to do
@@ -442,9 +498,9 @@ def run_open_loop(
                 counts["deferred_items"] += 1
             pending.append(item)
 
-    for i, (t, qos) in enumerate(zip(times, cls_names)):
+    for i, (t, qos, w) in enumerate(zip(times, cls_names, cls_weights)):
         payload = payload_fn(i, qos) if payload_fn is not None else {"qos": qos}
-        item = _Item(payload, float(t), qos)
+        item = _Item(payload, float(t), qos, w)
         engine.loop.at(float(t), lambda item=item: offer(item))
 
     def sample() -> None:

@@ -227,6 +227,78 @@ class OpenLoopSummary:
         )
 
 
+@dataclasses.dataclass
+class FleetSummary:
+    """One fleet-router arm (EXPERIMENTS.md §Fleet sweep).
+
+    Latency percentiles pool the *logical winners* across fleets — each
+    hedged request counts exactly once, at its first completion.
+    ``total_cost`` is the router's accounting (honest by default: both
+    copies of a hedged request are billed; see
+    :class:`~repro.fleet.router.FleetRouter.count_hedge_waste`), so a
+    policy cannot look cheap by paying for speculation off the books.
+    ``per_fleet`` rows expose where the policy actually sent traffic."""
+
+    name: str
+    process: str
+    n_arrived: int
+    n_completed: int
+    n_dropped: int
+    drop_rate: float
+    mean_latency_ms: float
+    p50_latency_ms: float
+    p95_latency_ms: float
+    p99_latency_ms: float
+    total_cost: float
+    cost_per_1k: float
+    n_hedges: int
+    n_hedge_wins: int
+    hedge_waste_cost: float
+    per_fleet: tuple
+
+    @staticmethod
+    def from_run(name: str, router, run) -> "FleetSummary":
+        """``router`` is a :class:`~repro.fleet.router.FleetRouter`,
+        ``run`` a :class:`~repro.fleet.router.FleetRunResult` (duck-typed,
+        as elsewhere in this module)."""
+        lat = np.asarray([r.latency_ms for r in run.results]) \
+            if run.results else np.asarray([np.nan])
+        fleet_idx = np.asarray(run.result_fleets, int) \
+            if run.result_fleets else np.empty(0, int)
+        per_fleet = []
+        for i, fname in enumerate(run.fleet_names):
+            mine = fleet_idx == i
+            mine_lat = lat[mine] if mine.any() else np.asarray([np.nan])
+            engine = router.engines[i]
+            per_fleet.append({
+                "fleet": fname,
+                "share": float(mine.sum()) / max(run.n_completed, 1),
+                "completed": int(mine.sum()),
+                "dropped": int(run.per_fleet["per_fleet_dropped"][i]),
+                "parked": int(run.per_fleet["per_fleet_parked"][i]),
+                "p95_ms": float(np.percentile(mine_lat, 95)),
+                "cost": float(engine.cost.total),
+            })
+        return FleetSummary(
+            name=name,
+            process=getattr(run, "process_name", "?"),
+            n_arrived=run.n_arrived,
+            n_completed=run.n_completed,
+            n_dropped=run.n_dropped,
+            drop_rate=run.drop_rate,
+            mean_latency_ms=float(lat.mean()),
+            p50_latency_ms=float(np.percentile(lat, 50)),
+            p95_latency_ms=float(np.percentile(lat, 95)),
+            p99_latency_ms=float(np.percentile(lat, 99)),
+            total_cost=run.total_cost,
+            cost_per_1k=run.total_cost / max(run.n_completed, 1) * 1e3,
+            n_hedges=run.n_hedges,
+            n_hedge_wins=run.n_hedge_wins,
+            hedge_waste_cost=run.hedge_waste_cost,
+            per_fleet=tuple(per_fleet),
+        )
+
+
 def cost_timeline(
     results: list[RequestResult],
     cost: WorkflowCost,

@@ -282,6 +282,7 @@ class FaaSPlatform(SubstrateEngine):
         profile: Optional[PlatformProfile] = None,
         controller=None,
         knobs: Optional[SubstrateKnobs] = None,
+        clock: Optional[SimClock] = None,
     ) -> None:
         """online_controller: an OnlineElysiumController (paper §IV future
         work, implemented here): every cold-start probe result is reported
@@ -304,7 +305,11 @@ class FaaSPlatform(SubstrateEngine):
         knobs: explicit :class:`~repro.core.substrate.SubstrateKnobs`,
         overriding both profile and spec — how open-loop drivers set the
         ``max_instances`` / ``queue_capacity`` traffic knobs on top of a
-        profile (``dataclasses.replace(profile.knobs(), ...)``)."""
+        profile (``dataclasses.replace(profile.knobs(), ...)``).
+
+        clock: a shared :class:`~repro.core.substrate.SimClock` — the
+        fleet meta-scheduler (``repro.fleet``) composes several platforms
+        on one event loop this way. None builds a private clock."""
         if pricing is None:
             if profile is None:
                 raise ValueError("pricing is required when no profile is given")
@@ -327,7 +332,7 @@ class FaaSPlatform(SubstrateEngine):
         super().__init__(
             SimFunctionBackend(spec, variation), policy, pricing,
             knobs=knobs, seed=seed, online_controller=online_controller,
-            controller=controller,
+            controller=controller, clock=clock,
         )
         self.spec = spec
         self.variation = variation

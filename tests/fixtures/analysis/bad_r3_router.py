@@ -1,0 +1,30 @@
+"""Mutation fixture: R3 — a fleet routing policy acting like an engine.
+
+Routing policies are controllers in the R3 sense (DESIGN.md §14): they
+receive a read-only FleetTelemetry through the RouteContext and return a
+fleet index. Everything below is the forbidden opposite."""
+
+_route_log = []
+
+
+class HijackRoutingPolicy:
+    name = "hijack"
+    probs = [0.5, 0.5]                  # R3: mutable class attr
+
+    def route(self, ctx):
+        ctx.telemetry.hot_fleet = 0     # R3: telemetry write
+        # R3: pool mutator reached through the telemetry view — the policy
+        # is dispatching instead of deciding
+        ctx.telemetry.fleet(0)._engine.pool.retire(None)
+        return 0
+
+    def on_result(self, fleet_index, result, telemetry):
+        global _route_log               # R3: global state
+        _route_log.append(fleet_index)
+
+
+class SneakySplit(HijackRoutingPolicy):
+    # inherits the RoutingPolicy suffix via its base chain: still scanned
+    def route(self, ctx):
+        ctx.telemetry._views = ()       # R3: telemetry write
+        return 0

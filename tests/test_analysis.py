@@ -73,6 +73,26 @@ def test_r3_controller_violations():
                        "pool-mutator", "global-state"}
 
 
+def test_r3_routing_policy_violations():
+    fs = [f for f in _findings_for("bad_r3_router.py") if f.rule == "R3"]
+    details = {f.detail.split(":")[0] for f in fs}
+    assert details == {"mutable-class-attr", "telemetry-write",
+                       "pool-mutator", "global-state"}
+    # the subclass is recognized through its *RoutingPolicy base chain
+    assert any(f.symbol.startswith("SneakySplit") for f in fs), fs
+
+
+def test_r3_fleet_router_is_exempt():
+    # FleetRouter legitimately submits to engines; only *RoutingPolicy
+    # classes fall under R3, so the shipped router module must stay clean
+    src_router = os.path.join(
+        os.path.dirname(__file__), "..", "src", "repro", "fleet",
+        "router.py")
+    fs = [f for f in analyze_file(src_router, "fleet/router.py")
+          if f.rule == "R3"]
+    assert fs == [], fs
+
+
 def test_r4_recompile_hazards():
     details = {f.detail.split(":")[0]
                for f in _findings_for("bad_r4_recompile.py") if f.rule == "R4"}
@@ -95,6 +115,7 @@ def test_every_bad_fixture_fires_only_its_rule():
         "bad_r1_indirect.py": {"R1"},
         "bad_r2_tracer.py": {"R2"},
         "bad_r3_controller.py": {"R3"},
+        "bad_r3_router.py": {"R3"},
         "bad_r4_recompile.py": {"R4"},
         "bad_r5_carry.py": {"R5"},
     }

@@ -1,0 +1,371 @@
+"""Fleet meta-scheduler (repro.fleet; DESIGN.md §14).
+
+* FleetTelemetry is read-only and aggregates per-fleet views;
+* the routing-policy ladder behaves: static one-hots stay put, exclusion
+  is honored, greedy is deterministic and avoids backlog;
+* solve_split: the LP and the closed-form waterfill coincide (continuous
+  knapsack), caps are respected, overload splits capacity-proportionally;
+* conservation holds for every policy × seed, with and without hedging —
+  and a router mutated to double-dispatch is caught by the sanitizer
+  ledger;
+* hedging: each hedged request is counted once in latency, twice in cost
+  when both copies ran (count_hedge_waste semantics);
+* same seeds → bit-identical runs.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import SanitizerError
+from repro.core.control import FleetTelemetry
+from repro.core.policy import MinosPolicy
+from repro.fleet import (
+    FleetRouter,
+    FleetSpec,
+    GreedyRoutingPolicy,
+    ProbabilisticRoutingPolicy,
+    RandomRoutingPolicy,
+    RouteContext,
+    WeightedStaticRoutingPolicy,
+    run_fleet_open_loop,
+    solve_split,
+)
+from repro.sim import (
+    FunctionSpec,
+    PlatformProfile,
+    PoissonProcess,
+    VariationModel,
+)
+from repro.sim.arrivals import QoSClass
+from repro.sim.metrics import FleetSummary
+
+SPEC = FunctionSpec(name="fleet-test", prepare_ms=50.0, body_ms=300.0,
+                    benchmark_ms=100.0, contention_rho=0.5)
+VM = VariationModel(sigma=0.15)
+GATE = MinosPolicy(elysium_threshold=130.0)
+
+
+def _fleets(n=3, body_ms=None, caps=None):
+    profs = [PlatformProfile.gcf_gen1(), PlatformProfile.gcf_gen2(),
+             PlatformProfile.aws_lambda()]
+    fleets = []
+    for i in range(n):
+        spec = SPEC if body_ms is None else dataclasses.replace(
+            SPEC, body_ms=body_ms[i])
+        cap = 4 if caps is None else caps[i]
+        prof = profs[i % len(profs)]
+        knobs = dataclasses.replace(prof.knobs(), max_instances=cap)
+        fleets.append(FleetSpec(name=f"f{i}", spec=spec, variation=VM,
+                                profile=prof, knobs=knobs, policy=GATE))
+    return fleets
+
+
+def _run(policy, *, seed=0, traffic_seed=7, rate=2.0, duration=30_000.0,
+         hedge=None, fleets=None, qos=None, drain=True):
+    router = FleetRouter(fleets or _fleets(), policy, seed=seed,
+                         hedge_after_ms=hedge)
+    run = run_fleet_open_loop(
+        router, PoissonProcess(rate),
+        rng=np.random.RandomState(traffic_seed), duration_ms=duration,
+        qos_classes=qos, drain=drain)
+    return router, run
+
+
+# ---------------------------------------------------------------------------
+# FleetTelemetry
+# ---------------------------------------------------------------------------
+
+
+def test_fleet_telemetry_read_only_and_aggregates():
+    router, _ = _run(RandomRoutingPolicy())
+    t = router.telemetry
+    assert len(t) == 3 and t.names == ("f0", "f1", "f2")
+    with pytest.raises(AttributeError):
+        t.names = ("x",)
+    with pytest.raises(AttributeError):
+        del t._views
+    assert len(t.queue_depths()) == 3
+    assert t.total_queue_depth == sum(t.queue_depths())
+    assert t.total_in_flight == sum(t.in_flights())
+    assert all(s > 0 for s in t.capacity_slots())
+    # per-fleet views are the engines' own read-only Telemetry objects
+    assert t.fleet(1) is router.engines[1].telemetry
+
+
+def test_fleet_telemetry_rejects_empty():
+    with pytest.raises(ValueError):
+        FleetTelemetry(())
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+
+
+def test_one_hot_routes_everything_to_its_fleet():
+    router, run = _run(WeightedStaticRoutingPolicy.one_hot(2, 3))
+    assert run.n_completed > 0
+    assert set(run.result_fleets) == {2}
+    assert router.engines[0].requests_arrived == 0
+    assert router.engines[1].requests_arrived == 0
+
+
+def test_weighted_static_validates():
+    with pytest.raises(ValueError):
+        WeightedStaticRoutingPolicy([])
+    with pytest.raises(ValueError):
+        WeightedStaticRoutingPolicy([0.0, 0.0])
+    with pytest.raises(ValueError):
+        WeightedStaticRoutingPolicy([1.0, -0.5])
+    with pytest.raises(ValueError):
+        WeightedStaticRoutingPolicy.one_hot(3, 3)
+
+
+def test_exclude_is_honored_by_every_policy():
+    router, _ = _run(RandomRoutingPolicy(), duration=5_000.0)
+    rng = np.random.RandomState(0)
+    for policy in (RandomRoutingPolicy(), GreedyRoutingPolicy(),
+                   ProbabilisticRoutingPolicy(),
+                   WeightedStaticRoutingPolicy([1.0, 1.0, 1.0])):
+        for excl in range(3):
+            ctx = RouteContext(telemetry=router.telemetry, rng=rng,
+                               arrival_ms=0.0, exclude=excl)
+            for _ in range(8):
+                assert policy.route(ctx) != excl
+    # a one-hot asked to avoid its only fleet falls back to the others
+    ctx = RouteContext(telemetry=router.telemetry, rng=rng,
+                       arrival_ms=0.0, exclude=1)
+    assert WeightedStaticRoutingPolicy.one_hot(1, 3).route(ctx) != 1
+
+
+def test_greedy_is_deterministic_and_prefers_idle_fleet():
+    # no drain: fleet 0 (capped to one instance) is flooded far past its
+    # service rate by the one-hot, so its backlog is still live
+    router, _ = _run(WeightedStaticRoutingPolicy.one_hot(0, 3),
+                     duration=10_000.0, rate=8.0, drain=False,
+                     fleets=_fleets(caps=[1, 4, 4]))
+    assert router.telemetry.fleet(0).queue_depth > 0
+    g = GreedyRoutingPolicy(prior_serve_ms=SPEC.body_ms)
+    rng = np.random.RandomState(1)
+    ctx = RouteContext(telemetry=router.telemetry, rng=rng, arrival_ms=0.0)
+    picks = {g.route(ctx) for _ in range(16)}
+    assert len(picks) == 1          # no randomness
+    assert picks != {0}             # fleet 0 carries all the backlog
+
+
+def test_probabilistic_resolves_and_tracks_rate():
+    p = ProbabilisticRoutingPolicy(update_interval_ms=1_000.0)
+    router, run = _run(p, rate=4.0, duration=30_000.0)
+    assert run.n_completed > 0
+    assert p.n_solves >= 2
+    assert p.solver_used in ("lp", "waterfill", "overload")
+    assert p.probs is not None and p.probs.shape == (3,)
+    assert np.isclose(p.probs.sum(), 1.0)
+    # the EMA saw real inter-arrival times near the offered rate
+    assert 1e3 / 4.0 * 0.3 < p._iat_ema.value < 1e3 / 4.0 * 3.0
+
+
+# ---------------------------------------------------------------------------
+# solve_split: LP == waterfill (continuous knapsack)
+# ---------------------------------------------------------------------------
+
+
+def test_solve_split_lp_equals_waterfill():
+    rng = np.random.RandomState(42)
+    for _ in range(50):
+        n = int(rng.randint(2, 6))
+        costs = rng.uniform(100.0, 3000.0, size=n)
+        caps = rng.uniform(0.0, 1.0, size=n)
+        if caps.sum() < 1.0:        # feasible instances only, here
+            caps = caps / caps.sum() * rng.uniform(1.0, 2.0)
+        p_lp, used_lp = solve_split(costs, caps, solver="lp")
+        p_wf, used_wf = solve_split(costs, caps, solver="waterfill")
+        assert used_wf in ("waterfill", "overload", "trivial")
+        assert np.isclose(p_lp.sum(), 1.0) and np.isclose(p_wf.sum(), 1.0)
+        # both optima achieve the same objective (argmin may tie)
+        assert float(costs @ p_lp) == pytest.approx(
+            float(costs @ p_wf), rel=1e-6)
+        assert np.all(p_wf <= np.clip(caps, 0.0, 1.0) + 1e-9)
+
+
+def test_solve_split_overload_is_capacity_proportional():
+    p, used = solve_split([100.0, 200.0], [0.3, 0.3])
+    assert used == "overload"
+    assert np.allclose(p, [0.5, 0.5])
+    p, used = solve_split([100.0, 200.0], [0.1, 0.3])
+    assert used == "overload"
+    assert np.allclose(p, [0.25, 0.75])
+
+
+def test_solve_split_trivial_and_validation():
+    p, used = solve_split([123.0], [0.2])
+    assert used == "trivial" and np.allclose(p, [1.0])
+    with pytest.raises(ValueError):
+        solve_split([], [])
+    with pytest.raises(ValueError):
+        solve_split([1.0, 2.0], [0.5])
+    with pytest.raises(ValueError):
+        solve_split([1.0], [1.0], solver="magic")
+
+
+def test_solve_split_prefers_cheap_fleets():
+    p, _ = solve_split([100.0, 2000.0, 3000.0], [0.6, 1.0, 1.0])
+    assert p[0] == pytest.approx(0.6)           # cheap fleet filled to cap
+    assert p[1] == pytest.approx(0.4)           # remainder to next-cheapest
+    assert p[2] == pytest.approx(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Conservation (the property the sanitizer ledger enforces)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy_factory", [
+    RandomRoutingPolicy,
+    GreedyRoutingPolicy,
+    ProbabilisticRoutingPolicy,
+    lambda: WeightedStaticRoutingPolicy([3.0, 1.0, 2.0]),
+])
+@pytest.mark.parametrize("hedge", [None, 900.0])
+def test_conservation_every_policy_and_seed(policy_factory, hedge):
+    for seed in (0, 3):
+        router, run = _run(policy_factory(), seed=seed,
+                           traffic_seed=100 + seed, hedge=hedge)
+        router.check_conservation()  # raises on any ledger violation
+        assert run.n_arrived == (run.n_completed + run.n_dropped
+                                 + run.n_pending_at_end)
+        assert sum(run.per_fleet["per_fleet_arrived"]) == \
+            run.n_arrived + run.n_hedges
+        if hedge is None:
+            assert run.n_hedges == 0
+
+
+def test_double_dispatch_is_caught_by_the_ledger():
+    class DoubleDispatchRouter(FleetRouter):
+        """Mutation: submits every request to TWO fleets without going
+        through the hedge ledger — the copies equation must fire."""
+
+        def offer(self, payload, qos="default", qos_weight=1.0):
+            super().offer(payload, qos=qos, qos_weight=qos_weight)
+            other = (self.result_fleets[-1] + 1) % len(self.engines) \
+                if self.result_fleets else 1
+            self.engines[other].submit(
+                payload, lambda res: None, submitted_at_ms=self.clock.now)
+
+    router = DoubleDispatchRouter(_fleets(), RandomRoutingPolicy(), seed=0)
+    with pytest.raises(SanitizerError) as ei:
+        run_fleet_open_loop(router, PoissonProcess(2.0),
+                            rng=np.random.RandomState(5),
+                            duration_ms=10_000.0)
+        router.check_conservation()
+    assert "double dispatch" in str(ei.value)
+
+
+# ---------------------------------------------------------------------------
+# Hedging: once in latency, twice in cost
+# ---------------------------------------------------------------------------
+
+
+def _hedge_heavy_run(count_hedge_waste=True):
+    # fleet 0 is an order of magnitude slower: most primaries straggle
+    # past the hedge deadline, and the fleet-1 copy usually wins
+    fleets = _fleets(2, body_ms=[3000.0, 250.0], caps=[4, 4])
+    router = FleetRouter(fleets, WeightedStaticRoutingPolicy([0.8, 0.2]),
+                         seed=2, hedge_after_ms=600.0,
+                         count_hedge_waste=count_hedge_waste)
+    run = run_fleet_open_loop(router, PoissonProcess(1.0),
+                              rng=np.random.RandomState(11),
+                              duration_ms=40_000.0)
+    return router, run
+
+
+def test_hedging_counts_once_in_latency_twice_in_cost():
+    router, run = _hedge_heavy_run()
+    router.check_conservation()
+    assert run.n_hedges > 0 and run.n_hedge_wins > 0
+    assert run.n_hedge_cancelled > 0
+    # latency: exactly one result per completed logical request
+    assert len(run.results) == run.n_completed
+    assert len(run.results) <= run.n_arrived
+    # cost: both copies billed — the engines' ledgers contain the losers
+    assert run.hedge_waste_cost > 0.0
+    assert run.total_cost == pytest.approx(
+        sum(e.cost.total for e in router.engines))
+    # hedge latencies are back-dated to the logical arrival: a win by the
+    # fast fleet still pays the hedge_after_ms head start
+    hedge_wins = [r for r, f in zip(run.results, run.result_fleets)
+                  if f == 1]
+    assert hedge_wins and all(r.latency_ms > 0 for r in hedge_wins)
+
+
+def test_count_hedge_waste_false_subtracts_loser_cost():
+    router_a, run_a = _hedge_heavy_run(count_hedge_waste=True)
+    router_b, run_b = _hedge_heavy_run(count_hedge_waste=False)
+    # identical runs (same seeds), different accounting
+    assert run_a.n_hedge_cancelled == run_b.n_hedge_cancelled
+    assert run_b.total_cost == pytest.approx(
+        run_a.total_cost - run_a.hedge_waste_cost)
+
+
+def test_hedge_validation():
+    with pytest.raises(ValueError):
+        FleetRouter(_fleets(), RandomRoutingPolicy(), hedge_after_ms=0.0)
+    with pytest.raises(ValueError):
+        FleetRouter([], RandomRoutingPolicy())
+    dup = _fleets()[:2] + [_fleets()[0]]
+    with pytest.raises(ValueError):
+        FleetRouter(dup, RandomRoutingPolicy())
+
+
+# ---------------------------------------------------------------------------
+# Determinism, QoS plumbing, summary
+# ---------------------------------------------------------------------------
+
+
+def test_same_seeds_reproduce_bit_identical_runs():
+    a_router, a = _run(ProbabilisticRoutingPolicy(), hedge=800.0)
+    b_router, b = _run(ProbabilisticRoutingPolicy(), hedge=800.0)
+    assert [r.latency_ms for r in a.results] == \
+        [r.latency_ms for r in b.results]
+    assert a.result_fleets == b.result_fleets
+    assert a.n_hedges == b.n_hedges
+    assert a.total_cost == pytest.approx(b.total_cost)
+
+
+def test_qos_classes_flow_to_results():
+    qos = [QoSClass("gold", weight=3.0), QoSClass("bronze", weight=1.0)]
+    _, run = _run(RandomRoutingPolicy(), qos=qos, rate=4.0)
+    seen = set(run.result_classes)
+    assert seen <= {"gold", "bronze"} and "gold" in seen
+    # weight-proportional attribution: gold ~3x bronze
+    gold = run.result_classes.count("gold")
+    bronze = run.result_classes.count("bronze")
+    assert gold > bronze
+
+
+def test_fleet_summary_pools_winners():
+    router, run = _run(RandomRoutingPolicy(), rate=3.0)
+    s = FleetSummary.from_run("random", router, run)
+    assert s.n_completed == len(run.results)
+    assert len(s.per_fleet) == 3
+    assert sum(f["completed"] for f in s.per_fleet) == s.n_completed
+    assert sum(f["share"] for f in s.per_fleet) == pytest.approx(1.0)
+    assert s.cost_per_1k == pytest.approx(
+        s.total_cost / max(s.n_completed, 1) * 1e3)
+    assert np.isfinite(s.p99_latency_ms)
+
+
+def test_greedy_not_worse_than_random_on_seeded_scenario():
+    # the acceptance direction on a fixed seeded scenario (the benchmark
+    # sweep checks it across the whole ladder)
+    means = {}
+    for name, factory in (("random", RandomRoutingPolicy),
+                          ("greedy", GreedyRoutingPolicy)):
+        lats = []
+        for ts in (21, 22, 23):
+            _, run = _run(factory(), traffic_seed=ts, rate=4.0,
+                          duration=40_000.0)
+            lats.extend(r.latency_ms for r in run.results)
+        means[name] = float(np.mean(lats))
+    assert means["greedy"] <= means["random"]

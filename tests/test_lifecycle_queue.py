@@ -68,3 +68,82 @@ def test_first_enqueued_preserved_across_requeues():
     t0 = inv.first_enqueued_at_ms
     q.requeue(inv, now_ms=100.0)
     assert q.pop().first_enqueued_at_ms == t0
+
+
+# ---------------------------------------------------------------------------
+# Weighted-fair mode (fair=True; DESIGN.md §14 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_fair_mode_interleaves_by_weight():
+    # a shared backlog of two classes at weight 8:1 must drain ~8:1
+    q = InvocationQueue(fair=True)
+    for i in range(32):
+        q.push(Invocation(payload=("gold", i), qos="gold", qos_weight=8.0),
+               now_ms=0.0)
+        q.push(Invocation(payload=("econ", i), qos="econ", qos_weight=1.0),
+               now_ms=0.0)
+    first16 = [q.pop().qos for _ in range(16)]
+    gold = first16.count("gold")
+    assert gold >= 12, first16  # ~8:1 with integer rounding slack
+    # everything still drains — no starvation
+    rest = [q.pop().qos for _ in range(len(q))]
+    assert rest.count("econ") + first16.count("econ") == 32
+    assert len(q) == 0
+
+
+def test_fair_mode_no_starvation_under_continuous_heavy_load():
+    # heavy class keeps arriving; the single light item must still pop
+    # within a bounded number of dequeues (virtual time advances past its
+    # finish tag no matter how much heavy traffic lands after it)
+    q = InvocationQueue(fair=True)
+    q.push(Invocation(payload="light", qos="light", qos_weight=1.0),
+           now_ms=0.0)
+    popped_light_at = None
+    for step in range(64):
+        q.push(Invocation(payload=("heavy", step), qos="heavy",
+                          qos_weight=16.0), now_ms=float(step))
+        if q.pop().qos == "light":
+            popped_light_at = step
+            break
+    assert popped_light_at is not None and popped_light_at <= 16
+
+
+def test_fair_mode_fifo_within_class_and_equal_weights():
+    q = InvocationQueue(fair=True)
+    for i in range(6):
+        q.push(Invocation(payload=i, qos="a", qos_weight=2.0), now_ms=0.0)
+    assert [q.pop().payload for i in range(6)] == list(range(6))
+    # equal-weight classes tie on virtual finish -> per-queue seq (push
+    # order) breaks the tie
+    for i in range(4):
+        q.push(Invocation(payload=("x", i), qos="x", qos_weight=1.0),
+               now_ms=0.0)
+        q.push(Invocation(payload=("y", i), qos="y", qos_weight=1.0),
+               now_ms=0.0)
+    order = [q.pop().payload for _ in range(8)]
+    assert order == [("x", 0), ("y", 0), ("x", 1), ("y", 1),
+                     ("x", 2), ("y", 2), ("x", 3), ("y", 3)]
+
+
+def test_default_mode_ignores_weights():
+    # fair=False: historical (enqueue-time, seq) keys — weights inert
+    q = InvocationQueue()
+    q.push(Invocation(payload="first", qos="econ", qos_weight=0.1),
+           now_ms=0.0)
+    q.push(Invocation(payload="second", qos="gold", qos_weight=99.0),
+           now_ms=1.0)
+    assert q.pop().payload == "first"
+    assert q.pop().payload == "second"
+
+
+def test_fair_requeue_reenters_at_current_virtual_finish():
+    q = InvocationQueue(fair=True)
+    for i in range(3):
+        q.push(Invocation(payload=("a", i), qos="a", qos_weight=1.0),
+               now_ms=0.0)
+    crashed = q.pop()
+    q.requeue(crashed, now_ms=10.0)  # back of its class's line
+    assert crashed.retry_count == 1
+    assert [q.pop().payload for _ in range(3)] == \
+        [("a", 1), ("a", 2), ("a", 0)]

@@ -263,3 +263,58 @@ def test_vectorized_summary_guard(monkeypatch):
     res = simulate_arms(stack_arms([arm]), seeds=[0], n_steps=64,
                         pool_size=4)
     assert np.isfinite(res.summary["mean_latency_ms"]).all()
+
+
+# ---------------------------------------------------------------------------
+# Fleet conservation ledger (repro.fleet; DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+_FLEET_OK = dict(
+    n_arrived=10, n_completed=7, n_dropped=1, n_pending=2,
+    n_hedges=3, n_hedge_dropped=1, n_hedge_cancelled=2,
+    per_fleet_arrived=(8, 5), per_fleet_completed=(6, 3),
+    per_fleet_dropped=(1, 1), per_fleet_parked=(1, 1))
+
+
+def test_fleet_conservation_accepts_consistent_ledger():
+    sanitizer.check_fleet_conservation(**_FLEET_OK)
+
+
+@pytest.mark.parametrize("mutation,match", [
+    ({"n_pending": 3}, "logical conservation"),
+    # one extra engine arrival nobody logged: the double-dispatch shape
+    ({"per_fleet_arrived": (9, 5), "per_fleet_parked": (2, 1)},
+     "double dispatch"),
+    ({"n_hedge_cancelled": 1}, "completion ledger"),
+    ({"n_hedge_dropped": 0}, "drop ledger"),
+    ({"per_fleet_parked": (0, 1)}, "per-fleet conservation"),
+])
+def test_fleet_conservation_raises_on_each_imbalance(mutation, match):
+    bad = dict(_FLEET_OK)
+    bad.update(mutation)
+    with pytest.raises(SanitizerError, match=match):
+        sanitizer.check_fleet_conservation(**bad)
+
+
+def test_fleet_run_checks_ledger_when_armed(monkeypatch):
+    monkeypatch.setenv(sanitizer.ENV_VAR, "1")
+    from repro.core.policy import MinosPolicy as _MP
+    from repro.fleet import (FleetRouter, FleetSpec, RandomRoutingPolicy,
+                             run_fleet_open_loop)
+    from repro.sim.arrivals import PoissonProcess
+
+    fleets = [
+        FleetSpec(name=f"s{i}", spec=SPEC, variation=VM, profile=PROFILE,
+                  knobs=dataclasses.replace(PROFILE.knobs(),
+                                            max_instances=2),
+                  policy=_MP(elysium_threshold=float("inf"),
+                             enabled=False))
+        for i in range(2)
+    ]
+    router = FleetRouter(fleets, RandomRoutingPolicy(), seed=0,
+                         hedge_after_ms=800.0)
+    run = run_fleet_open_loop(router, PoissonProcess(2.0),
+                              rng=np.random.RandomState(4),
+                              duration_ms=15_000.0)
+    assert run.n_arrived == run.n_completed + run.n_dropped \
+        + run.n_pending_at_end
