@@ -1,0 +1,293 @@
+"""Fault-injection sweep: fault-rate ladder × recovery ladder × gate
+on/off over a two-fleet Minos deployment (EXPERIMENTS.md §Fault sweep;
+DESIGN.md §15).
+
+Two robustness questions the fault substrate exists to answer:
+
+* **Crash-vs-slow misattribution** — does the Minos gate misread a
+  crash-prone fleet as a *slow* one? Injected faults are
+  speed-independent by construction (the FaultPlan draws its own RNG
+  stream; fault deaths are logged in ``fault_counts``, never in the
+  gate's ``instances_terminated``), so the gate's termination counter
+  under faults vs fault-free is the misattribution measurement: if the
+  gate kills more instances when crashes rise, it is punishing speed
+  for reliability's sins.
+* **Retry storms** — engine-level fault retries re-enter the same queue
+  the gate's probation retries use, incrementing ``retry_count`` toward
+  the gate's forced-pass emergency exit. At high fault rates the gate
+  is progressively bypassed; the sweep reports requeues and mean
+  retries per completed request so the erosion is visible, and compares
+  the gate's latency cut (gate-on vs gate-off) at every fault level.
+
+Fleet 0 (gen1) takes the full injected fault rate plus an outage window
+in the non-smoke modes; fleet 1 (gen2) takes 20% of it — the asymmetry
+gives the circuit breaker something to discriminate. Recovery ladder:
+``none`` (naive unbounded requeue), ``retry`` (capped attempts, backoff
+with decorrelated jitter, per-request timeout, dead-letter), ``+breaker``
+(per-fleet circuit breaker with failover), ``+shed`` (breaker plus
+QoS-priority load shedding while degraded: bronze sheds first).
+
+Timing goes to **stderr**; two ``--smoke`` runs produce byte-identical
+stdout (the CI determinism diff). Event-driven control flow — no jitted
+leg to guard.
+
+Usage: PYTHONPATH=src python benchmarks/fault_sweep.py [--quick|--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import math
+import sys
+import time
+
+import numpy as np
+from scipy import stats
+
+from repro.core.policy import MinosPolicy
+from repro.faults import FaultPlan, FaultWindow, RecoveryPolicy
+from repro.fleet import (
+    BreakerConfig,
+    FleetRouter,
+    FleetSpec,
+    RandomRoutingPolicy,
+    run_fleet_open_loop,
+)
+from repro.sim import FunctionSpec, PlatformProfile, PoissonProcess, VariationModel
+from repro.sim.arrivals import QoSClass
+from repro.sim.metrics import FleetSummary
+
+PASS_FRACTION = 0.4
+BODY_MS = 1200.0
+QOS = (QoSClass("gold", weight=2.0, priority=1, slo_ms=8 * BODY_MS),
+       QoSClass("bronze", weight=1.0, priority=0, slo_ms=16 * BODY_MS))
+QOS_PRIORITIES = {"gold": 1, "bronze": 0}
+RECOVERY = RecoveryPolicy(timeout_ms=24 * BODY_MS, max_attempts=4,
+                          backoff_base_ms=50.0, backoff_cap_ms=2_000.0)
+BREAKER = BreakerConfig(window=16, failure_threshold=0.5, min_samples=5,
+                        open_ms=10_000.0, trial_requests=3)
+
+
+def _spec(rho: float = 0.3) -> FunctionSpec:
+    return FunctionSpec(
+        name="weather-linreg-faults",
+        prepare_ms=300.0,
+        body_ms=BODY_MS,
+        benchmark_ms=300.0,
+        contention_rho=rho,
+        benchmark_noise=0.08,
+    )
+
+
+def _threshold(vm: VariationModel, spec: FunctionSpec) -> float:
+    sigma_tot = math.sqrt(vm.sigma ** 2 + spec.benchmark_noise ** 2)
+    return spec.benchmark_ms * math.exp(
+        stats.norm.ppf(PASS_FRACTION) * sigma_tot)
+
+
+def _gate(vm: VariationModel, spec: FunctionSpec, enabled: bool):
+    if not enabled:
+        return MinosPolicy(elysium_threshold=float("inf"), enabled=False)
+    return MinosPolicy(elysium_threshold=_threshold(vm, spec), max_retries=5)
+
+
+def _plan_factory(crash: float, *, scale: float, outage: bool):
+    """Per-fleet FaultPlan factory: crash sets the level, satellites
+    (cold-fail / probe-timeout / lost completion / throttle) scale with
+    it. scale<1 models the healthier fleet; crash=0 → plan=None so the
+    fault-free column runs the bit-identical no-plan path."""
+    if crash <= 0.0:
+        return None
+    c = crash * scale
+    windows = (FaultWindow(start_ms=40_000.0, end_ms=55_000.0,
+                           kind="outage"),) if outage else ()
+
+    def factory(seed: int) -> FaultPlan:
+        return FaultPlan(seed=seed, crash_rate=c, cold_fail_rate=c / 2,
+                         probe_timeout_rate=c / 2,
+                         probe_timeout_ms=4 * BODY_MS,
+                         lost_completion_rate=c / 4, throttle_rate=c / 8,
+                         windows=windows)
+    return factory
+
+
+def _fleets(crash: float, *, gate_on: bool, recovery, outage: bool):
+    spec = _spec()
+    rows = [
+        ("gen1", PlatformProfile.gcf_gen1(),
+         VariationModel(sigma=0.30), 4, 1.0, outage),
+        ("gen2", PlatformProfile.gcf_gen2(),
+         VariationModel(sigma=0.10, day_factor=1.15), 1, 0.2, False),
+    ]
+    fleets = []
+    for name, prof, vm, cap, scale, out in rows:
+        knobs = dataclasses.replace(prof.knobs(), max_instances=cap)
+        fleets.append(FleetSpec(
+            name=name, spec=spec, variation=vm, profile=prof, knobs=knobs,
+            policy=_gate(vm, spec, gate_on),
+            fault_plan_factory=_plan_factory(crash, scale=scale, outage=out),
+            recovery=recovery))
+    return fleets
+
+
+#: recovery ladder: (label, recovery, breaker, shed)
+ARMS = (
+    ("none", None, None, False),
+    ("retry", RECOVERY, None, False),
+    ("retry+breaker", RECOVERY, BREAKER, False),
+    ("retry+breaker+shed", RECOVERY, BREAKER, True),
+)
+
+
+def _run_cell(crash, arm, gate_on, seeds, rate, duration_ms, outage):
+    label, recovery, breaker, shed = arm
+    summaries, extras = [], []
+    for seed in seeds:
+        fleets = _fleets(crash, gate_on=gate_on, recovery=recovery,
+                         outage=outage)
+        router = FleetRouter(
+            fleets, RandomRoutingPolicy(), seed=seed,
+            breaker=breaker, shed_when_degraded=shed,
+            qos_priorities=QOS_PRIORITIES if shed else None)
+        run = run_fleet_open_loop(
+            router, PoissonProcess(rate),
+            rng=np.random.RandomState(23_000 + seed),
+            duration_ms=duration_ms, qos_classes=QOS,
+            drain_limit_ms=180_000.0)
+        router.check_conservation()  # every arm, not only under the env gate
+        summaries.append(FleetSummary.from_run(label, router, run,
+                                               qos_classes=QOS))
+        extras.append({
+            "gate_terms": sum(e.instances_terminated
+                              for e in router.engines),
+            "fault_deaths": sum(sum(e.fault_counts.values())
+                                for e in router.engines),
+            "requeues": sum(e.queue.total_requeued
+                            for e in router.engines),
+            "retries": (float(np.mean([r.retries for r in run.results]))
+                        if run.results else 0.0),
+        })
+    return summaries, extras
+
+
+def _pool(summaries, field) -> float:
+    return float(np.mean([getattr(s, field) for s in summaries]))
+
+
+def _gold_slo(summaries) -> float:
+    vals = []
+    for s in summaries:
+        for row in s.slo_attainment:
+            if row["qos"] == "gold" and row["n_completed"] > 0:
+                vals.append(row["attainment"])
+    return float(np.mean(vals)) if vals else float("nan")
+
+
+def _row(crash, label, gate_on, summaries, extras):
+    return {
+        "crash_rate": crash,
+        "recovery": label,
+        "gate": "on" if gate_on else "off",
+        "mean_ms": round(_pool(summaries, "mean_latency_ms"), 1),
+        "p95_ms": round(_pool(summaries, "p95_latency_ms"), 1),
+        "drop_pct": round(100 * _pool(summaries, "drop_rate"), 2),
+        "dead": int(round(_pool(summaries, "n_dead_lettered"))),
+        "shed": int(round(_pool(summaries, "n_shed"))),
+        "breaker_opens": int(round(np.mean(
+            [sum(s.breaker_opens) for s in summaries]))),
+        "cost_per_1k": round(_pool(summaries, "cost_per_1k"), 4),
+        "gate_terms": int(round(np.mean([e["gate_terms"] for e in extras]))),
+        "fault_deaths": int(round(np.mean(
+            [e["fault_deaths"] for e in extras]))),
+        "requeues": int(round(np.mean([e["requeues"] for e in extras]))),
+        "mean_retries": round(float(np.mean(
+            [e["retries"] for e in extras])), 3),
+        "gold_slo_pct": round(100 * _gold_slo(summaries), 1),
+    }
+
+
+def fault_sweep(quick: bool = False, *, smoke: bool = False,
+                report_timing: bool = True):
+    """Returns (rows, headline, perf) — the benchmarks/run.py contract."""
+    if smoke:
+        crashes = (0.0, 0.15)
+        arms = (ARMS[1], ARMS[2])
+        seeds = range(1)
+        rate = 2.0
+        duration_ms = 45_000.0
+        outage = False
+    elif quick:
+        crashes = (0.0, 0.15)
+        arms = ARMS
+        seeds = range(2)
+        rate = 2.0
+        duration_ms = 90_000.0
+        outage = True
+    else:
+        crashes = (0.0, 0.05, 0.15)
+        arms = ARMS
+        seeds = range(3)
+        rate = 2.5
+        duration_ms = 150_000.0
+        outage = True
+
+    t_sweep = time.perf_counter()
+    rows = []
+    cells = {}
+    for crash in crashes:
+        for arm in arms:
+            for gate_on in (True, False):
+                summaries, extras = _run_cell(
+                    crash, arm, gate_on, seeds, rate, duration_ms, outage)
+                cells[(crash, arm[0], gate_on)] = summaries
+                rows.append(_row(crash, arm[0], gate_on, summaries, extras))
+    t_event = time.perf_counter() - t_sweep
+    n_requests = sum(s.n_arrived for ss in cells.values() for s in ss)
+
+    # headline: the gate's latency cut with and without faults, under the
+    # strongest recovery arm present — does injected failure erase (or
+    # invert) the speedup the gate exists to deliver?
+    best = arms[-1][0]
+    top = max(crashes)
+
+    def cut(crash):
+        on = _pool(cells[(crash, best, True)], "mean_latency_ms")
+        off = _pool(cells[(crash, best, False)], "mean_latency_ms")
+        return (1.0 - on / off) * 100 if off else 0.0
+
+    headline = (f"cells={len(rows)}_{best}_gate_cut"
+                f"_f0={cut(crashes[0]):.0f}%_f{top:g}={cut(top):.0f}%")
+    perf = {
+        "n_cells": len(rows),
+        "n_requests": n_requests,
+        "event_wall_clock_s": round(t_event, 3),
+        "event_arrivals_per_sec": round(n_requests / max(t_event, 1e-9), 1),
+    }
+    if report_timing:
+        print(f"fault_sweep timing: cells={len(rows)} "
+              f"requests={n_requests} event={t_event:.2f}s "
+              f"({perf['event_arrivals_per_sec']:.0f} arrivals/s)",
+              file=sys.stderr)
+    return rows, headline, perf
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="2 fault levels, 2 seeds, shorter windows")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI cell set; deterministic stdout "
+                         "(timing on stderr)")
+    args = ap.parse_args()
+    rows, headline, _perf = fault_sweep(quick=args.quick, smoke=args.smoke)
+    if args.smoke:
+        print("fault_sweep_smoke_guards,conservation=ok", file=sys.stderr)
+    print(f"fault_sweep,{headline}")
+    cols = list(rows[0].keys())
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r[c]) for c in cols))
+
+
+if __name__ == "__main__":
+    main()

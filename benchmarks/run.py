@@ -92,9 +92,9 @@ def main() -> None:
                     help="skip writing benchmarks/BENCH_substrate.json")
     args = ap.parse_args()
 
-    from . import (diurnal_sweep, figs, fleet_sweep, grid_sweep,
-                   kernels_micro, openloop_sweep, pipeline_sweep,
-                   roofline_table, workflow_sweep)
+    from . import (diurnal_sweep, fault_sweep, figs, fleet_sweep,
+                   grid_sweep, kernels_micro, openloop_sweep,
+                   pipeline_sweep, roofline_table, workflow_sweep)
 
     benches = {
         "workflow_sweep": workflow_sweep.workflow_sweep,
@@ -116,6 +116,9 @@ def main() -> None:
         # fleet meta-scheduler: routing policies over heterogeneous
         # Minos-gated fleets on one clock (DESIGN.md §14)
         "fleet_sweep": fleet_sweep.fleet_sweep,
+        # fault-injection ladder × recovery ladder × gate on/off: crash
+        # misattribution + retry-storm questions (DESIGN.md §15)
+        "fault_sweep": fault_sweep.fault_sweep,
         "fig4_regression_duration": figs.fig4_regression_duration,
         "fig5_successful_requests": figs.fig5_successful_requests,
         "fig6_cost_per_day": figs.fig6_cost_per_day,

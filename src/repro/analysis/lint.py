@@ -31,6 +31,11 @@ then runs the project rules over that model:
 * **R5 estimator-pytree** — ``lax.scan`` carriers must be NamedTuples /
   registered pytrees with array leaves, not raw ``list``/``dict``/``set``
   literals (an unregistered or shape-unstable carry retraces per step).
+* **R6 fault-injector-purity** — ``*FaultPlan``/``*FaultProcess``
+  classes (the seeded fault-injection schedules, DESIGN.md §15) must
+  draw randomness only from their own injected seeded generator: no
+  host RNG beyond constructing ``RandomState(seed)``/``default_rng(seed)``
+  *with* a seed, no wall clock, no IO, no environment reads.
 
 Grandfathering: ``baseline.json`` (next to this file) pins the accepted
 findings by line-independent fingerprint with a one-line justification
@@ -53,6 +58,7 @@ RULES = {
     "R3": "controller-purity: controllers decide, engines act",
     "R4": "recompile-hazard: jitted call sites must hit the compile cache",
     "R5": "estimator-pytree: scan carriers are registered pytrees of arrays",
+    "R6": "fault-injector-purity: fault schedules draw only injected seeded RNG",
 }
 
 DEFAULT_TARGETS = ("src", "benchmarks")

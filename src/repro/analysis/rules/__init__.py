@@ -10,7 +10,7 @@ from __future__ import annotations
 from typing import Iterable, Optional
 
 from ..lint import Finding, ModuleModel
-from . import controller, purity, recompile
+from . import controller, faults, purity, recompile
 
 #: rule id -> checker. Order is report order within a file.
 REGISTRY = {
@@ -19,6 +19,7 @@ REGISTRY = {
     "R3": controller.check_controller_purity,
     "R4": recompile.check_recompile_hazard,
     "R5": recompile.check_estimator_pytree,
+    "R6": faults.check_fault_injector_purity,
 }
 
 

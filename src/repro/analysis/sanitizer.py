@@ -21,6 +21,14 @@ cannot see — the ones that live in *state*, not syntax:
   executing request implies a pending completion event on the clock heap.
 * **telemetry immutability** — the read-only view must actually reject
   attribute writes (probed once at attach).
+* **fault ledger** (DESIGN.md §15) — with a FaultPlan armed, every
+  injected fault must bill a finite non-negative amount, the dead-letter
+  counter must match its event log, and no request may be both
+  dead-lettered and completed (the idempotent-re-dispatch guarantee).
+  The engine conservation equation gains a ``dead_lettered`` term, and
+  the pool bound tolerates *zombie* executions — abandoned attempts
+  whose instance slot is still legitimately held until their scheduled
+  completion/crash event fires.
 * **finite outputs** — vectorized-sim summaries must be NaN/inf-free
   (:func:`check_finite`), and the vectorized open-loop summary must
   conserve requests per arm (:func:`check_open_summary`).
@@ -199,26 +207,60 @@ def check_telemetry_readonly(telemetry: Any) -> None:
 
 def check_engine_conservation(engine: Any, *, where: str = "") -> None:
     executing = engine._sanitizer_executing
+    dead = getattr(engine, "requests_dead_lettered", 0)
+    zombies = getattr(engine, "_zombie_executions", 0)
     lhs = engine.requests_arrived
     rhs = (len(engine.results) + engine.requests_dropped
-           + len(engine.queue) + executing)
+           + len(engine.queue) + executing + dead)
     if lhs != rhs:
         _fail("engine conservation violated: arrived != results + dropped "
-              "+ queued + executing", where=where, arrived=lhs,
-              results=len(engine.results), dropped=engine.requests_dropped,
-              queued=len(engine.queue), executing=executing)
+              "+ queued + executing + dead_lettered", where=where,
+              arrived=lhs, results=len(engine.results),
+              dropped=engine.requests_dropped, queued=len(engine.queue),
+              executing=executing, dead_lettered=dead)
     if executing < 0:
         _fail("executing count negative", where=where, executing=executing)
+    if zombies < 0:
+        _fail("zombie execution count negative", where=where, zombies=zombies)
     # event-stream cross-check: each executing request has a pending
     # completion/crash event; the clock heap may hold extra dispatch
     # timers but never fewer events than executing requests
     if executing > len(engine.loop._heap):
         _fail("executing requests exceed pending clock events", where=where,
               executing=executing, pending_events=len(engine.loop._heap))
-    if engine.pool.total_in_flight > executing:
+    # zombie slack: a timed-out-and-requeued request leaves its original
+    # attempt holding a pool slot until that attempt's event fires
+    if engine.pool.total_in_flight > executing + zombies:
         _fail("pool in-flight exceeds dispatched-but-unfinished requests",
               where=where, pool_in_flight=engine.pool.total_in_flight,
-              executing=executing)
+              executing=executing, zombies=zombies)
+
+
+def check_fault_ledger(engine: Any, *, where: str = "") -> None:
+    """Fault-injection bookkeeping invariants (DESIGN.md §15). Cheap
+    unless dead letters exist; no-op on engines without a FaultPlan."""
+    events = getattr(engine, "fault_events", None)
+    if events is None:
+        return
+    for t_ms, kind, billed in events:
+        if not (math.isfinite(billed) and billed >= 0.0):
+            _fail("fault event billed a non-finite or negative amount",
+                  where=where, t_ms=t_ms, kind=kind, billed=billed)
+    dead_events = getattr(engine, "dead_letter_events", ())
+    n_dead = getattr(engine, "requests_dead_lettered", 0)
+    if n_dead != len(dead_events):
+        _fail("dead-letter counter diverged from its event log",
+              where=where, counter=n_dead, events=len(dead_events))
+    if dead_events:
+        completed_ids = {
+            r.invocation_id for r in engine.results
+            if getattr(r, "invocation_id", None) is not None}
+        both = {iid for _, iid, _ in dead_events
+                if iid is not None} & completed_ids
+        if both:
+            _fail("request both dead-lettered and completed (idempotent "
+                  "re-dispatch broken)", where=where,
+                  invocation_ids=sorted(both)[:5])
 
 
 def attach_engine(engine: Any) -> None:
@@ -236,6 +278,7 @@ def attach_engine(engine: Any) -> None:
     queue_requeue = engine.queue.requeue
     engine_finish = engine._finish
     engine_submit = engine.submit
+    engine_dead_letter = getattr(engine, "_dead_letter", None)
 
     def pop_wrapped(*args: Any, **kwargs: Any):
         inv = queue_pop(*args, **kwargs)
@@ -264,6 +307,16 @@ def attach_engine(engine: Any) -> None:
     engine._finish = finish_wrapped
     engine.submit = submit_wrapped
 
+    if engine_dead_letter is not None:
+        def dead_letter_wrapped(*args: Any, **kwargs: Any):
+            engine._sanitizer_executing -= 1
+            out = engine_dead_letter(*args, **kwargs)
+            check_engine_conservation(engine, where="_dead_letter")
+            check_fault_ledger(engine, where="_dead_letter")
+            return out
+
+        engine._dead_letter = dead_letter_wrapped
+
 
 # ---------------------------------------------------------------------------
 # Open-loop + vectorized-output checks
@@ -271,13 +324,16 @@ def attach_engine(engine: Any) -> None:
 
 
 def check_open_loop(*, n_arrived: int, n_completed: int, n_dropped: int,
-                    n_pending_at_end: int) -> None:
+                    n_pending_at_end: int, n_dead_lettered: int = 0) -> None:
     """run_open_loop conservation: everything offered either completed,
-    dropped, or is still parked/queued/in flight at the horizon."""
-    if n_arrived != n_completed + n_dropped + n_pending_at_end:
+    dropped, dead-lettered, or is still parked/queued/in flight at the
+    horizon. ``n_dead_lettered`` defaults to 0 (fault-free runs)."""
+    if n_arrived != (n_completed + n_dropped + n_pending_at_end
+                     + n_dead_lettered):
         _fail("open-loop conservation violated: arrived != completed + "
-              "dropped + pending_at_end", arrived=n_arrived,
+              "dropped + dead_lettered + pending_at_end", arrived=n_arrived,
               completed=n_completed, dropped=n_dropped,
+              dead_lettered=n_dead_lettered,
               pending_at_end=n_pending_at_end)
 
 
@@ -294,27 +350,38 @@ def check_fleet_conservation(
     per_fleet_completed: tuple,
     per_fleet_dropped: tuple,
     per_fleet_parked: tuple,
+    n_rejected: int = 0,
+    n_dead_lettered: int = 0,
+    n_hedge_dead_lettered: int = 0,
+    per_fleet_dead_lettered: Optional[tuple] = None,
 ) -> None:
-    """Fleet-router conservation ledger (DESIGN.md §14).
+    """Fleet-router conservation ledger (DESIGN.md §14, §15).
 
     Two levels cross-check each other. The *logical* ledger counts each
     request once regardless of hedging; the *copies* ledger sums the
     per-engine counters, where a hedged request appears twice. The copies
-    identity ``Σ arrived_f == n_arrived + n_hedges`` is the
-    double-dispatch detector: a router that submits a request to two
+    identity ``Σ arrived_f == (n_arrived − n_rejected) + n_hedges`` is
+    the double-dispatch detector: a router that submits a request to two
     fleets without recording a hedge inflates the left side only.
     ``n_pending`` and ``per_fleet_parked`` are tracked/measured
     independently (not residuals), so every equation is a real check.
+    The resilience terms (DESIGN.md §15) default to zero, keeping the
+    fault-free ledger identical to the §14 form: rejected requests (shed
+    or breaker-refused) never reach an engine, and a dead-lettered
+    logical request is one whose *last* live copy exhausted retries.
     """
-    if n_arrived != n_completed + n_dropped + n_pending:
+    if n_arrived != (n_completed + n_dropped + n_rejected
+                     + n_dead_lettered + n_pending):
         _fail("fleet logical conservation violated: arrived != completed "
-              "+ dropped + pending", arrived=n_arrived,
-              completed=n_completed, dropped=n_dropped, pending=n_pending)
-    if sum(per_fleet_arrived) != n_arrived + n_hedges:
+              "+ dropped + rejected + dead_lettered + pending",
+              arrived=n_arrived, completed=n_completed, dropped=n_dropped,
+              rejected=n_rejected, dead_lettered=n_dead_lettered,
+              pending=n_pending)
+    if sum(per_fleet_arrived) != (n_arrived - n_rejected) + n_hedges:
         _fail("fleet copies conservation violated: sum(per-fleet arrived) "
-              "!= logical arrived + hedges (double dispatch?)",
+              "!= submitted logical arrivals + hedges (double dispatch?)",
               per_fleet_arrived=per_fleet_arrived, arrived=n_arrived,
-              hedges=n_hedges)
+              rejected=n_rejected, hedges=n_hedges)
     if sum(per_fleet_completed) != n_completed + n_hedge_cancelled:
         _fail("fleet completion ledger violated: sum(per-fleet completed) "
               "!= logical completed + hedge losers",
@@ -325,13 +392,22 @@ def check_fleet_conservation(
               "logical dropped + hedge-copy drops",
               per_fleet_dropped=per_fleet_dropped, dropped=n_dropped,
               hedge_dropped=n_hedge_dropped)
-    for i, (a, c, d, p) in enumerate(zip(
+    if per_fleet_dead_lettered is None:
+        per_fleet_dead_lettered = (0,) * len(per_fleet_arrived)
+    if sum(per_fleet_dead_lettered) != n_dead_lettered + n_hedge_dead_lettered:
+        _fail("fleet dead-letter ledger violated: sum(per-fleet "
+              "dead-lettered) != logical dead-lettered + hedge-copy "
+              "dead letters",
+              per_fleet_dead_lettered=per_fleet_dead_lettered,
+              dead_lettered=n_dead_lettered,
+              hedge_dead_lettered=n_hedge_dead_lettered)
+    for i, (a, c, d, dl, p) in enumerate(zip(
             per_fleet_arrived, per_fleet_completed, per_fleet_dropped,
-            per_fleet_parked)):
-        if a != c + d + p:
+            per_fleet_dead_lettered, per_fleet_parked)):
+        if a != c + d + dl + p:
             _fail("per-fleet conservation violated: arrived != completed "
-                  "+ dropped + parked", fleet=i, arrived=a, completed=c,
-                  dropped=d, parked=p)
+                  "+ dropped + dead_lettered + parked", fleet=i, arrived=a,
+                  completed=c, dropped=d, dead_lettered=dl, parked=p)
 
 
 def check_finite(summary: dict, *, where: str = "") -> None:
@@ -375,6 +451,7 @@ __all__ = [
     "attach_engine",
     "attach_pool",
     "check_engine_conservation",
+    "check_fault_ledger",
     "check_finite",
     "check_fleet_conservation",
     "check_open_loop",

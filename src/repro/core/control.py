@@ -83,6 +83,15 @@ class AdmitDecision(Enum):
     DEFER = "defer"  # wait at the admission queue (back-pressure)
 
 
+class FailureDecision(Enum):
+    """What to do with a request whose dispatch attempt failed (platform
+    fault: crash / cold-start failure / probe timeout / lost completion /
+    per-request timeout — DESIGN.md §15)."""
+
+    RETRY = "retry"              # re-queue (engine applies backoff)
+    DEAD_LETTER = "dead_letter"  # terminal: stop retrying, count + surface
+
+
 # ---------------------------------------------------------------------------
 # Telemetry — the read-only view every decision point receives
 # ---------------------------------------------------------------------------
@@ -174,6 +183,27 @@ class Telemetry:
         """Requests refused at submit because the finite queue
         (``SubstrateKnobs.queue_capacity``) was full."""
         return getattr(self._engine, "requests_dropped", 0)
+
+    # -- platform faults (DESIGN.md §15) ---------------------------------
+    @property
+    def n_failures(self) -> int:
+        """Failed dispatch attempts (crashes, cold-start failures, probe
+        timeouts, lost completions, request timeouts) — per-attempt, so a
+        request retried twice counts twice."""
+        counts = getattr(self._engine, "fault_counts", None)
+        return sum(counts.values()) if counts else 0
+
+    @property
+    def failure_rate(self) -> float:
+        """Failed fraction of finished dispatch attempts (Welford mean of
+        the engine's failure indicator stream; 0.0 before any attempt)."""
+        s = getattr(self._engine, "failure_stats", None)
+        return s.mean if s is not None and s.count else 0.0
+
+    @property
+    def n_dead_lettered(self) -> int:
+        """Requests that exhausted their attempt budget (terminal)."""
+        return getattr(self._engine, "requests_dead_lettered", 0)
 
     # -- streaming estimates (Welford; maintained by the engine) ---------
     @property
@@ -350,14 +380,31 @@ class AdmitContext:
 
 
 @dataclasses.dataclass(frozen=True)
+class FailureContext:
+    """A dispatch attempt failed (DESIGN.md §15). ``attempts`` counts
+    failed attempts so far (>= 1); ``elapsed_ms`` is measured from the
+    request's first enqueue. The engine still enforces
+    ``RecoveryPolicy.max_attempts`` after the controller answers, so a
+    RETRY past the budget dead-letters anyway."""
+
+    telemetry: Telemetry
+    kind: str                      # "crash" | "cold_start" | "probe_timeout" | "lost" | "timeout"
+    invocation_id: Optional[int]
+    attempts: int
+    elapsed_ms: float
+    qos: str = "default"
+
+
+@dataclasses.dataclass(frozen=True)
 class ReleaseContext:
     telemetry: Telemetry
     result: Any  # the completed RequestResult
 
 
-#: The five decision points, in request-lifecycle order.
+#: The six decision points, in request-lifecycle order.
 DECISION_POINTS = (
-    "on_cold_start", "on_probe", "on_reuse", "on_admit", "on_release",
+    "on_cold_start", "on_probe", "on_reuse", "on_admit", "on_failure",
+    "on_release",
 )
 
 
@@ -381,6 +428,8 @@ class Controller(Protocol):
     def on_reuse(self, ctx: ReuseContext) -> ReuseDecision: ...
 
     def on_admit(self, ctx: AdmitContext) -> AdmitDecision: ...
+
+    def on_failure(self, ctx: "FailureContext") -> FailureDecision: ...
 
     def on_release(self, ctx: ReleaseContext) -> None: ...
 
@@ -427,6 +476,11 @@ class ControllerBase:
             return AdmitDecision.DEFER
         return AdmitDecision.ADMIT
 
+    def on_failure(self, ctx: FailureContext) -> FailureDecision:
+        # retry by default; the engine's RecoveryPolicy.max_attempts still
+        # bounds total attempts regardless of this answer
+        return FailureDecision.RETRY
+
     def on_release(self, ctx: ReleaseContext) -> None:
         return None
 
@@ -460,6 +514,11 @@ class DelegatingController(ControllerBase):
 
     def on_admit(self, ctx: AdmitContext) -> AdmitDecision:
         return self.inner.on_admit(ctx)
+
+    def on_failure(self, ctx: FailureContext) -> FailureDecision:
+        # pre-faults controllers may not implement on_failure; default RETRY
+        fn = getattr(self.inner, "on_failure", None)
+        return fn(ctx) if fn is not None else FailureDecision.RETRY
 
     def on_release(self, ctx: ReleaseContext) -> None:
         return self.inner.on_release(ctx)
@@ -954,6 +1013,8 @@ __all__ = [
     "DECISION_POINTS",
     "DelegatingController",
     "ElysiumGate",
+    "FailureContext",
+    "FailureDecision",
     "FleetTelemetry",
     "PassFractionController",
     "ProbeContext",

@@ -56,6 +56,15 @@ class Invocation:
     # fair-queue mode reads these; the default FIFO mode carries them inert.
     qos: str = "default"
     qos_weight: float = 1.0
+    # failure-recovery bookkeeping (DESIGN.md §15); inert without a
+    # FaultPlan/RecoveryPolicy. dispatch_epoch is bumped on every abandon/
+    # failure so stale in-flight executions of this invocation can detect
+    # they lost the race (idempotent re-dispatch: a zombie completion or
+    # crash must not double-count). backoff_ms carries the previous
+    # decorrelated-jitter delay (the "prev" in min(cap, uniform(base, 3*prev))).
+    dispatch_epoch: int = 0
+    failed_attempts: int = 0
+    backoff_ms: float = 0.0
 
     def __post_init__(self) -> None:
         if self.first_enqueued_at_ms is None:

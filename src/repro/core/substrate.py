@@ -47,6 +47,8 @@ from .control import (
     ClassicMinosController,
     ColdStartContext,
     ElysiumGate,  # noqa: F401 — re-exported; the gate now lives in control.py
+    FailureContext,
+    FailureDecision,
     ProbeContext,
     ProbeDecision,
     ReleaseContext,
@@ -59,6 +61,7 @@ from .estimators import Welford
 from .lifecycle import FunctionInstance, InstanceState
 from .policy import Verdict
 from .queue import Invocation, InvocationQueue
+from ..faults import decorrelated_jitter_ms
 
 
 # ---------------------------------------------------------------------------
@@ -679,6 +682,8 @@ class SubstrateEngine:
         clock: Optional[SimClock] = None,
         rng: Optional[np.random.RandomState] = None,
         controller=None,
+        fault_plan=None,
+        recovery=None,
     ) -> None:
         if controller is None:
             if policy is None:
@@ -721,6 +726,27 @@ class SubstrateEngine:
         self.log_probe_stats = Welford()  # log of the same (lognormal fit)
         self.body_stats = Welford()       # observed body durations (ms)
         self.reuse_stats = Welford()      # 1.0 warm-served / 0.0 cold-served
+        # -- platform faults + recovery (DESIGN.md §15) --------------------
+        # fault_plan: a repro.faults.FaultPlan (own seeded RNG stream; None
+        # = the historical no-fault world, bit-identical — zero extra
+        # draws). recovery: a repro.faults.RecoveryPolicy (timeouts,
+        # bounded attempts, backoff); None = infinite immediate retries,
+        # the pre-faults at-least-once semantics.
+        self.fault_plan = fault_plan
+        self.recovery = recovery
+        self._seed = seed
+        self._recovery_rng: Optional[np.random.RandomState] = None  # lazy
+        self.fault_counts: dict[str, int] = {}       # kind -> occurrences
+        self.fault_events: list[tuple[float, str, float]] = []  # (t, kind, billed)
+        self.requests_dead_lettered = 0
+        self.dead_letter_events: list[tuple[float, Optional[int], str]] = []
+        self.failure_stats = Welford()  # per-attempt failure indicator (0/1)
+        # abandoned (timed-out) attempts whose execution still holds an
+        # instance slot — the sanitizer's pool-vs-executing slack term
+        self._zombie_executions = 0
+        # per-attempt failure hook (kind, Invocation) — the fleet router's
+        # circuit breakers subscribe here; gate terminations never fire it
+        self.fault_listener: Optional[Callable[[str, Invocation], None]] = None
         self.telemetry = Telemetry(self)
         # REPRO_SANITIZE=1 arms conservation/heap/immutability cross-checks
         # on this engine and its pool (repro.analysis.sanitizer). Attached
@@ -762,24 +788,42 @@ class SubstrateEngine:
         submitted_at_ms: Optional[float] = None,
         qos: str = "default",
         qos_weight: float = 1.0,
+        on_dead_letter: Callable[[Invocation], None] | None = None,
     ) -> bool:
         """Enqueue one invocation; returns False when the finite queue
-        buffer (``SubstrateKnobs.queue_capacity``) rejects it.
+        buffer (``SubstrateKnobs.queue_capacity``) rejects it — or when the
+        :class:`~repro.faults.FaultPlan` throttles the submit or has the
+        platform inside an outage window (both count as drops).
 
         ``submitted_at_ms`` back-dates the request's submission time (and
         therefore its reported latency/queue wait) — the open-loop driver
         uses it for items that waited at admission before being submitted.
         ``qos``/``qos_weight`` ride on the invocation; they only order
         anything under ``SubstrateKnobs.fair_queue`` (weighted-fair
-        dequeue, core/queue.py).
+        dequeue, core/queue.py). ``on_dead_letter`` fires if the request
+        later exhausts its recovery budget (terminal failure) — the fleet
+        router closes its logical-request ledger through it.
         """
         self.requests_arrived += 1
+        plan = self.fault_plan
+        if plan is not None:
+            # outage is schedule (no draw); throttle is rate-gated, so it
+            # is only consulted — and only draws — outside an outage
+            kind = ("outage" if plan.unavailable(self.loop.now)
+                    else "throttle" if plan.throttled(self.loop.now) else None)
+            if kind is not None:
+                self.fault_counts[kind] = self.fault_counts.get(kind, 0) + 1
+                self.fault_events.append((self.loop.now, kind, 0.0))
+                self.requests_dropped += 1
+                self.drop_events.append((self.loop.now, len(self.queue)))
+                return False
         cap = self.knobs.queue_capacity
         if cap is not None and len(self.queue) >= cap:
             self.requests_dropped += 1
             self.drop_events.append((self.loop.now, len(self.queue)))
             return False
-        inv = Invocation(payload={"on_complete": on_complete, "user": payload},
+        inv = Invocation(payload={"on_complete": on_complete, "user": payload,
+                                  "on_dead_letter": on_dead_letter},
                          enqueued_at_ms=self.loop.now,
                          qos=qos, qos_weight=qos_weight)
         inv.first_enqueued_at_ms = (
@@ -881,22 +925,19 @@ class SubstrateEngine:
             inv.payload["user"], inst, self.rng, load=load
         )
         mult = self.knobs.load_multiplier(load)
+        if self.fault_plan is not None:
+            mult *= self.fault_plan.speed_multiplier(t0)  # brownout window
         if mult != 1.0:
             analysis *= mult
         # a re-probe runs concurrently with the prepare phase (paper Fig 2
         # applied to warm reuse): body starts once both are done
         ready = download if bench is None else max(download, bench)
         duration = ready + analysis
-
-        def _complete() -> None:
-            inst.serve(self.loop.now)
-            self.cost.record_reused(duration)
-            self.pool.release(inst, self.loop.now)
-            self._finish(inv, t0, download, analysis, served_by_cold=False,
-                         speed=inst.speed_factor, bench=bench, output=output)
-            self._dispatch()
-
-        self.loop.after(duration, _complete)
+        self._schedule_execution(
+            inv, inst, pre_ms=0.0, duration=duration, download=download,
+            analysis=analysis, served_by_cold=False,
+            speed=None,  # warm: report speed as of completion (post-drift)
+            bench=bench, output=output, billed_base=0.0)
 
     def _cold_start(self, inv: Invocation) -> None:
         knobs = self.knobs
@@ -913,9 +954,29 @@ class SubstrateEngine:
         download = self.backend.prepare_ms(self.rng)
 
         billed_cold = cold if knobs.bill_cold_start else 0.0
+        plan = self.fault_plan
+
+        if plan is not None and plan.cold_start_fails(t0):
+            # the instance never comes up: startup time is billed (if the
+            # platform bills cold starts), no user code runs, the request
+            # goes through failure recovery. Not a gate termination — the
+            # controller never saw this instance.
+            inst.state = InstanceState.TERMINATED
+            self.pool.drop(inst)
+            billed = billed_cold
+
+            def _cold_fail() -> None:
+                self.cost.record_terminated(billed)
+                self.fault_events.append((self.loop.now, "cold_start", billed))
+                self._handle_failure(inv, "cold_start")
+
+            self.loop.after(cold, _cold_fail)
+            return
 
         load = self.pool.load(inst)  # 1 unless warm takes landed mid-start
         mult = self.knobs.load_multiplier(load)
+        if plan is not None:
+            mult *= plan.speed_multiplier(t0)  # brownout window
 
         self._decide("on_cold_start")
         probe_decision = self.controller.on_cold_start(ColdStartContext(
@@ -929,16 +990,28 @@ class SubstrateEngine:
             if mult != 1.0:
                 analysis *= mult
             duration = download + analysis
+            self._schedule_execution(
+                inv, inst, pre_ms=cold, duration=duration, download=download,
+                analysis=analysis, served_by_cold=True, speed=speed,
+                bench=None, output=output, billed_base=billed_cold)
+            return
 
-            def _complete_direct() -> None:
-                inst.serve(self.loop.now)
-                self.cost.record_passed(billed_cold + duration)
-                self.pool.release(inst, self.loop.now)
-                self._finish(inv, t0, download, analysis, served_by_cold=True,
-                             speed=speed, bench=None, output=output)
-                self._dispatch()
+        if plan is not None and plan.probe_times_out(t0):
+            # the benchmark hangs: the platform kills the instance after
+            # the watchdog window and bills the wait; the probe result
+            # never materializes (no probe_stats update, no gate judgment
+            # — the gate cannot misread an instance it never measured).
+            inst.state = InstanceState.TERMINATED
+            self.pool.drop(inst)
+            billed = billed_cold + plan.probe_timeout_ms
 
-            self.loop.after(cold + duration, _complete_direct)
+            def _probe_hang() -> None:
+                self.cost.record_terminated(billed)
+                self.fault_events.append(
+                    (self.loop.now, "probe_timeout", billed))
+                self._handle_failure(inv, "probe_timeout")
+
+            self.loop.after(cold + plan.probe_timeout_ms, _probe_hang)
             return
 
         # Minos path: probe runs in parallel with the prepare phase.
@@ -984,16 +1057,204 @@ class SubstrateEngine:
             analysis *= mult
         ready = max(download, bench)
         duration = ready + analysis
+        self._schedule_execution(
+            inv, inst, pre_ms=cold, duration=duration, download=download,
+            analysis=analysis, served_by_cold=True, speed=speed,
+            bench=bench, output=output, billed_base=billed_cold)
 
-        def _complete_pass() -> None:
-            inst.serve(self.loop.now)
-            self.cost.record_passed(billed_cold + duration)
-            self.pool.release(inst, self.loop.now)
-            self._finish(inv, t0, download, analysis, served_by_cold=True,
-                         speed=speed, bench=bench, output=output)
+    # -- in-flight phase + failure recovery (DESIGN.md §15) -------------
+    def _schedule_execution(
+        self,
+        inv: Invocation,
+        inst: FunctionInstance,
+        *,
+        pre_ms: float,
+        duration: float,
+        download: float,
+        analysis: float,
+        served_by_cold: bool,
+        speed: Optional[float],
+        bench: Optional[float],
+        output: Any,
+        billed_base: float,
+    ) -> None:
+        """Schedule the in-flight phase of one dispatch attempt.
+
+        Without a :class:`~repro.faults.FaultPlan` this performs exactly
+        the historical completion (serve → bill → release → finish →
+        dispatch) at ``pre_ms + duration``, with zero extra RNG draws.
+        With one, the attempt's fate is drawn up front from the plan's
+        private stream: a mid-body crash bills the *partial* duration
+        (Fig-3 ``d_term``) and loses the work; a lost completion bills the
+        *full* duration but never delivers the result. Either way the
+        request goes through :meth:`_handle_failure`.
+
+        ``inv.dispatch_epoch`` is captured here; a
+        :class:`~repro.faults.RecoveryPolicy` timeout that fires first
+        bumps it, turning this attempt into a zombie — its completion (or
+        crash) still bills and frees the instance, but is dropped exactly
+        once, never finished (idempotent re-dispatch: a retried request
+        can never double-count). ``speed=None`` reports the instance's
+        speed as of completion time (warm path: post-drift), matching the
+        historical closure semantics bit-for-bit.
+        """
+        t0 = self.loop.now
+        epoch = inv.dispatch_epoch
+        plan = self.fault_plan
+        crash_frac: Optional[float] = None
+        lost = False
+        if plan is not None:
+            crash_frac = plan.crash_mid_body(t0)
+            if crash_frac is None:
+                lost = plan.completion_lost(t0)
+
+        if crash_frac is not None:
+            run_ms = pre_ms + crash_frac * duration
+            billed = billed_base + crash_frac * duration
+
+            def _crash_mid_body() -> None:
+                now = self.loop.now
+                self.cost.record_terminated(billed)
+                self.fault_events.append((now, "crash", billed))
+                if served_by_cold:
+                    inst.state = InstanceState.TERMINATED
+                    self.pool.drop(inst)
+                elif self.pool.load(inst) <= 1:
+                    inst.state = InstanceState.TERMINATED
+                    self.pool.retire(inst)
+                else:
+                    # other requests live on this instance: take the fault
+                    # at execution scope (never-kill-under-live-work)
+                    self.pool.release(inst, now)
+                if inv.dispatch_epoch != epoch:
+                    self._zombie_executions -= 1  # abandoned before crashing
+                    self._dispatch()
+                    return
+                self._handle_failure(inv, "crash")
+
+            self.loop.after(run_ms, _crash_mid_body)
+            self._maybe_schedule_abandon(inv, epoch, t0 + run_ms)
+            return
+
+        def _complete() -> None:
+            now = self.loop.now
+            inst.serve(now)
+            if served_by_cold:
+                self.cost.record_passed(billed_base + duration)
+            else:
+                self.cost.record_reused(duration)
+            self.pool.release(inst, now)
+            if inv.dispatch_epoch != epoch:
+                # timed-out attempt: billed, instance freed, result
+                # discarded — the retry owns the request now
+                self._zombie_executions -= 1
+                self.fault_events.append((now, "stale_completion", 0.0))
+                self._dispatch()
+                return
+            if lost:
+                # the body ran (and is billed) but the completion
+                # notification vanished; detected when it would have been
+                # delivered (stand-in for a client acknowledgment timer)
+                self.fault_events.append((now, "lost", 0.0))
+                self._handle_failure(inv, "lost")
+                return
+            self._finish(inv, t0, download, analysis,
+                         served_by_cold=served_by_cold,
+                         speed=inst.speed_factor if speed is None else speed,
+                         bench=bench, output=output)
             self._dispatch()
 
-        self.loop.after(cold + duration, _complete_pass)
+        self.loop.after(pre_ms + duration, _complete)
+        if not lost:
+            self._maybe_schedule_abandon(inv, epoch, t0 + pre_ms + duration)
+
+    def _maybe_schedule_abandon(
+        self, inv: Invocation, epoch: int, t_end_abs: float,
+    ) -> None:
+        """Arm the per-request timeout: if this attempt would resolve past
+        ``first_enqueued + RecoveryPolicy.timeout_ms``, abandon it at the
+        deadline (the execution keeps running as a billed zombie)."""
+        rec = self.recovery
+        if rec is None or rec.timeout_ms is None:
+            return
+        base = inv.first_enqueued_at_ms
+        deadline = (0.0 if base is None else base) + rec.timeout_ms
+        if t_end_abs <= deadline:
+            return
+
+        def _abandon() -> None:
+            if inv.dispatch_epoch != epoch:
+                return  # attempt already resolved another way
+            self._zombie_executions += 1
+            self.fault_events.append((self.loop.now, "timeout", 0.0))
+            self._handle_failure(inv, "timeout")
+
+        self.loop.after(max(0.0, deadline - self.loop.now), _abandon)
+
+    def _handle_failure(self, inv: Invocation, kind: str) -> None:
+        """One dispatch attempt failed (``kind``: crash / cold_start /
+        probe_timeout / lost / timeout): consult the controller's
+        ``on_failure`` decision point, then retry with backoff or
+        dead-letter. ``RecoveryPolicy.max_attempts`` bounds total attempts
+        regardless of the controller's answer."""
+        inv.dispatch_epoch += 1
+        inv.failed_attempts += 1
+        self.fault_counts[kind] = self.fault_counts.get(kind, 0) + 1
+        self.failure_stats.update(1.0)
+        if self.fault_listener is not None:
+            self.fault_listener(kind, inv)
+        decision = FailureDecision.RETRY
+        on_failure = getattr(self.controller, "on_failure", None)
+        if on_failure is not None:
+            self._decide("on_failure")
+            first = inv.first_enqueued_at_ms
+            decision = on_failure(FailureContext(
+                telemetry=self.telemetry,
+                kind=kind,
+                invocation_id=inv.invocation_id,
+                attempts=inv.failed_attempts,
+                elapsed_ms=(0.0 if first is None
+                            else self.loop.now - first),
+                qos=inv.qos,
+            ))
+        rec = self.recovery
+        if rec is not None and inv.failed_attempts >= rec.max_attempts:
+            decision = FailureDecision.DEAD_LETTER
+        if decision is FailureDecision.DEAD_LETTER:
+            self._dead_letter(inv, kind)
+            return
+        self.queue.requeue(inv, self.loop.now)
+        delay = self.knobs.requeue_overhead_ms + \
+            self.backend.requeue_penalty_ms(inv.payload["user"])
+        if rec is not None:
+            delay += self._backoff_ms(inv)
+        self.loop.after(delay, self._dispatch)
+
+    def _backoff_ms(self, inv: Invocation) -> float:
+        """Capped decorrelated-jitter backoff, drawn from a private RNG
+        stream (retry jitter must not shift the engine's own draws)."""
+        rec = self.recovery
+        if rec is None or rec.backoff_base_ms <= 0.0:
+            return 0.0
+        if self._recovery_rng is None:
+            self._recovery_rng = np.random.RandomState(
+                (self._seed ^ 0x9E3779B9) & 0xFFFFFFFF)
+        delay = decorrelated_jitter_ms(
+            self._recovery_rng, inv.backoff_ms,
+            base_ms=rec.backoff_base_ms, cap_ms=rec.backoff_cap_ms)
+        inv.backoff_ms = delay
+        return delay
+
+    def _dead_letter(self, inv: Invocation, kind: str) -> None:
+        """Terminal failure: the request leaves the system unserved (and
+        is conserved as ``requests_dead_lettered``, not as a drop)."""
+        self.requests_dead_lettered += 1
+        self.dead_letter_events.append(
+            (self.loop.now, inv.invocation_id, kind))
+        cb = inv.payload.get("on_dead_letter")
+        if cb is not None:
+            cb(inv)
+        self._dispatch()
 
     # ------------------------------------------------------------------
     def _finish(
@@ -1022,6 +1283,7 @@ class SubstrateEngine:
         # control-plane estimator feed (Telemetry reads these Welfords)
         self.reuse_stats.update(0.0 if served_by_cold else 1.0)
         self.body_stats.update(analysis)
+        self.failure_stats.update(0.0)  # a successfully finished attempt
         self._decide("on_release")
         self.controller.on_release(ReleaseContext(
             telemetry=self.telemetry, result=res))

@@ -5,7 +5,9 @@ routes one live request stream *across* heterogeneous Minos-gated fleets
 — each a full :class:`~repro.sim.platform.FaaSPlatform` on a shared
 :class:`~repro.core.substrate.SimClock` — through a pluggable
 :class:`RoutingPolicy` (random / weighted-static / greedy /
-probabilistic-split), with optional request hedging.
+probabilistic-split), with optional request hedging. Per-fleet
+:class:`CircuitBreaker` gating, failover, and QoS-priority load shedding
+(DESIGN.md §15) sit on top of the same routing policies.
 """
 from .policies import (
     GreedyRoutingPolicy,
@@ -17,9 +19,13 @@ from .policies import (
     WeightedStaticRoutingPolicy,
     solve_split,
 )
+from .resilience import BreakerConfig, BreakerState, CircuitBreaker
 from .router import FleetRouter, FleetRunResult, FleetSpec, run_fleet_open_loop
 
 __all__ = [
+    "BreakerConfig",
+    "BreakerState",
+    "CircuitBreaker",
     "FleetRouter",
     "FleetRunResult",
     "FleetSpec",

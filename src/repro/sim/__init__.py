@@ -30,6 +30,7 @@ from .metrics import (
     WorkflowSummary,
     cost_timeline,
     improvement,
+    slo_attainment_by_class,
 )
 from .platform import (
     FaaSPlatform,
@@ -67,7 +68,7 @@ __all__ = [
     "DayResult", "WeekResult", "make_arm_policy", "run_day",
     "run_pretest_phase", "run_week", "workflow_arm_factory",
     "ArmSummary", "FleetSummary", "OpenLoopSummary", "WorkflowSummary",
-    "cost_timeline", "improvement",
+    "cost_timeline", "improvement", "slo_attainment_by_class",
     "ArrivalProcess", "DiurnalPoissonProcess", "MMPPProcess", "OpenLoopRun",
     "PoissonProcess", "QoSClass", "TraceProcess", "arrival_times_ms",
     "run_open_loop",

@@ -273,6 +273,11 @@ class TraceProcess:
             raise ValueError(
                 f"no function matching {function!r} in {path!r}")
         counts = [int(c) for c in chosen[4:]]
+        if not counts or not any(counts):
+            raise ValueError(
+                f"Azure trace row for function {chosen[2][:8]!r} in "
+                f"{path!r} has no invocations: every per-minute count "
+                "column is missing or zero — pick another function row")
         if sum(counts) < 2:
             raise ValueError("trace needs >= 2 invocations to form IATs")
         times: List[float] = []
@@ -331,15 +336,20 @@ class QoSClass:
     """A named arrival-weight class (faas-offloading-sim idiom): arrivals
     are attributed to classes proportionally to ``weight``. ``priority``
     is carried on the payload for controllers that want it; the substrate
-    itself stays class-blind."""
+    itself stays class-blind. ``slo_ms`` is the class's end-to-end
+    latency objective — None means "no SLO"; when set, the open-loop and
+    fleet summaries report per-class SLO attainment against it."""
 
     name: str = "default"
     weight: float = 1.0
     priority: int = 0
+    slo_ms: Optional[float] = None
 
     def __post_init__(self) -> None:
         if self.weight <= 0.0:
             raise ValueError("weight must be > 0")
+        if self.slo_ms is not None and self.slo_ms <= 0.0:
+            raise ValueError("slo_ms must be > 0 when set")
 
 
 def draw_classes(
@@ -374,7 +384,11 @@ class OpenLoopRun:
 
     Conservation (pinned in tests/test_arrivals.py)::
 
-        n_arrived == n_completed + n_dropped + n_pending_at_end
+        n_arrived == n_completed + n_dropped + n_dead_lettered
+                     + n_pending_at_end
+
+    (``n_dead_lettered`` stays 0 unless the engine carries a FaultPlan
+    whose recovery exhausts retries — DESIGN.md §15.)
 
     ``system_samples`` is the independently measured population process
     N(t) = stage queue + in-flight + admission-deferred, sampled on a
@@ -397,6 +411,7 @@ class OpenLoopRun:
     # under blow-up (metrics.OpenLoopSummary folds these into wait_p99)
     censored_waits_ms: List[float] = dataclasses.field(default_factory=list)
     process_name: str = "?"
+    n_dead_lettered: int = 0       # retries exhausted (DESIGN.md §15)
 
     @property
     def n_completed(self) -> int:
@@ -459,7 +474,8 @@ def run_open_loop(
     result_classes: List[str] = []
     pending: collections.deque[_Item] = collections.deque()
     samples: List[tuple[float, int]] = []
-    counts = {"deferred_items": 0, "defer_decisions": 0, "in_flight": 0}
+    counts = {"deferred_items": 0, "defer_decisions": 0, "in_flight": 0,
+              "dead_lettered": 0}
     arrived_before = engine.requests_arrived
     dropped_before = engine.requests_dropped
 
@@ -481,9 +497,19 @@ def run_open_loop(
             while pending and admits(pending[0]):
                 submit_item(pending.popleft())
 
+        def dead(_inv: Any) -> None:
+            # retries exhausted (DESIGN.md §15): the slot frees without a
+            # result, and freed capacity re-offers parked items like a
+            # completion would
+            counts["in_flight"] -= 1
+            counts["dead_lettered"] += 1
+            while pending and admits(pending[0]):
+                submit_item(pending.popleft())
+
         ok = engine.submit(item.payload, done,
                            submitted_at_ms=item.arrived_at,
-                           qos=item.qos, qos_weight=item.qos_weight)
+                           qos=item.qos, qos_weight=item.qos_weight,
+                           on_dead_letter=dead)
         if ok:
             counts["in_flight"] += 1
         # a drop is already counted by the engine; nothing more to do
@@ -533,7 +559,9 @@ def run_open_loop(
     if _sanitizer.enabled():
         _sanitizer.check_open_loop(
             n_arrived=n_arrived, n_completed=len(results),
-            n_dropped=n_dropped, n_pending_at_end=pending_at_end)
+            n_dropped=n_dropped, n_pending_at_end=pending_at_end,
+            n_dead_lettered=counts["dead_lettered"])
+        _sanitizer.check_fault_ledger(engine, where="run_open_loop")
     censored = [end_clock - it.arrived_at for it in pending]
     censored += [
         end_clock - inv.first_enqueued_at_ms
@@ -554,6 +582,7 @@ def run_open_loop(
         drop_events=list(engine.drop_events),
         censored_waits_ms=censored,
         process_name=process.name,
+        n_dead_lettered=counts["dead_lettered"],
     )
 
 

@@ -56,6 +56,36 @@ def improvement(baseline: float, treatment: float) -> float:
     return (baseline - treatment) / baseline
 
 
+def slo_attainment_by_class(result_classes, latencies_ms, qos_classes) -> tuple:
+    """Per-class SLO attainment: fraction of COMPLETED requests of each
+    class finishing within its :attr:`~repro.sim.arrivals.QoSClass.slo_ms`.
+
+    Classes without an SLO are skipped. Completed-only carries the same
+    survivorship caveat as the latency percentiles (see
+    :class:`OpenLoopSummary`): dropped / dead-lettered / still-pending
+    requests never appear, so under overload read attainment alongside
+    ``drop_rate`` — 100% attainment over 10% of the traffic is not an
+    SLO win. A class with an SLO but no completions reports NaN."""
+    if not qos_classes:
+        return ()
+    cls = np.asarray(list(result_classes))
+    lat = np.asarray(list(latencies_ms), float)
+    out = []
+    for c in qos_classes:
+        slo = getattr(c, "slo_ms", None)
+        if slo is None:
+            continue
+        mine = lat[cls == c.name] if cls.size else np.empty(0)
+        out.append({
+            "qos": c.name,
+            "slo_ms": float(slo),
+            "n_completed": int(mine.size),
+            "attainment": float((mine <= slo).mean()) if mine.size
+            else float("nan"),
+        })
+    return tuple(out)
+
+
 @dataclasses.dataclass
 class WorkflowSummary:
     """One (workflow × platform × arm) cell of the sweep
@@ -128,12 +158,19 @@ class OpenLoopSummary:
     cost_per_1k: float
     n_instance_starts: int
     n_terminated: int
+    # retries exhausted under fault injection (DESIGN.md §15); 0 fault-free
+    n_dead_lettered: int = 0
+    # per-class SLO attainment rows (slo_attainment_by_class); () when no
+    # class defines an slo_ms or qos_classes was not passed to from_run
+    slo_attainment: tuple = ()
 
     @staticmethod
-    def from_run(name: str, engine, run) -> "OpenLoopSummary":
+    def from_run(name: str, engine, run,
+                 qos_classes=None) -> "OpenLoopSummary":
         """``engine`` is a :class:`~repro.core.substrate.SubstrateEngine`,
         ``run`` an :class:`~repro.sim.arrivals.OpenLoopRun` (duck-typed,
-        as elsewhere in this module)."""
+        as elsewhere in this module). ``qos_classes`` (the same sequence
+        handed to run_open_loop) enables per-class SLO attainment."""
         lat = np.asarray([r.latency_ms for r in run.results]) \
             if run.results else np.asarray([np.nan])
         completed_waits = np.asarray(
@@ -165,6 +202,10 @@ class OpenLoopSummary:
             cost_per_1k=engine.cost.total / max(run.n_completed, 1) * 1e3,
             n_instance_starts=engine.instances_started,
             n_terminated=engine.instances_terminated,
+            n_dead_lettered=getattr(run, "n_dead_lettered", 0),
+            slo_attainment=slo_attainment_by_class(
+                run.result_classes,
+                [r.latency_ms for r in run.results], qos_classes),
         )
 
     @staticmethod
@@ -255,12 +296,19 @@ class FleetSummary:
     n_hedge_wins: int
     hedge_waste_cost: float
     per_fleet: tuple
+    # -- failure resilience (DESIGN.md §15); zeros/() fault-free --
+    n_rejected: int = 0
+    n_shed: int = 0
+    n_dead_lettered: int = 0
+    breaker_opens: tuple = ()
+    slo_attainment: tuple = ()
 
     @staticmethod
-    def from_run(name: str, router, run) -> "FleetSummary":
+    def from_run(name: str, router, run, qos_classes=None) -> "FleetSummary":
         """``router`` is a :class:`~repro.fleet.router.FleetRouter`,
         ``run`` a :class:`~repro.fleet.router.FleetRunResult` (duck-typed,
-        as elsewhere in this module)."""
+        as elsewhere in this module). ``qos_classes`` (the sequence handed
+        to run_fleet_open_loop) enables per-class SLO attainment."""
         lat = np.asarray([r.latency_ms for r in run.results]) \
             if run.results else np.asarray([np.nan])
         fleet_idx = np.asarray(run.result_fleets, int) \
@@ -296,6 +344,13 @@ class FleetSummary:
             n_hedge_wins=run.n_hedge_wins,
             hedge_waste_cost=run.hedge_waste_cost,
             per_fleet=tuple(per_fleet),
+            n_rejected=getattr(run, "n_rejected", 0),
+            n_shed=getattr(run, "n_shed", 0),
+            n_dead_lettered=getattr(run, "n_dead_lettered", 0),
+            breaker_opens=tuple(getattr(run, "breaker_opens", ())),
+            slo_attainment=slo_attainment_by_class(
+                run.result_classes,
+                [r.latency_ms for r in run.results], qos_classes),
         )
 
 

@@ -283,6 +283,8 @@ class FaaSPlatform(SubstrateEngine):
         controller=None,
         knobs: Optional[SubstrateKnobs] = None,
         clock: Optional[SimClock] = None,
+        fault_plan=None,
+        recovery=None,
     ) -> None:
         """online_controller: an OnlineElysiumController (paper §IV future
         work, implemented here): every cold-start probe result is reported
@@ -309,7 +311,11 @@ class FaaSPlatform(SubstrateEngine):
 
         clock: a shared :class:`~repro.core.substrate.SimClock` — the
         fleet meta-scheduler (``repro.fleet``) composes several platforms
-        on one event loop this way. None builds a private clock."""
+        on one event loop this way. None builds a private clock.
+
+        fault_plan / recovery: a :class:`~repro.faults.FaultPlan` and
+        :class:`~repro.faults.RecoveryPolicy` (DESIGN.md §15). None/None
+        is the historical fault-free at-least-once platform."""
         if pricing is None:
             if profile is None:
                 raise ValueError("pricing is required when no profile is given")
@@ -333,6 +339,7 @@ class FaaSPlatform(SubstrateEngine):
             SimFunctionBackend(spec, variation), policy, pricing,
             knobs=knobs, seed=seed, online_controller=online_controller,
             controller=controller, clock=clock,
+            fault_plan=fault_plan, recovery=recovery,
         )
         self.spec = spec
         self.variation = variation

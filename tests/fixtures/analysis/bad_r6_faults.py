@@ -1,0 +1,56 @@
+"""Mutation fixture: R6 — fault injectors smuggling host entropy.
+
+A fault schedule's only legitimate randomness is the seeded generator it
+is constructed with (DESIGN.md §15). Everything below is the forbidden
+opposite: host RNG, wall clock, file IO, environment reads, and the
+unseeded generator constructors that seed from the OS."""
+
+import numpy as np
+
+
+class RogueFaultPlan:
+    def __init__(self, seed):
+        self.seed = seed
+        self._rng = np.random.RandomState()     # R6: unseeded-rng
+
+    def crash_mid_body(self, t_ms):
+        import random
+        return random.random() < 0.5            # R6: host RNG
+
+    def cold_start_fails(self, t_ms):
+        import time
+        return time.time() % 2 < 1.0            # R6: wall clock
+
+    def throttled(self, t_ms):
+        with open("/tmp/faults.txt") as fh:     # R6: file I/O
+            return bool(fh.read())
+
+    def completion_lost(self, t_ms):
+        import os
+        return os.environ.get("LOSE") == "1"    # R6: environment read
+
+
+class BurstyCrashFaultProcess:
+    """The FaultProcess suffix is scanned under the same rule."""
+
+    def sample(self, n):
+        return np.random.poisson(1.0, size=n)   # R6: host RNG
+
+
+class SubtleOutagePlan(RogueFaultPlan):
+    # no fault suffix of its own — reached through the base chain
+    def unavailable(self, t_ms):
+        import secrets
+        return secrets.randbelow(2) == 0        # R6: host RNG
+
+
+class SeededOkFaultPlan:
+    """The sanctioned pattern: a seeded private stream. Must NOT fire."""
+
+    def __init__(self, seed):
+        self._rng = np.random.RandomState(seed)
+        self._gen = np.random.default_rng(seed=seed)
+
+    def crash_mid_body(self, t_ms):
+        rs = self._rng.random_sample()
+        return rs if rs < 0.5 else None

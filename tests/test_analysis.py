@@ -93,6 +93,33 @@ def test_r3_fleet_router_is_exempt():
     assert fs == [], fs
 
 
+def test_r6_fault_injector_violations():
+    fs = [f for f in _findings_for("bad_r6_faults.py") if f.rule == "R6"]
+    details = {f.detail for f in fs}
+    # the unseeded ctor is its own detail; the rest carry the canon name
+    assert any(d.startswith("unseeded-rng:") for d in details), details
+    assert "random.random" in details
+    assert "time.time" in details
+    assert "open" in details
+    assert any(d.startswith("os.environ") for d in details), details
+    # *FaultProcess suffix and base-chain subclasses are both scanned
+    assert any(f.symbol.startswith("BurstyCrashFaultProcess") for f in fs)
+    assert any(f.symbol.startswith("SubtleOutagePlan") for f in fs)
+    # the sanctioned seeded-ctor pattern must NOT fire
+    assert not any(f.symbol.startswith("SeededOkFaultPlan") for f in fs), fs
+
+
+def test_r6_shipped_fault_plan_is_clean():
+    # repro.faults.FaultPlan constructs RandomState(seed) — the exemption
+    # the rule carves out; the shipped module must stay R6-clean
+    src_faults = os.path.join(
+        os.path.dirname(__file__), "..", "src", "repro", "faults",
+        "__init__.py")
+    fs = [f for f in analyze_file(src_faults, "faults/__init__.py")
+          if f.rule == "R6"]
+    assert fs == [], fs
+
+
 def test_r4_recompile_hazards():
     details = {f.detail.split(":")[0]
                for f in _findings_for("bad_r4_recompile.py") if f.rule == "R4"}
@@ -118,6 +145,7 @@ def test_every_bad_fixture_fires_only_its_rule():
         "bad_r3_router.py": {"R3"},
         "bad_r4_recompile.py": {"R4"},
         "bad_r5_carry.py": {"R5"},
+        "bad_r6_faults.py": {"R6"},
     }
     for fixture, rules in expected.items():
         assert _rules_for(fixture) == rules, fixture

@@ -384,6 +384,24 @@ def test_azure_csv_minute_ms_rescales_time():
         10.0 * full.mean_rate_per_ms())
 
 
+def test_azure_csv_all_zero_minute_row_raises_clear_error(tmp_path):
+    """Regression: a function row whose every per-minute count is zero
+    (common in the sparse tail of the 2019 dataset) used to fall through
+    to an opaque IndexError in the IAT reconstruction; it must fail fast
+    with an actionable message naming the offending function."""
+    p = tmp_path / "degenerate.csv"
+    p.write_text(
+        "HashOwner,HashApp,HashFunction,Trigger,1,2,3\n"
+        "o1,a1,deadfn00,http,0,0,0\n"
+        "o1,a1,livefn00,http,2,0,1\n")
+    with pytest.raises(ValueError, match="deadfn00.*no invocations"):
+        TraceProcess.from_azure_csv(str(p))  # first row is the dead one
+    with pytest.raises(ValueError, match="no invocations"):
+        TraceProcess.from_azure_csv(str(p), function="deadfn")
+    # the live sibling row still loads
+    assert len(TraceProcess.from_azure_csv(str(p), function="livefn").iats) == 3
+
+
 def test_azure_trace_drives_open_loop():
     tp = TraceProcess.from_azure_csv(AZURE_FIXTURE, function="a7f3")
     plat = _platform(8)
@@ -393,6 +411,53 @@ def test_azure_trace_drives_open_loop():
                              + run.n_pending_at_end)
     assert run.n_completed > 50
     assert run.process_name == tp.name
+
+
+# ---------------------------------------------------------------------------
+# Per-class SLOs (QoSClass.slo_ms -> summary attainment rows)
+# ---------------------------------------------------------------------------
+
+
+def test_qos_slo_validation():
+    with pytest.raises(ValueError):
+        QoSClass("x", slo_ms=0.0)
+    with pytest.raises(ValueError):
+        QoSClass("x", slo_ms=-5.0)
+    assert QoSClass("x").slo_ms is None  # no SLO by default
+
+
+def test_slo_attainment_by_class_math():
+    from repro.sim import slo_attainment_by_class
+    qos = (QoSClass("gold", slo_ms=100.0), QoSClass("bronze", slo_ms=50.0),
+           QoSClass("free"))  # no SLO: skipped, not reported as 100%
+    rows = slo_attainment_by_class(
+        ["gold", "gold", "bronze"], [80.0, 120.0, 40.0], qos)
+    assert [r["qos"] for r in rows] == ["gold", "bronze"]
+    gold, bronze = rows
+    assert gold["n_completed"] == 2 and gold["attainment"] == 0.5
+    assert bronze["attainment"] == 1.0 and bronze["slo_ms"] == 50.0
+    # a class with an SLO but no completions reports NaN, not a fake 100%
+    empty = slo_attainment_by_class([], [], (QoSClass("g", slo_ms=10.0),))
+    assert math.isnan(empty[0]["attainment"])
+    assert slo_attainment_by_class(["g"], [1.0], None) == ()
+
+
+def test_open_loop_summary_reports_per_class_slo():
+    plat = _platform(6)
+    qos = (QoSClass("gold", weight=1.0, slo_ms=120_000.0),
+           QoSClass("bronze", weight=1.0, slo_ms=1.0))  # unattainable
+    run = run_open_loop(plat, PoissonProcess(1.0),
+                        rng=np.random.RandomState(2),
+                        duration_ms=60_000.0, qos_classes=qos)
+    s = OpenLoopSummary.from_run("slo", plat, run, qos_classes=qos)
+    by_name = {r["qos"]: r for r in s.slo_attainment}
+    assert set(by_name) == {"gold", "bronze"}
+    assert by_name["gold"]["attainment"] == 1.0   # generous budget
+    assert by_name["bronze"]["attainment"] == 0.0  # 1ms is impossible
+    assert (by_name["gold"]["n_completed"]
+            + by_name["bronze"]["n_completed"]) == run.n_completed
+    # without qos_classes the summary stays backward-compatible
+    assert OpenLoopSummary.from_run("plain", plat, run).slo_attainment == ()
 
 
 # ---------------------------------------------------------------------------

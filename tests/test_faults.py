@@ -1,0 +1,608 @@
+"""Fault injection + failure-aware recovery (repro.faults; DESIGN.md §15).
+
+* FaultPlan/FaultWindow/RecoveryPolicy validation and semantics; a plan
+  with every rate at zero draws NOTHING (the zero-draw contract) and an
+  engine carrying such a plan + a RecoveryPolicy is bit-identical to the
+  historical no-faults engine;
+* engine recovery: crash bills the partial duration, cold-start failure
+  and probe hangs bill their platform time, lost completions bill the
+  full body, dead-letter after max_attempts, per-request timeouts turn
+  in-flight attempts into billed zombies that drain cleanly;
+* faults are logged in ``fault_counts``/``fault_events``, never in the
+  gate's ``instances_terminated`` (the misattribution separation);
+* the circuit breaker's full state machine, clockless and RNG-free;
+* fleet resilience: shed-by-priority under open breakers; hedging ×
+  faults × recovery keeps the fleet-conservation ledger exact across
+  routing policies × seeds (a hedged loser dying must not corrupt it);
+* the sanitizer's fault-ledger checks demonstrably fire on double-count,
+  dead-letter+complete, and unbilled/negative crash billing.
+"""
+import dataclasses
+import math
+import types
+
+import numpy as np
+import pytest
+
+from repro.analysis.sanitizer import (
+    SanitizerError,
+    attach_engine,
+    check_engine_conservation,
+    check_fault_ledger,
+)
+from repro.core.control import FailureDecision
+from repro.core.policy import MinosPolicy
+from repro.faults import (
+    FaultPlan,
+    FaultWindow,
+    RecoveryPolicy,
+    decorrelated_jitter_ms,
+)
+from repro.fleet import (
+    BreakerConfig,
+    BreakerState,
+    CircuitBreaker,
+    FleetRouter,
+    FleetSpec,
+    GreedyRoutingPolicy,
+    ProbabilisticRoutingPolicy,
+    RandomRoutingPolicy,
+    run_fleet_open_loop,
+)
+from repro.sim import (
+    FaaSPlatform,
+    FunctionSpec,
+    PlatformProfile,
+    PoissonProcess,
+    VariationModel,
+)
+from repro.sim.arrivals import QoSClass
+from repro.sim.workload import run_closed_loop
+
+SPEC = FunctionSpec(name="faults-test", prepare_ms=50.0, body_ms=300.0,
+                    benchmark_ms=100.0, contention_rho=0.5)
+VM = VariationModel(sigma=0.15)
+GATE = MinosPolicy(elysium_threshold=130.0)
+PROFILE = PlatformProfile.gcf_gen1()
+
+
+def _no_gate() -> MinosPolicy:
+    return MinosPolicy(elysium_threshold=float("inf"), enabled=False)
+
+
+def _platform(*, fault_plan=None, recovery=None, policy=None, seed=3):
+    return FaaSPlatform(SPEC, VM, policy or _no_gate(), seed=seed,
+                        profile=PROFILE, fault_plan=fault_plan,
+                        recovery=recovery)
+
+
+def _submit_n(plat, n, gap_ms=500.0, **kwargs):
+    """Schedule n spaced submits, run to quiescence, return the engine."""
+    for i in range(n):
+        plat.loop.at(i * gap_ms,
+                     lambda i=i: plat.submit({"i": i}, **kwargs))
+    plat.loop.run_all()
+    return plat
+
+
+def _rng_fingerprint(plan: FaultPlan):
+    s = plan._rng.get_state()
+    return (s[0], s[1].tobytes(), s[2], s[3], s[4])
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan / FaultWindow / RecoveryPolicy semantics
+# ---------------------------------------------------------------------------
+
+
+def test_fault_window_validation_and_half_open_bounds():
+    with pytest.raises(ValueError):
+        FaultWindow(start_ms=0.0, end_ms=10.0, kind="meteor")
+    with pytest.raises(ValueError):
+        FaultWindow(start_ms=10.0, end_ms=10.0)
+    with pytest.raises(ValueError):
+        FaultWindow(start_ms=-1.0, end_ms=10.0)
+    with pytest.raises(ValueError):
+        FaultWindow(start_ms=0.0, end_ms=10.0, kind="brownout", severity=0.5)
+    w = FaultWindow(start_ms=100.0, end_ms=200.0, kind="outage")
+    assert w.active(100.0) and w.active(199.999)
+    assert not w.active(99.999) and not w.active(200.0)
+
+
+def test_fault_plan_rate_validation():
+    for bad in (-0.1, 1.0, 1.5):
+        with pytest.raises(ValueError):
+            FaultPlan(seed=0, crash_rate=bad)
+        with pytest.raises(ValueError):
+            FaultPlan(seed=0, lost_completion_rate=bad)
+    with pytest.raises(ValueError):
+        FaultPlan(seed=0, probe_timeout_ms=0.0)
+
+
+def test_recovery_policy_validation():
+    with pytest.raises(ValueError):
+        RecoveryPolicy(timeout_ms=0.0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(max_attempts=0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(backoff_base_ms=-1.0)
+    with pytest.raises(ValueError):
+        RecoveryPolicy(backoff_base_ms=100.0, backoff_cap_ms=50.0)
+    assert RecoveryPolicy().timeout_ms is None  # timeouts off by default
+
+
+def test_zero_rates_draw_nothing():
+    """The zero-draw contract: every hook on an all-zero plan consumes no
+    RNG state — a disabled fault class cannot shift any other stream."""
+    plan = FaultPlan(seed=42, windows=(
+        FaultWindow(start_ms=0.0, end_ms=50.0, kind="brownout", severity=3.0),
+        FaultWindow(start_ms=60.0, end_ms=70.0, kind="outage"),
+    ))
+    before = _rng_fingerprint(plan)
+    for t in (0.0, 55.0, 65.0, 1e6):
+        assert plan.crash_mid_body(t) is None
+        assert not plan.cold_start_fails(t)
+        assert not plan.probe_times_out(t)
+        assert not plan.throttled(t)
+        assert not plan.completion_lost(t)
+        plan.unavailable(t)
+        plan.speed_multiplier(t)
+    assert _rng_fingerprint(plan) == before
+    # a nonzero rate does draw
+    hot = FaultPlan(seed=42, crash_rate=0.5)
+    before = _rng_fingerprint(hot)
+    hot.crash_mid_body(0.0)
+    assert _rng_fingerprint(hot) != before
+
+
+def test_fault_plan_same_seed_same_schedule():
+    kw = dict(crash_rate=0.3, lost_completion_rate=0.2, cold_fail_rate=0.1)
+    a, b = FaultPlan(seed=7, **kw), FaultPlan(seed=7, **kw)
+    seq_a = [(a.crash_mid_body(t), a.completion_lost(t), a.cold_start_fails(t))
+             for t in range(50)]
+    seq_b = [(b.crash_mid_body(t), b.completion_lost(t), b.cold_start_fails(t))
+             for t in range(50)]
+    assert seq_a == seq_b
+    # crash fractions are valid partial-billing fractions
+    fracs = [f for f, _, _ in seq_a if f is not None]
+    assert fracs and all(0.0 <= f < 1.0 for f in fracs)
+
+
+def test_windows_are_pure_schedule():
+    plan = FaultPlan(seed=0, windows=(
+        FaultWindow(start_ms=1_000.0, end_ms=2_000.0, severity=3.0),
+        FaultWindow(start_ms=1_500.0, end_ms=2_500.0, severity=2.0),
+        FaultWindow(start_ms=5_000.0, end_ms=6_000.0, kind="outage"),
+    ))
+    assert plan.speed_multiplier(500.0) == 1.0
+    assert plan.speed_multiplier(1_200.0) == 3.0
+    assert plan.speed_multiplier(1_700.0) == 6.0  # overlap multiplies
+    assert plan.speed_multiplier(2_200.0) == 2.0
+    assert not plan.unavailable(4_999.0)
+    assert plan.unavailable(5_000.0) and not plan.unavailable(6_000.0)
+
+
+def test_decorrelated_jitter_bounds_and_zero_base():
+    rng = np.random.RandomState(0)
+    before = rng.get_state()[2]
+    assert decorrelated_jitter_ms(rng, 500.0, base_ms=0.0, cap_ms=100.0) == 0.0
+    assert rng.get_state()[2] == before  # base<=0 draws nothing
+    # prev=0 collapses the interval to [base, base]
+    assert decorrelated_jitter_ms(rng, 0.0, base_ms=10.0, cap_ms=100.0) == 10.0
+    draws = [decorrelated_jitter_ms(rng, 400.0, base_ms=10.0, cap_ms=100.0)
+             for _ in range(200)]
+    assert all(10.0 <= d <= 100.0 for d in draws)
+    assert max(draws) == 100.0  # prev*3 >> cap: the cap binds
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: disabled faults change nothing
+# ---------------------------------------------------------------------------
+
+
+def _result_digest(plat, res):
+    return ([(r.t_submitted_ms, r.t_completed_ms, r.download_ms,
+              r.analysis_ms, r.retries, r.served_by_cold,
+              r.instance_speed, r.benchmark_ms) for r in res],
+            plat.cost.total, plat.instances_started,
+            plat.instances_terminated)
+
+
+def test_all_zero_plan_and_idle_recovery_are_bit_identical():
+    """An engine carrying a rate-0 FaultPlan + a RecoveryPolicy must be
+    bit-identical to the historical engine (no plan, no recovery): the
+    fault path performs zero extra RNG draws when nothing fires."""
+    def run(fault_plan, recovery):
+        plat = FaaSPlatform(SPEC, VM, MinosPolicy(elysium_threshold=130.0),
+                            seed=11, profile=PROFILE,
+                            fault_plan=fault_plan, recovery=recovery)
+        res = run_closed_loop(plat, n_vus=5, think_time_ms=500.0,
+                              duration_ms=40_000.0)
+        return plat, res
+
+    base_plat, base_res = run(None, None)
+    armed_plat, armed_res = run(FaultPlan(seed=999), RecoveryPolicy())
+    assert base_res, "run produced no traffic"
+    assert _result_digest(base_plat, base_res) == \
+        _result_digest(armed_plat, armed_res)
+    # the recovery backoff stream was never built: no failures, no draws
+    assert armed_plat._recovery_rng is None
+    assert armed_plat.fault_counts == {} and armed_plat.fault_events == []
+
+
+# ---------------------------------------------------------------------------
+# Engine: fault classes + recovery
+# ---------------------------------------------------------------------------
+
+
+def test_crash_bills_partial_duration_and_retries_to_completion():
+    plat = _platform(fault_plan=FaultPlan(seed=5, crash_rate=0.5))
+    _submit_n(plat, 20)
+    assert plat.fault_counts["crash"] > 0
+    # infinite retries (no RecoveryPolicy): every request completes
+    assert len(plat.results) == 20
+    assert plat.requests_arrived == 20 and plat.requests_dropped == 0
+    crash_bills = [b for _, k, b in plat.fault_events if k == "crash"]
+    assert crash_bills and all(b >= 0.0 for b in crash_bills)
+    assert max(crash_bills) > 0.0  # partial duration actually billed
+    assert plat.cost.total > 0.0
+    # platform faults never land in the gate's termination counter
+    assert plat.instances_terminated == 0
+    check_fault_ledger(plat, where="test-crash")
+
+
+def test_cold_start_failure_billed_and_separated_from_gate():
+    plat = _platform(fault_plan=FaultPlan(seed=2, cold_fail_rate=0.6))
+    _submit_n(plat, 10)
+    assert len(plat.results) == 10
+    n_cold_fail = plat.fault_counts["cold_start"]
+    assert n_cold_fail > 0
+    bills = [b for _, k, b in plat.fault_events if k == "cold_start"]
+    # gen1 bills cold starts: each failed startup costs its cold time
+    assert len(bills) == n_cold_fail and all(b > 0.0 for b in bills)
+    assert plat.instances_terminated == 0
+    # starts split into failed startups + instances that came up (and
+    # then served, possibly many requests each via warm reuse)
+    assert plat.instances_started > n_cold_fail
+
+
+def test_probe_timeout_bills_watchdog_window():
+    plan = FaultPlan(seed=9, probe_timeout_rate=0.6, probe_timeout_ms=1_234.0)
+    plat = _platform(fault_plan=plan, policy=GATE)
+    _submit_n(plat, 12)
+    assert len(plat.results) == 12
+    assert plat.fault_counts["probe_timeout"] > 0
+    bills = [b for _, k, b in plat.fault_events if k == "probe_timeout"]
+    # billed = cold start + the watchdog wait the hung probe burned
+    assert bills and all(b >= 1_234.0 for b in bills)
+
+
+def test_lost_completion_bills_full_body_and_never_duplicates():
+    plat = _platform(fault_plan=FaultPlan(seed=4, lost_completion_rate=0.5))
+    _submit_n(plat, 15)
+    assert plat.fault_counts["lost"] > 0
+    assert len(plat.results) == 15
+    # idempotent re-dispatch: a recovered request completes exactly once
+    assert len({r.invocation_id for r in plat.results}) == 15
+    check_fault_ledger(plat, where="test-lost")
+
+
+def test_throttle_drops_at_submit():
+    plat = _platform(fault_plan=FaultPlan(seed=1, throttle_rate=0.4))
+    accepted = [plat.submit({"i": i}) for i in range(40)]
+    plat.loop.run_all()
+    n_dropped = accepted.count(False)
+    assert 0 < n_dropped < 40
+    assert plat.requests_dropped == n_dropped
+    assert plat.fault_counts["throttle"] == n_dropped
+    assert len(plat.results) == 40 - n_dropped
+
+
+def test_outage_window_rejects_submits_inside_it():
+    plan = FaultPlan(seed=0, windows=(
+        FaultWindow(start_ms=0.0, end_ms=10_000.0, kind="outage"),))
+    plat = _platform(fault_plan=plan)
+    assert plat.submit({"i": 0}) is False  # t=0: inside the outage
+    plat.loop.at(20_000.0, lambda: plat.submit({"i": 1}))
+    plat.loop.run_all()
+    assert plat.fault_counts["outage"] == 1
+    assert plat.requests_dropped == 1 and len(plat.results) == 1
+
+
+def test_dead_letter_after_max_attempts():
+    dead = []
+    plat = _platform(
+        fault_plan=FaultPlan(seed=13, crash_rate=0.9),
+        recovery=RecoveryPolicy(max_attempts=2, backoff_base_ms=0.0,
+                                backoff_cap_ms=0.0))
+    _submit_n(plat, 12, on_dead_letter=dead.append)
+    assert plat.requests_dead_lettered > 0
+    assert plat.requests_dead_lettered == len(plat.dead_letter_events)
+    assert len(dead) == plat.requests_dead_lettered
+    assert all(inv.failed_attempts == 2 for inv in dead)
+    # conservation incl. the terminal state; no overlap with completions
+    assert len(plat.results) + plat.requests_dead_lettered == 12
+    dead_ids = {iid for _, iid, _ in plat.dead_letter_events}
+    assert dead_ids.isdisjoint({r.invocation_id for r in plat.results})
+    check_fault_ledger(plat, where="test-dead-letter")
+
+
+def test_timeout_abandons_attempt_and_zombies_drain():
+    """A per-request timeout turns the in-flight attempt into a billed
+    zombie; its late completion is discarded exactly once and the pool
+    slot is returned — never a double-finish, never a leaked slot."""
+    plat = _platform(
+        recovery=RecoveryPolicy(timeout_ms=200.0, max_attempts=2,
+                                backoff_base_ms=0.0, backoff_cap_ms=0.0))
+    plat.submit({"i": 0})
+    plat.loop.run_all()
+    # both attempts blew the 200ms budget (body alone is 300ms)
+    assert plat.fault_counts["timeout"] == 2
+    assert plat.requests_dead_lettered == 1 and len(plat.results) == 0
+    stale = [e for e in plat.fault_events if e[1] == "stale_completion"]
+    assert len(stale) == 2  # both zombies completed, were discarded once
+    assert plat._zombie_executions == 0
+    assert plat.pool.total_in_flight == 0
+    check_fault_ledger(plat, where="test-timeout")
+
+
+def test_on_failure_controller_decision_is_honored():
+    contexts = []
+
+    def fail_fast(ctx):
+        contexts.append(ctx)
+        return FailureDecision.DEAD_LETTER
+
+    plat = _platform(fault_plan=FaultPlan(seed=21, crash_rate=0.7),
+                     recovery=RecoveryPolicy(max_attempts=10))
+    plat.controller.on_failure = fail_fast
+    _submit_n(plat, 10)
+    assert contexts, "no failures reached the controller"
+    assert plat.requests_dead_lettered == len(contexts)
+    assert len(plat.results) + plat.requests_dead_lettered == 10
+    for ctx in contexts:
+        assert ctx.kind == "crash" and ctx.attempts == 1
+        assert ctx.elapsed_ms >= 0.0 and isinstance(ctx.invocation_id, int)
+
+
+def test_recovery_runs_are_deterministic_per_seed():
+    def run():
+        plat = _platform(
+            fault_plan=FaultPlan(seed=5, crash_rate=0.5,
+                                 lost_completion_rate=0.2),
+            recovery=RecoveryPolicy(max_attempts=4, backoff_base_ms=50.0,
+                                    backoff_cap_ms=500.0),
+            seed=8)
+        _submit_n(plat, 15)
+        return (_result_digest(plat, plat.results), plat.fault_events,
+                plat.requests_dead_lettered)
+
+    a, b = run(), run()
+    assert a == b
+    assert a[1], "no fault events: the determinism claim is vacuous"
+
+
+# ---------------------------------------------------------------------------
+# Circuit breaker state machine
+# ---------------------------------------------------------------------------
+
+
+def test_breaker_config_validation():
+    with pytest.raises(ValueError):
+        BreakerConfig(window=0)
+    with pytest.raises(ValueError):
+        BreakerConfig(failure_threshold=0.0)
+    with pytest.raises(ValueError):
+        BreakerConfig(failure_threshold=1.1)
+    with pytest.raises(ValueError):
+        BreakerConfig(window=4, min_samples=5)
+    with pytest.raises(ValueError):
+        BreakerConfig(open_ms=0.0)
+    with pytest.raises(ValueError):
+        BreakerConfig(trial_requests=0)
+
+
+def test_breaker_min_samples_guard():
+    b = CircuitBreaker(BreakerConfig(window=10, failure_threshold=0.5,
+                                     min_samples=5))
+    for _ in range(4):
+        b.record_failure(0.0)  # 100% failing but under min_samples
+    assert b.state is BreakerState.CLOSED and b.allow(0.0)
+    b.record_failure(0.0)
+    assert b.state is BreakerState.OPEN and b.n_opens == 1
+
+
+def test_breaker_full_cycle_closed_open_halfopen_closed():
+    cfg = BreakerConfig(window=8, failure_threshold=0.5, min_samples=4,
+                        open_ms=1_000.0, trial_requests=2)
+    b = CircuitBreaker(cfg)
+    for _ in range(2):
+        b.record_success(0.0)
+    for _ in range(3):
+        b.record_failure(10.0)  # 3/5 failing >= 0.5 with min_samples met
+    assert b.state is BreakerState.OPEN
+    assert not b.allow(10.0) and not b.allow(1_009.0)
+    # OPEN -> HALF_OPEN lazily once open_ms has elapsed
+    assert b.allow(1_010.0)
+    assert b.state is BreakerState.HALF_OPEN
+    # only trial_requests may route; allow is non-consuming
+    assert b.allow(1_010.0) and b.allow(1_010.0)
+    b.on_route(1_010.0)
+    b.on_route(1_010.0)
+    assert not b.allow(1_010.0)  # trial slots consumed
+    b.record_success(1_200.0)
+    assert b.state is BreakerState.HALF_OPEN
+    b.record_success(1_300.0)
+    assert b.state is BreakerState.CLOSED
+    assert b.failure_rate == 0.0  # recovered fleet is judged fresh
+    assert b.n_opens == 1
+
+
+def test_breaker_halfopen_failure_reopens():
+    cfg = BreakerConfig(window=4, failure_threshold=0.5, min_samples=2,
+                        open_ms=500.0, trial_requests=3)
+    b = CircuitBreaker(cfg)
+    b.record_failure(0.0)
+    b.record_failure(0.0)
+    assert b.state is BreakerState.OPEN
+    assert b.allow(600.0)  # HALF_OPEN now
+    b.on_route(600.0)
+    b.record_failure(650.0)
+    assert b.state is BreakerState.OPEN and b.n_opens == 2
+    assert not b.allow(1_000.0)  # a fresh open_ms window started at 650
+    assert b.allow(1_200.0)
+    # stragglers while OPEN change nothing
+    b2 = CircuitBreaker(cfg)
+    b2.record_failure(0.0)
+    b2.record_failure(0.0)
+    b2.record_success(10.0)
+    b2.record_failure(10.0)
+    assert b2.state is BreakerState.OPEN and b2.n_opens == 1
+
+
+# ---------------------------------------------------------------------------
+# Fleet resilience: shed + hedging x faults conservation
+# ---------------------------------------------------------------------------
+
+
+def _fault_fleets(crash=(0.6, 0.0), recovery=None, caps=(6, 6)):
+    profs = (PlatformProfile.gcf_gen1(), PlatformProfile.gcf_gen2())
+    fleets = []
+    for i, (c, cap) in enumerate(zip(crash, caps)):
+        knobs = dataclasses.replace(profs[i].knobs(), max_instances=cap)
+        factory = None
+        if c > 0.0:
+            factory = lambda seed, c=c: FaultPlan(
+                seed=seed, crash_rate=c, lost_completion_rate=c / 4,
+                cold_fail_rate=c / 6)
+        fleets.append(FleetSpec(
+            name=f"f{i}", spec=SPEC, variation=VM, profile=profs[i],
+            knobs=knobs, policy=MinosPolicy(elysium_threshold=130.0),
+            fault_plan_factory=factory, recovery=recovery))
+    return fleets
+
+
+def test_shed_requires_breaker():
+    with pytest.raises(ValueError):
+        FleetRouter(_fault_fleets(), RandomRoutingPolicy(), seed=0,
+                    shed_when_degraded=True)
+
+
+def test_breaker_discriminates_faulty_fleet_and_sheds_bronze_first():
+    recovery = RecoveryPolicy(max_attempts=3, backoff_base_ms=20.0,
+                              backoff_cap_ms=200.0)
+    router = FleetRouter(
+        _fault_fleets(crash=(0.7, 0.0), recovery=recovery),
+        RandomRoutingPolicy(), seed=0,
+        breaker=BreakerConfig(window=8, failure_threshold=0.5,
+                              min_samples=4, open_ms=10_000.0,
+                              trial_requests=2),
+        shed_when_degraded=True,
+        qos_priorities={"gold": 1, "bronze": 0})
+    qos = (QoSClass("gold", weight=1.0, priority=1, slo_ms=20_000.0),
+           QoSClass("bronze", weight=1.0, priority=0))
+    run = run_fleet_open_loop(
+        router, PoissonProcess(2.0), rng=np.random.RandomState(3),
+        duration_ms=40_000.0, qos_classes=qos, drain_limit_ms=120_000.0)
+    router.check_conservation()
+    # the breaker trips on the crashing fleet, not the healthy one
+    assert router.breakers[0].n_opens >= 1
+    assert router.breakers[1].n_opens == 0
+    assert run.breaker_opens == tuple(b.n_opens for b in router.breakers)
+    # graceful degradation: only the lowest-priority class sheds
+    assert run.n_shed > 0
+    assert set(run.shed_by_class) == {"bronze"}
+    assert run.n_rejected == run.n_shed + run.n_breaker_rejected
+
+
+@pytest.mark.parametrize("policy_factory", [
+    RandomRoutingPolicy,
+    GreedyRoutingPolicy,
+    lambda: ProbabilisticRoutingPolicy(update_interval_ms=1_000.0),
+])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_hedging_with_faults_conserves(policy_factory, seed):
+    """Property: across routing policies x seeds, with crashes, lost
+    completions, dead-letters AND hedging all armed, the fleet ledger
+    stays exact — a hedged loser that crashes or loses its completion
+    must not corrupt conservation."""
+    recovery = RecoveryPolicy(timeout_ms=25_000.0, max_attempts=2,
+                              backoff_base_ms=20.0, backoff_cap_ms=200.0)
+    router = FleetRouter(
+        _fault_fleets(crash=(0.3, 0.25), recovery=recovery),
+        policy_factory(), seed=seed, hedge_after_ms=900.0,
+        breaker=BreakerConfig(window=16, failure_threshold=0.6,
+                              min_samples=6, open_ms=5_000.0))
+    run = run_fleet_open_loop(
+        router, PoissonProcess(2.0), rng=np.random.RandomState(100 + seed),
+        duration_ms=20_000.0, drain_limit_ms=120_000.0)
+    router.check_conservation()  # raises SanitizerError on any imbalance
+    total_faults = sum(sum(e.fault_counts.values()) for e in router.engines)
+    assert total_faults > 0, "fault machinery never engaged"
+    assert run.n_arrived == (run.n_completed + run.n_dropped
+                             + run.n_rejected + run.n_dead_lettered
+                             + run.n_pending_at_end)
+
+
+# ---------------------------------------------------------------------------
+# Sanitizer fault-ledger checks fire on corruption
+# ---------------------------------------------------------------------------
+
+
+def _ledger_stub(*, results_ids=(1, 2), dead=(), events=()):
+    ns = types.SimpleNamespace()
+    ns.fault_events = list(events)
+    ns.dead_letter_events = list(dead)
+    ns.requests_dead_lettered = len(dead)
+    ns.results = [types.SimpleNamespace(invocation_id=i)
+                  for i in results_ids]
+    return ns
+
+
+def test_fault_ledger_clean_stub_passes():
+    check_fault_ledger(_ledger_stub(dead=((5.0, 7, "crash"),),
+                                    events=((1.0, "crash", 42.0),)))
+    # engines without the fault substrate are a no-op, not a crash
+    check_fault_ledger(types.SimpleNamespace(fault_events=None))
+
+
+def test_fault_ledger_catches_unbilled_crash():
+    with pytest.raises(SanitizerError, match="non-finite or negative"):
+        check_fault_ledger(_ledger_stub(events=((1.0, "crash", -1.0),)))
+    with pytest.raises(SanitizerError, match="non-finite or negative"):
+        check_fault_ledger(
+            _ledger_stub(events=((1.0, "crash", float("nan")),)))
+
+
+def test_fault_ledger_catches_counter_divergence():
+    eng = _ledger_stub(dead=((5.0, 7, "crash"),))
+    eng.requests_dead_lettered = 2  # counter bumped without an event
+    with pytest.raises(SanitizerError, match="diverged"):
+        check_fault_ledger(eng)
+
+
+def test_fault_ledger_catches_dead_letter_plus_complete():
+    """A request that both dead-lettered and completed means idempotent
+    re-dispatch broke — proven on a REAL engine run, then corrupted."""
+    plat = _platform(
+        fault_plan=FaultPlan(seed=13, crash_rate=0.9),
+        recovery=RecoveryPolicy(max_attempts=2, backoff_base_ms=0.0,
+                                backoff_cap_ms=0.0))
+    _submit_n(plat, 12)
+    assert plat.results and plat.requests_dead_lettered > 0
+    check_fault_ledger(plat)  # the honest ledger passes
+    plat.dead_letter_events.append(
+        (plat.loop.now, plat.results[0].invocation_id, "crash"))
+    plat.requests_dead_lettered += 1
+    with pytest.raises(SanitizerError, match="dead-lettered and completed"):
+        check_fault_ledger(plat)
+
+
+def test_engine_conservation_catches_double_counted_retry():
+    plat = _platform(fault_plan=FaultPlan(seed=5, crash_rate=0.4))
+    attach_engine(plat)
+    _submit_n(plat, 10)
+    check_engine_conservation(plat)  # honest run balances
+    plat.results.append(plat.results[0])  # a retry finishing twice
+    with pytest.raises(SanitizerError, match="conservation"):
+        check_engine_conservation(plat)
